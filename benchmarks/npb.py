@@ -1,0 +1,267 @@
+"""NPB-style MPI benchmark suite over the CoRD dataplane (paper Fig. 6).
+
+Five kernels with the paper's communication profiles, running on an
+8-rank shard_map mesh with every collective issued through the dataplane
+(bypass / cord / socket modes — socket ≈ IPoIB):
+
+  EP — embarrassingly parallel (one tiny all-reduce at the end)
+  IS — integer bucket sort (histogram psum + all-to-all key exchange;
+       message- AND data-intensive — the paper's worst case for IPoIB)
+  CG — conjugate-gradient iterations on a banded operator (halo
+       ppermute + dot-product psums; few large messages)
+  FT — 2-D pencil FFT (large all-to-all transposes; data-intensive)
+  MG — multigrid V-cycle (halo exchanges at every level; many small
+       messages)
+
+Reported: wall time per mode and runtime relative to bypass.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DataplaneConfig
+from repro.core.dataplane import Dataplane
+
+RANKS = 8
+
+
+def make_mesh():
+    return jax.make_mesh((RANKS,), ("rank",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def make_dp(mode: str, mesh, *, syscall_ns=1500.0, interrupt_us=45.0,
+            socket_ns=4000.0, socket_ns_per_byte=1.1) -> Dataplane:
+    return Dataplane(DataplaneConfig(
+        mode=mode, emulate_costs=True, syscall_cost_ns=syscall_ns,
+        interrupt_cost_us=interrupt_us, socket_stack_ns=socket_ns,
+        socket_ns_per_byte=socket_ns_per_byte),
+        mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def build_ep(mesh, dp: Dataplane, n_per_rank: int = 1 << 18, steps: int = 4):
+    def body(seed):
+        rank = jax.lax.axis_index("rank")
+
+        def one(carry, i):
+            s = carry
+            key = jax.random.fold_in(jax.random.PRNGKey(0), rank * 1000 + i)
+            xy = jax.random.uniform(key, (n_per_rank, 2)) * 2 - 1
+            r2 = (xy ** 2).sum(-1)
+            acc = jnp.where(r2 <= 1.0, 1.0, 0.0).sum()
+            return s + acc, None
+
+        s, _ = jax.lax.scan(one, jnp.zeros(()), jnp.arange(steps))
+        return dp.psum(s, "rank", tag="ep/final")
+
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
+                                 out_specs=P(), check_vma=False))
+
+
+def build_is(mesh, dp: Dataplane, n_per_rank: int = 1 << 14, steps: int = 8):
+    nbuckets = RANKS
+
+    def body(keys):  # (RANKS, n) int32, rank-sharded
+        rank = jax.lax.axis_index("rank")
+        k = keys[0]
+
+        def one(carry, i):
+            k = carry
+            # bucket by top bits → destination rank
+            dest = k // (2**20 // nbuckets)
+            hist = jnp.zeros((nbuckets,), jnp.int32).at[dest].add(1)
+            hist = dp.psum(hist, "rank", tag="is/histogram")
+            # sort locally by destination, then all-to-all exchange
+            order = jnp.argsort(dest)
+            ks = k[order].reshape(nbuckets, -1)
+            recv = dp.all_to_all(ks, "rank", tag="is/exchange",
+                                 split_axis=0, concat_axis=0)
+            k2 = jnp.sort(recv.reshape(-1))
+            # re-randomize for the next iteration (keeps sizes static)
+            key = jax.random.fold_in(jax.random.PRNGKey(1), rank * 77 + i)
+            return jax.random.randint(key, k.shape, 0, 2**20,
+                                      jnp.int32) + (k2[:1] & 0), hist.sum()
+
+        k, _ = jax.lax.scan(one, k, jnp.arange(steps))
+        return k[None]
+
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
+                                 out_specs=P("rank"), check_vma=False))
+
+
+def build_cg(mesh, dp: Dataplane, n_per_rank: int = 1 << 15,
+             iters: int = 12):
+    def halo_matvec(x, rank):
+        # banded operator: 3-point stencil across the rank boundary
+        left = dp.ppermute(x[-1:], "rank",
+                           [(i, (i + 1) % RANKS) for i in range(RANKS)],
+                           tag="cg/halo_r")
+        right = dp.ppermute(x[:1], "rank",
+                            [(i, (i - 1) % RANKS) for i in range(RANKS)],
+                            tag="cg/halo_l")
+        xm = jnp.concatenate([left, x, right])
+        return 2.0 * x - 0.5 * xm[:-2] - 0.5 * xm[2:] + 0.01 * x
+
+    def body(b):  # (RANKS, n) rank-sharded rhs
+        rank = jax.lax.axis_index("rank")
+        b = b[0]
+        x = jnp.zeros_like(b)
+        r = b
+        p = r
+        rs = dp.psum(jnp.dot(r, r), "rank", tag="cg/dot")
+
+        def one(carry, _):
+            x, r, p, rs = carry
+            ap = halo_matvec(p, rank)
+            pap = dp.psum(jnp.dot(p, ap), "rank", tag="cg/dot")
+            alpha = rs / jnp.maximum(pap, 1e-30)
+            x = x + alpha * p
+            r = r - alpha * ap
+            rs_new = dp.psum(jnp.dot(r, r), "rank", tag="cg/dot")
+            p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+            return (x, r, p, rs_new), None
+
+        (x, r, p, rs), _ = jax.lax.scan(one, (x, r, p, rs), None,
+                                        length=iters)
+        return x[None]
+
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
+                                 out_specs=P("rank"), check_vma=False))
+
+
+def build_ft(mesh, dp: Dataplane, n: int = 512, steps: int = 3):
+    # (n, n) grid, rows rank-sharded: FFT rows → transpose (all-to-all)
+    # → FFT rows (= columns of the original) → inverse path.
+    rows = n // RANKS
+
+    def body(grid):  # (RANKS*rows, n) sharded on dim 0
+        g = grid  # local (rows, n)
+
+        def transpose(a):
+            blocks = a.reshape(rows, RANKS, n // RANKS).swapaxes(0, 1)
+            recv = dp.all_to_all(blocks, "rank", tag="ft/transpose",
+                                 split_axis=0, concat_axis=0)
+            return recv.reshape(RANKS, rows, n // RANKS) \
+                .transpose(2, 0, 1).reshape(n // RANKS * RANKS, rows) \
+                .astype(a.dtype)[: rows * RANKS].reshape(rows, -1) \
+                if False else recv.reshape(n, n // RANKS).T
+
+        def one(carry, _):
+            g = carry
+            g = jnp.fft.fft(g, axis=1)
+            gt = transpose(g)
+            gt = jnp.fft.fft(gt, axis=1)
+            g = transpose(gt)
+            g = jnp.fft.ifft(g, axis=1)
+            return (g * (1.0 + 1e-6)).astype(g.dtype), None
+
+        g, _ = jax.lax.scan(one, g.astype(jnp.complex64), None,
+                            length=steps)
+        return jnp.real(g)
+
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
+                                 out_specs=P("rank"), check_vma=False))
+
+
+def build_mg(mesh, dp: Dataplane, n_per_rank: int = 1 << 14,
+             cycles: int = 3, levels: int = 5):
+    def smooth(x, tag):
+        left = dp.ppermute(x[-1:], "rank",
+                           [(i, (i + 1) % RANKS) for i in range(RANKS)],
+                           tag=f"mg/halo_r/{tag}")
+        right = dp.ppermute(x[:1], "rank",
+                            [(i, (i - 1) % RANKS) for i in range(RANKS)],
+                            tag=f"mg/halo_l/{tag}")
+        xm = jnp.concatenate([left, x, right])
+        return 0.25 * xm[:-2] + 0.5 * x + 0.25 * xm[2:]
+
+    def body(x0):
+        x = x0[0]
+
+        def vcycle(carry, _):
+            x = carry
+            grids = []
+            g = x
+            for lev in range(levels):          # restrict
+                g = smooth(g, f"d{lev}")
+                grids.append(g)
+                g = g.reshape(-1, 2).mean(-1)
+            for lev in reversed(range(levels)):  # prolong
+                g = jnp.repeat(g, 2)
+                g = smooth(g + grids[lev], f"u{lev}")
+            return g, None
+
+        x, _ = jax.lax.scan(vcycle, x, None, length=cycles)
+        return x[None]
+
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
+                                 out_specs=P("rank"), check_vma=False))
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+BENCHES = {
+    "EP": (build_ep, lambda: jnp.zeros(())),
+    "IS": (build_is, lambda: jax.random.randint(
+        jax.random.PRNGKey(3), (RANKS, 1 << 14), 0, 2**20, jnp.int32)),
+    "CG": (build_cg, lambda: jax.random.normal(
+        jax.random.PRNGKey(4), (RANKS, 1 << 15))),
+    "FT": (build_ft, lambda: jax.random.normal(
+        jax.random.PRNGKey(5), (512, 512))),
+    "MG": (build_mg, lambda: jax.random.normal(
+        jax.random.PRNGKey(6), (RANKS, 1 << 14))),
+}
+
+
+def _measure(fn, arg, reps=3):
+    jax.block_until_ready(fn(arg))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(arg))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_all(benches=None, modes=("bypass", "cord", "socket")):
+    mesh = make_mesh()
+    rows = []
+    for name, (builder, arg_fn) in BENCHES.items():
+        if benches and name not in benches:
+            continue
+        arg = arg_fn()
+        base = None
+        for mode in modes:
+            dp = make_dp(mode, mesh)
+            fn = builder(mesh, dp)
+            t = _measure(fn, arg)
+            if mode == "bypass":
+                base = t
+            comm = dp.telemetry.by_kind()
+            rows.append({
+                "table": "fig6", "bench": name, "mode": mode,
+                "ms": round(t * 1e3, 2),
+                "rel_runtime": round(t / base, 3),
+                "comm_ops": int(sum(v["ops"] for v in comm.values())),
+                "comm_mib": round(sum(v["bytes"] for v in comm.values())
+                                  / 2**20, 2),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    for row in run_all():
+        print(json.dumps(row))

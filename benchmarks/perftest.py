@@ -1,0 +1,334 @@
+"""perftest reproduction (paper §2 Fig. 1, §5 Figs. 3/4/5).
+
+Measures point-to-point latency and throughput over the verbs layer on a
+2-rank (CPU-device) mesh, with the paper's technique ablations and
+mode matrix:
+
+  fig1  — "remove" one technique at a time: baseline / no zero-copy /
+          no kernel-bypass / no polling; latency + throughput vs msg size.
+  fig3  — latency overhead matrix: {RC,UD} × {Send,Read,Write} ×
+          {BP,CD}→{BP,CD}, relative to BP→BP.
+  fig4  — CoRD/bypass throughput ratio + message rate vs msg size.
+  fig5  — same harness under the "system A" cost preset (higher, noisier
+          mediation costs — the cloud VM of the paper).
+
+Cost scaling (EXPERIMENTS.md §Perftest): the CPU collective baseline is
+~50× slower than real RDMA, so emulated mediation costs are calibrated as
+*ratios to the measured bypass baseline* matching the paper's ratios
+(syscall ≈ 0.15×L0, interrupt ≈ 4×L0); memory-copy costs are real copies
+(no scaling).  The reproduced claims are therefore the relative-overhead
+structure, which is what the paper argues from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DataplaneConfig
+from repro.core import verbs
+from repro.core.dataplane import Dataplane
+
+MSG_SIZES = [64, 1024, 4096, 32_768, 262_144, 1_048_576]
+
+
+def make_mesh2():
+    return jax.make_mesh((2,), ("rank",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _dp(mode: str, *, emulate=True, syscall_ns=400.0, interrupt_us=8.0,
+        socket_ns=3000.0, zero_copy=True, polling=True, kernel_bypass=True,
+        mesh=None) -> Dataplane:
+    return Dataplane(DataplaneConfig(
+        mode=mode, emulate_costs=emulate, syscall_cost_ns=syscall_ns,
+        interrupt_cost_us=interrupt_us, socket_stack_ns=socket_ns,
+        zero_copy=zero_copy, polling=polling, kernel_bypass=kernel_bypass),
+        mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# ping-pong latency
+# ---------------------------------------------------------------------------
+
+def build_pingpong(mesh, dp_client: Dataplane, dp_server: Dataplane,
+                   msg_bytes: int, iters: int, transport="RC", op="send"):
+    cfg = verbs.QPConfig(transport=transport, msg_bytes=msg_bytes, depth=1)
+
+    def body(buf):
+        rank = jax.lax.axis_index("rank")
+
+        def one(carry, _):
+            x = carry
+            if op == "send":
+                # client post (syscall side) → NIC → server completion
+                x = verbs.rank_mediate(x, rank, 0, dp_client)
+                x = jax.lax.ppermute(x, "rank", [(0, 1)])
+                x = verbs._completion(x, rank, 1, dp_server)
+                # reply
+                x = verbs.rank_mediate(x, rank, 1, dp_server)
+                x = jax.lax.ppermute(x, "rank", [(1, 0)])
+                x = verbs._completion(x, rank, 0, dp_client)
+            elif op == "write":
+                # one-sided write: only the active (client) side mediates
+                x = verbs.rank_mediate(x, rank, 0, dp_client)
+                x = jax.lax.ppermute(x, "rank", [(0, 1)])
+                # perftest write latency: server writes back (its own post)
+                x = verbs.rank_mediate(x, rank, 1, dp_server)
+                x = jax.lax.ppermute(x, "rank", [(1, 0)])
+                x = verbs._completion(x, rank, 0, dp_client)
+            else:  # read: client pulls; server CPU never involved
+                x = verbs.rank_mediate(x, rank, 0, dp_client)
+                x = jax.lax.ppermute(x, "rank", [(1, 0)])   # data server→client
+                x = verbs._completion(x, rank, 0, dp_client)
+                x = jax.lax.ppermute(x, "rank", [(0, 1)])   # sync back
+            return x, None
+
+        x, _ = jax.lax.scan(one, buf, None, length=iters)
+        return x
+
+    shard = jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
+                          out_specs=P("rank"), check_vma=False)
+    return jax.jit(shard), cfg
+
+
+def measure(fn, *args, warmup=2, reps=3) -> float:
+    """Best wall time of fn(*args) in seconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def pingpong_latency_us(mesh, dp_c, dp_s, msg_bytes, *, iters=30,
+                        transport="RC", op="send") -> float:
+    fn, _ = build_pingpong(mesh, dp_c, dp_s, msg_bytes, iters,
+                           transport, op)
+    buf = jnp.zeros((2, msg_bytes), jnp.uint8)
+    t = measure(fn, buf)
+    # one-way latency = RTT/2 (paper convention); read = full op time
+    div = iters * (2 if op != "read" else 1)
+    return t / div * 1e6
+
+
+# ---------------------------------------------------------------------------
+# windowed throughput (message rate)
+# ---------------------------------------------------------------------------
+
+def build_throughput(mesh, dp_client: Dataplane, dp_server: Dataplane,
+                     msg_bytes: int, window: int, iters: int,
+                     transport="RC", op="send"):
+    cfg = verbs.QPConfig(transport=transport, msg_bytes=msg_bytes,
+                         depth=window)
+
+    from repro.core import techniques as tech
+
+    def mediation_iters(dp):
+        if not dp.kernel_bypass and dp.cfg.emulate_costs:
+            ns = dp.cfg.syscall_cost_ns
+            if dp.mode == "socket":
+                ns += dp.cfg.socket_stack_ns
+            return tech.iters_for_ns(ns)
+        return 0
+
+    def completion_iters(dp):
+        if not dp.polling and dp.cfg.emulate_costs:
+            return tech.iters_for_ns(dp.cfg.interrupt_cost_us * 1e3)
+        return 0
+
+    post_it = mediation_iters(dp_client)
+    poll_it = completion_iters(dp_server if op == "send" else dp_client)
+    poll_side = 1 if op == "send" else 0
+    dp_poll = dp_server if op == "send" else dp_client
+
+    def body(ring):
+        rank = jax.lax.axis_index("rank")
+
+        def one(carry, _):
+            ring = carry
+            # `window` posts: serial per-message syscalls on the client —
+            # one W×iters scalar chain, barrier-tied to the ring (the
+            # payload is NOT rewritten per post: zero-copy means the NIC
+            # reads the registered ring directly).
+            if post_it:
+                tok = jax.lax.cond(
+                    rank == 0,
+                    lambda: tech.delay_scalar(window * post_it),
+                    lambda: jnp.float32(1.0))
+                ring = tech.tie(ring, tok)
+            if not dp_client.zero_copy:
+                # per-message bounce copy = one staged copy of the ring
+                ring = jax.lax.cond(rank == 0, tech.staged_copy,
+                                    lambda r: r, ring)
+            perm = [(0, 1)] if op != "read" else [(1, 0)]
+            ring = jax.lax.ppermute(ring, "rank", perm)
+            # completions: per-message interrupt/poll on the polling side
+            if poll_it:
+                tok = jax.lax.cond(
+                    rank == poll_side,
+                    lambda: tech.delay_scalar(window * poll_it),
+                    lambda: jnp.float32(1.0))
+                ring = tech.tie(ring, tok)
+            if not dp_poll.zero_copy:
+                ring = jax.lax.cond(rank == poll_side, tech.staged_copy,
+                                    lambda r: r, ring)
+            return ring, None
+
+        ring, _ = jax.lax.scan(one, ring, None, length=iters)
+        return ring
+
+    shard = jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
+                          out_specs=P("rank"), check_vma=False)
+    return jax.jit(shard), cfg
+
+
+def throughput(mesh, dp_c, dp_s, msg_bytes, *, window=64, iters=5,
+               transport="RC", op="send"):
+    """Returns (GBit/s, msgs/s)."""
+    fn, _ = build_throughput(mesh, dp_c, dp_s, msg_bytes, window, iters,
+                             transport, op)
+    ring = jnp.zeros((2, window, msg_bytes), jnp.uint8)
+    t = measure(fn, ring)
+    msgs = window * iters
+    return msgs * msg_bytes * 8 / t / 1e9, msgs / t
+
+
+# ---------------------------------------------------------------------------
+# calibrated cost presets
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CostPreset:
+    name: str
+    syscall_ns: float
+    interrupt_us: float
+    socket_ns: float
+
+
+def calibrate_presets(mesh) -> dict[str, CostPreset]:
+    """Scale emulated costs to the measured bypass baseline so the
+    overhead *ratios* match the paper's systems (see module docstring)."""
+    dp0 = _dp("bypass", emulate=False, mesh=mesh)
+    l0_us = pingpong_latency_us(mesh, dp0, dp0, 4096, iters=30)
+    return {
+        # system L: syscall ≈ 0.15·L0, interrupt ≈ 4·L0
+        "L": CostPreset("L", syscall_ns=0.15 * l0_us * 1e3,
+                        interrupt_us=4.0 * l0_us,
+                        socket_ns=1.2 * l0_us * 1e3),
+        # system A (cloud VM): ~2× higher mediation costs
+        "A": CostPreset("A", syscall_ns=0.3 * l0_us * 1e3,
+                        interrupt_us=6.0 * l0_us,
+                        socket_ns=2.0 * l0_us * 1e3),
+    }, l0_us
+
+
+# ---------------------------------------------------------------------------
+# paper tables
+# ---------------------------------------------------------------------------
+
+def fig1(mesh, preset: CostPreset, sizes=None):
+    """Technique ablation: latency + throughput per message size."""
+    sizes = sizes or MSG_SIZES
+    variants = {
+        "baseline": dict(),
+        "no_zero_copy": dict(zero_copy=False),
+        "no_kernel_bypass": dict(kernel_bypass=False),
+        "no_polling": dict(polling=False),
+    }
+    rows = []
+    for name, kw in variants.items():
+        dp = _dp("bypass", emulate=True, syscall_ns=preset.syscall_ns,
+                 interrupt_us=preset.interrupt_us, mesh=mesh, **kw)
+        for size in sizes:
+            lat = pingpong_latency_us(mesh, dp, dp, size, iters=20)
+            gbps, rate = throughput(mesh, dp, dp, size, window=32, iters=4)
+            rows.append({"table": "fig1", "variant": name, "bytes": size,
+                         "latency_us": round(lat, 2),
+                         "gbps": round(gbps, 3),
+                         "msgs_per_s": round(rate)})
+    return rows
+
+
+def fig3(mesh, preset: CostPreset, msg_bytes=4096, table="fig3"):
+    """Latency overhead matrix vs BP→BP."""
+    rows = []
+    combos = [("BP", "BP"), ("CD", "BP"), ("BP", "CD"), ("CD", "CD")]
+    for transport in ("RC", "UD"):
+        ops = ("send", "read", "write") if transport == "RC" else ("send",)
+        for op in ops:
+            base = None
+            for cm, sm in combos:
+                mk = lambda m: _dp(
+                    "cord" if m == "CD" else "bypass", emulate=True,
+                    syscall_ns=preset.syscall_ns,
+                    interrupt_us=preset.interrupt_us, mesh=mesh)
+                lat = pingpong_latency_us(mesh, mk(cm), mk(sm), msg_bytes,
+                                          iters=20, transport=transport,
+                                          op=op)
+                if (cm, sm) == ("BP", "BP"):
+                    base = lat
+                rows.append({"table": table, "transport": transport,
+                             "op": op, "client": cm, "server": sm,
+                             "latency_us": round(lat, 2),
+                             "overhead_us": round(lat - base, 2)})
+    return rows
+
+
+def fig4(mesh, preset: CostPreset, sizes=None, table="fig4"):
+    """CoRD relative throughput + bypass message rate."""
+    sizes = sizes or MSG_SIZES
+    rows = []
+    for transport in ("RC", "UD"):
+        ops = ("send", "read", "write") if transport == "RC" else ("send",)
+        for op in ops:
+            for size in sizes:
+                if transport == "UD" and size > verbs.UD_MTU:
+                    continue
+                dp_b = _dp("bypass", emulate=True, mesh=mesh)
+                dp_c = _dp("cord", emulate=True,
+                           syscall_ns=preset.syscall_ns,
+                           interrupt_us=preset.interrupt_us, mesh=mesh)
+                g_b, r_b = throughput(mesh, dp_b, dp_b, size, window=32,
+                                      iters=4, transport=transport, op=op)
+                g_c, r_c = throughput(mesh, dp_c, dp_c, size, window=32,
+                                      iters=4, transport=transport, op=op)
+                rows.append({"table": table, "transport": transport,
+                             "op": op, "bytes": size,
+                             "rel_throughput": round(g_c / g_b, 4),
+                             "bypass_msgs_per_s": round(r_b),
+                             "cord_msgs_per_s": round(r_c)})
+    return rows
+
+
+def run_all(fast: bool = False):
+    mesh = make_mesh2()
+    presets, l0 = calibrate_presets(mesh)
+    sizes = [64, 4096, 262_144] if fast else MSG_SIZES
+    rows = [{"table": "calibration", "baseline_latency_us": round(l0, 2),
+             "syscall_ns": round(presets['L'].syscall_ns),
+             "interrupt_us": round(presets['L'].interrupt_us, 1)}]
+    rows += fig1(mesh, presets["L"], sizes)
+    rows += fig3(mesh, presets["L"])
+    rows += fig4(mesh, presets["L"], sizes)
+    # fig5 = system A preset
+    rows += fig3(mesh, presets["A"], table="fig5_lat")
+    rows += fig4(mesh, presets["A"], sizes, table="fig5_bw")
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+    fast = "--fast" in sys.argv
+    for row in run_all(fast=fast):
+        print(json.dumps(row))

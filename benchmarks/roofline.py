@@ -1,0 +1,137 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Reads runs/dryrun/*.json (+ saved compiled HLO) and derives, per
+(arch × shape × mesh):
+
+    compute term    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips × 819 GB/s)
+    collective term = collective_bytes / (chips × 50 GB/s/link ICI)
+
+HLO_FLOPs/bytes come from the loop-aware analyzer (repro.analysis.hlo):
+XLA's cost_analysis counts while bodies once, undercounting scans by ~L×
+(calibrated in EXPERIMENTS.md).  Both raw and corrected values are
+reported.  MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode),
+with N = active params; the ratio MODEL/HLO flags remat & redundancy.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_SUGGEST = {
+    "compute": "increase arithmetic efficiency (larger per-chip batch, "
+               "fuse elementwise into matmuls) or accept — compute-bound is "
+               "the roofline target",
+    "memory": "cut HBM traffic: fuse/remat less, larger blocks (Pallas "
+              "kernels), bf16 residents, avoid padded/replicated buffers",
+    "collective": "reshard to shrink the dominant collective (different "
+                  "TP/EP split), chunk + overlap collectives with compute, "
+                  "or compress the payload",
+}
+
+
+def model_flops(meta: dict) -> float:
+    n = meta.get("active_params") or meta.get("params", 0)
+    kind = meta["kind"]
+    shape_tokens = {"train": 4096 * 256, "prefill": 32768 * 32}
+    if meta["shape"] == "long_500k":
+        tokens = 1
+    elif kind == "decode":
+        tokens = 128
+    else:
+        tokens = shape_tokens.get(kind, 0)
+        if meta["shape"] == "train_4k":
+            tokens = 4096 * 256
+        elif meta["shape"] == "prefill_32k":
+            tokens = 32768 * 32
+    mult = 6 if kind == "train" else 2
+    return mult * n * tokens
+
+
+def analyze_cell(path: str, *, use_hlo: bool = True) -> dict | None:
+    with open(path) as f:
+        rec = json.load(f)
+    if not rec.get("ok"):
+        return None
+    chips = 512 if rec["multi_pod"] else 256
+
+    flops_dev = rec["cost"]["flops_per_device"] or 0
+    bytes_dev = rec["cost"]["bytes_per_device"] or 0
+    coll_dev = rec.get("collective_bytes_total", 0)
+    corrected = None
+    hlo_path = path.replace(".json", ".hlo.gz")
+    if use_hlo and os.path.exists(hlo_path):
+        from repro.analysis.hlo import analyze_file
+        corrected = analyze_file(hlo_path)
+        flops_dev = max(flops_dev, corrected["flops"])
+        bytes_dev = max(bytes_dev, corrected["bytes"])
+        coll_dev = max(coll_dev, corrected["collective_bytes"])
+
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    mf_dev = mf / chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "chips": chips,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_device": mf_dev,
+        "useful_flops_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        "roofline_fraction": (mf_dev / PEAK_FLOPS) / max(terms[dom], 1e-30),
+        "xla_flops_per_device": rec["cost"]["flops_per_device"],
+        "corrected_flops_per_device": flops_dev,
+        "suggestion": _SUGGEST[dom],
+        "lower_s": rec.get("lower_s"), "compile_s": rec.get("compile_s"),
+        "memory_temp_gib": (rec["memory"]["temp_bytes"] or 0) / 2**30,
+        "memory_args_gib": (rec["memory"]["argument_bytes"] or 0) / 2**30,
+        "params_gib_dev": rec.get("params_bytes_per_device", 0) / 2**30,
+        "cache_gib_dev": rec.get("cache_bytes_per_device", 0) / 2**30,
+    }
+
+
+def run_all(dryrun_dir: str = "runs/dryrun", use_hlo: bool = True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        try:
+            row = analyze_cell(path, use_hlo=use_hlo)
+        except Exception as e:  # noqa: BLE001
+            row = {"arch": os.path.basename(path), "error": str(e)[:200]}
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | ERROR {r['error'][:60]} |" + " |" * 7)
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    rows = run_all(use_hlo="--no-hlo" not in sys.argv)
+    print(markdown_table(rows))
+    with open("runs/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)

@@ -1,0 +1,84 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark plus the full
+JSON rows to runs/bench_results.json.
+
+Sections:
+  fig1      — technique-removal latency/throughput (paper Fig. 1)
+  fig3/fig4 — CoRD overhead matrix & relative throughput (Figs. 3-4)
+  fig5      — system-A preset (Fig. 5)
+  fig6      — NPB suite bypass/cord/socket (Fig. 6)
+  kernels   — Pallas kernel correctness + XLA timings
+  roofline  — dry-run roofline terms (if runs/dryrun is populated)
+
+Requires >=8 CPU devices: the driver re-execs itself with the XLA flag if
+needed, so ``PYTHONPATH=src python -m benchmarks.run [--fast]`` suffices.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+    os.execv(sys.executable, [sys.executable, "-m", "benchmarks.run"]
+             + sys.argv[1:])
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    rows = []
+
+    print("# perftest (figs 1, 3, 4, 5)")
+    from benchmarks import perftest
+    rows += perftest.run_all(fast=fast)
+
+    print("# NPB (fig 6)")
+    from benchmarks import npb
+    rows += npb.run_all()
+
+    print("# kernels")
+    from benchmarks import kernels_bench
+    rows += kernels_bench.run_all()
+
+    if os.path.isdir("runs/dryrun") and os.listdir("runs/dryrun"):
+        print("# roofline (from dry-run artifacts)")
+        from benchmarks import roofline
+        roof = roofline.run_all(use_hlo=not fast)
+        rows += [{"table": "roofline", **r} for r in roof]
+
+    os.makedirs("runs", exist_ok=True)
+    with open("runs/bench_results.json", "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+    # CSV summary: name,us_per_call,derived
+    print("name,us_per_call,derived")
+    for r in rows:
+        tab = r.get("table", "?")
+        if tab == "fig1":
+            print(f"fig1/{r['variant']}/{r['bytes']}B,{r['latency_us']},"
+                  f"gbps={r['gbps']}")
+        elif tab in ("fig3", "fig5_lat"):
+            print(f"{tab}/{r['transport']}/{r['op']}/{r['client']}-"
+                  f"{r['server']},{r['latency_us']},"
+                  f"overhead_us={r['overhead_us']}")
+        elif tab in ("fig4", "fig5_bw"):
+            print(f"{tab}/{r['transport']}/{r['op']}/{r['bytes']}B,,"
+                  f"rel_tput={r['rel_throughput']}")
+        elif tab == "fig6":
+            print(f"fig6/{r['bench']}/{r['mode']},{r['ms'] * 1e3},"
+                  f"rel={r['rel_runtime']}")
+        elif tab == "kernels":
+            us = r.get("xla_flash_us") or r.get("xla_ref_us") or ""
+            print(f"kernels/{r['name']},{us},"
+                  f"err={r['pallas_vs_ref_err']:.2e}")
+        elif tab == "roofline" and "dominant" in r:
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},,"
+                  f"dom={r['dominant']},frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

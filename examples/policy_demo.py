@@ -1,0 +1,69 @@
+"""CoRD policies in action: telemetry, quotas and memory-region security
+enforced on a live dataplane — the OS-level control the paper regains.
+
+    PYTHONPATH=src python examples/policy_demo.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DataplaneConfig
+from repro.core import Dataplane, PolicyViolation
+from repro.core.policies import QuotaPolicy, SecurityPolicy, TelemetryPolicy
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    dp = Dataplane(
+        DataplaneConfig(mode="cord"), mesh=mesh, tenant="team-a",
+        policies=[TelemetryPolicy(), SecurityPolicy(),
+                  QuotaPolicy(limits={"team-a": 4096})])
+
+    grads = jnp.ones((512,))
+    dp.reg_mr("grads", jnp.ones(64))    # register the per-shard region
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    def sync(g):
+        return dp.psum(g, "data", tag="grads/allreduce",
+                       mr="grads" if g.shape == (64,) else None)
+
+    out = jax.jit(sync)(grads)
+    print("allreduce under full policy stack ok:", float(out[0]))
+    print(dp.telemetry.report())
+
+    # quota exhaustion: enforcement is at op-issue (trace) time — issue
+    # progressively larger programs until the tenant's byte budget runs out
+    try:
+        for i in range(1, 32):
+            g = jnp.ones((512 * i,))
+            dp.reg_mr("grads", jnp.ones(64 * i))
+            jax.jit(sync)(g)
+        print("quota never hit (unexpected)")
+    except PolicyViolation as e:
+        print(f"\nquota enforced: {e}")
+
+    # security: unregistered traffic is refused
+    dp2 = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh,
+                    policies=[SecurityPolicy(strict=True)])
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    def rogue(g):
+        return dp2.psum(g, "data", tag="rogue")
+
+    try:
+        jax.jit(rogue)(grads)
+        print("rogue op allowed (unexpected)")
+    except PolicyViolation as e:
+        print(f"strict security refused anonymous op: {e}")
+
+
+if __name__ == "__main__":
+    main()

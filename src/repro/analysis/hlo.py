@@ -1,0 +1,229 @@
+"""Loop-aware analysis of post-SPMD compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — for a
+scan-over-layers transformer that undercounts FLOPs by ~the layer count
+(verified in EXPERIMENTS.md §Dry-run calibration).  This module re-derives
+the roofline raw terms by walking the HLO call graph with multipliers:
+
+  * ``while`` bodies × their ``known_trip_count`` (XLA annotates scans),
+  * ``fusion`` / ``call`` / ``conditional`` computations × 1,
+
+counting per computation:
+  * FLOPs: ``dot`` (2·result·contracted) and ``convolution``; elementwise
+    ops at 1 flop/element for fusion roots (dominated by dots anyway),
+  * bytes: operands + result of materialized ops (fusion boundaries, dots,
+    copies, DUS/DS, converts at top level) — fusion-internal virtual
+    intermediates are not counted, matching buffer-assignment semantics,
+  * collective bytes: operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (× loop multiplier).
+
+All numbers are PER DEVICE (the compiled module is the per-partition
+program).
+"""
+
+from __future__ import annotations
+
+import gzip
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DT_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+             "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+             "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+             "c128": 16, "token": 0, "u4": 1, "s4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type is either a tuple "(...)" (may contain /*index=N*/ comments,
+# never nested parens) or a single "dtype[shape]{layout}"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]"
+    r"(?:\{[^}]*\})?))\s*([\w\-]+)\((.*)$")
+# header: "%name (params...) -> result {"; params may contain nested
+# parens (tuple types), so only anchor on the name + "(" prefix.
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+# called computations always print with a % prefix; requiring it keeps the
+# match from swallowing the following ", body=..." attribute.
+_CALLED_RE = re.compile(r"(?:body|condition|calls|to_apply|branch_computations)="
+                        r"\{?%([\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+
+_COLLECTIVES = {"all-gather": "all_gather", "all-reduce": "all_reduce",
+                "reduce-scatter": "reduce_scatter", "all-to-all": "all_to_all",
+                "collective-permute": "collective_permute"}
+
+# ops whose results/operands are materialized buffers at top level
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _shape_elems_bytes(txt: str):
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DT_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclass
+class Instr:
+    name: str
+    result_txt: str
+    opcode: str
+    rest: str
+    operands: list[str] = field(default_factory=list)
+
+
+def parse_module(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        if line.startswith(("%", "ENTRY")) and line.rstrip().endswith("{") \
+                and "->" in line:
+            m = _COMP_RE.match(line)
+            if m:
+                comps[m.group(1)] = cur = []
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_txt, opcode, rest = m.groups()
+        ops = re.findall(r"%([\w.\-]+)", rest.split(")", 1)[0])
+        cur.append(Instr(name, result_txt, opcode.replace("-start", ""),
+                         rest, ops))
+    return comps
+
+
+def _multipliers(comps: dict[str, list[Instr]], entry: str) -> dict[str, float]:
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # iterate until fixpoint (call graph is a DAG; simple BFS suffices)
+    work = [entry]
+    while work:
+        cname = work.pop()
+        m = mult[cname]
+        for ins in comps.get(cname, []):
+            called = _CALLED_RE.findall(ins.rest)
+            if not called:
+                continue
+            trip = 1.0
+            if ins.opcode == "while":
+                tm = _TRIP_RE.search(ins.rest)
+                trip = float(tm.group(1)) if tm else 1.0
+            for group in called:
+                for sub in re.split(r",\s*%", group):
+                    sub = sub.strip()
+                    if sub in comps:
+                        mult[sub] += m * trip
+                        work.append(sub)
+    return dict(mult)
+
+
+def _symbols(instrs: list[Instr]) -> dict[str, str]:
+    return {i.name: i.result_txt for i in instrs}
+
+
+def _dot_flops(ins: Instr, syms: dict[str, str]) -> float:
+    res_elems, _ = _shape_elems_bytes(ins.result_txt)
+    lhs_shape = syms.get(ins.operands[0], "") if ins.operands else ""
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contract = 1
+    if m and lhs_shape:
+        dims_m = _SHAPE_RE.search(lhs_shape)
+        if dims_m:
+            dims = [int(d) for d in dims_m.group(2).split(",") if d]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * res_elems * contract
+
+
+def analyze(text: str, entry: str | None = None) -> dict:
+    comps = parse_module(text)
+    if not comps:
+        return {"flops": 0, "bytes": 0, "collectives": {}}
+    if entry is None:
+        # ENTRY computation: the one containing the module's root — take the
+        # last parsed ENTRY line match; fall back to the largest computation.
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        entry = m.group(1) if m else max(comps, key=lambda c: len(comps[c]))
+    mult = _multipliers(comps, entry)
+
+    # fusion-internal computations: bytes not counted (virtual), dots counted
+    fused: set[str] = set()
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode == "fusion":
+                for g in _CALLED_RE.findall(ins.rest):
+                    for sub in re.split(r",\s*%", g):
+                        fused.add(sub.strip())
+
+    flops = 0.0
+    bytes_ = 0.0
+    transcendentals = 0.0
+    coll: dict[str, dict[str, float]] = {}
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        syms = _symbols(instrs)
+        for ins in instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, syms)
+            elif ins.opcode in ("convolution",):
+                # approximate: 2 * result * (kernel elems / output channels)
+                res_elems, _ = _shape_elems_bytes(ins.result_txt)
+                k_elems, _ = _shape_elems_bytes(syms.get(
+                    ins.operands[1], "")) if len(ins.operands) > 1 else (1, 0)
+                flops += m * 2.0 * res_elems * max(k_elems, 1) ** 0.5
+            elif ins.opcode in ("exponential", "tanh", "log", "rsqrt",
+                                "power", "sine", "cosine"):
+                res_elems, _ = _shape_elems_bytes(ins.result_txt)
+                transcendentals += m * res_elems
+
+            base = _COLLECTIVES.get(ins.opcode.replace("-done", ""))
+            if base and not ins.opcode.endswith("-done"):
+                _, ob = _shape_elems_bytes(
+                    " ".join(syms.get(o, "") for o in ins.operands))
+                if ob == 0:
+                    _, ob = _shape_elems_bytes(ins.result_txt)
+                    if base == "all_gather":
+                        ob = 0  # result counts gathered size; skip if unknown
+                d = coll.setdefault(base, {"ops": 0.0, "bytes": 0.0})
+                d["ops"] += m
+                d["bytes"] += m * ob
+
+            if cname not in fused and ins.opcode not in _FREE_OPS:
+                _, rb = _shape_elems_bytes(ins.result_txt)
+                _, ob = _shape_elems_bytes(
+                    " ".join(syms.get(o, "") for o in ins.operands))
+                bytes_ += m * (rb + ob)
+
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "transcendentals": transcendentals,
+        "collectives": coll,
+        "collective_bytes": sum(v["bytes"] for v in coll.values()),
+        "n_computations": len(comps),
+    }
+
+
+def analyze_file(path: str) -> dict:
+    op = gzip.open if path.endswith(".gz") else open
+    with op(path, "rt") as f:
+        return analyze(f.read())
+
+
+__all__ = ["analyze", "analyze_file", "parse_module"]

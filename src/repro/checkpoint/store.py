@@ -1,0 +1,115 @@
+"""Sharded checkpointing: atomic, async-capable, mesh-agnostic.
+
+Checkpoints store each pytree leaf as a full (unsharded) ``.npy`` plus a
+JSON manifest — so a checkpoint written on one mesh restores onto any
+other (elastic re-shard on load = runtime/elastic.py).  Writes go to a
+temp dir renamed into place (atomic), an async thread can own the write,
+and ``keep_last`` prunes history.  ``latest_step`` + ``restore`` give the
+auto-resume path used by the fault-tolerant runner.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_leaves_with_path(tree)]
+    return leaves, paths, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep_last: int = 3,
+         blocking: bool = True) -> threading.Thread | None:
+    """Write checkpoint ``step``. Returns the writer thread if async."""
+    leaves, paths, _ = _flatten(tree)
+    # materialize on host first (cheap vs. the write; keeps jax arrays out
+    # of the writer thread)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    def write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (arr, path) in enumerate(zip(host_leaves, paths)):
+            fn = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"].append({"path": path, "file": fn,
+                                       "shape": list(arr.shape),
+                                       "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _prune(ckpt_dir, keep_last)
+
+    if blocking:
+        write()
+        return None
+    th = threading.Thread(target=write, daemon=True)
+    th.start()
+    return th
+
+
+def _prune(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            full = os.path.join(ckpt_dir, name, "manifest.json")
+            if os.path.exists(full):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, *, shardings=None):
+    """Restore checkpoint into the structure of ``like``.
+
+    ``shardings``: optional pytree of NamedSharding — leaves are placed
+    with those shardings (elastic re-mesh on load)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, _, treedef = _flatten(like)
+    if len(manifest["leaves"]) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"expected {len(leaves)}")
+    arrays = []
+    sh_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None) if shardings is not None
+        else [None] * len(leaves))
+    for rec, ref, sh in zip(manifest["leaves"], leaves, sh_leaves):
+        arr = np.load(os.path.join(d, rec["file"]))
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {rec['path']}: checkpoint shape "
+                             f"{arr.shape} != expected {tuple(ref.shape)}")
+        arrays.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+__all__ = ["save", "restore", "latest_step", "all_steps"]

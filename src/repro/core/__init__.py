@@ -1,0 +1,30 @@
+"""CoRD core — the paper's primary contribution in JAX.
+
+The Converged Dataplane (`Dataplane`) is the narrow waist through which
+every communication operation in the framework flows, with three modes
+(bypass / cord / socket), CoRD policies (telemetry, security/MR, quota,
+QoS), technique toggles for the paper's Fig.-1 ablations, chunked
+collective scheduling, and an ibverbs-style point-to-point layer for the
+perftest reproduction.
+"""
+
+from repro.core.dataplane import Dataplane, make_dataplane
+from repro.core.mr import MemoryRegion, MRError, MRRegistry
+from repro.core.policies import (
+    Policy,
+    PolicyContext,
+    PolicyViolation,
+    QoSPolicy,
+    QuotaPolicy,
+    SecurityPolicy,
+    TelemetryPolicy,
+)
+from repro.core.telemetry import OpRecord, Telemetry
+
+__all__ = [
+    "Dataplane", "make_dataplane",
+    "MemoryRegion", "MRError", "MRRegistry",
+    "Policy", "PolicyContext", "PolicyViolation",
+    "QoSPolicy", "QuotaPolicy", "SecurityPolicy", "TelemetryPolicy",
+    "OpRecord", "Telemetry",
+]

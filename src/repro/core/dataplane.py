@@ -1,0 +1,297 @@
+"""The Converged Dataplane — the paper's contribution, adapted to JAX/TPU.
+
+Every communication edge in the framework is issued through a
+:class:`Dataplane`:
+
+* under **pjit/GSPMD** the model code calls :meth:`constrain` with logical
+  axis names; the dataplane resolves them against its sharding rules and
+  emits ``with_sharding_constraint`` — the compiler materializes the
+  collectives.  The dataplane is the single control point that sees (and
+  records, and may refuse) every one of these edges.
+* inside **shard_map** (explicit paths: gradient sync, MoE dispatch option,
+  perftest/NPB benchmarks, the verbs layer) the model code calls
+  :meth:`psum` / :meth:`all_gather` / :meth:`reduce_scatter` /
+  :meth:`all_to_all` / :meth:`ppermute`, which lower to ``jax.lax``
+  collectives *after* passing the mediation layer.
+
+Three modes (paper Fig. 2):
+
+====== ============= ========= ============ =========================
+mode   kernel-bypass zero-copy polling      policies enforced
+====== ============= ========= ============ =========================
+bypass yes           yes       yes          none (OS has no control)
+cord   **no**        yes       yes          all configured policies
+socket **no**        **no**    **no**       all + heavy stack cost
+====== ============= ========= ============ =========================
+
+Technique toggles in :class:`DataplaneConfig` override the mode presets so
+that the paper's Fig. 1 ablations ("remove one technique at a time") can be
+reproduced exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DataplaneConfig
+from repro.core import techniques as tech
+from repro.core import telemetry as tl
+from repro.core.mr import MRRegistry
+from repro.core.policies import (
+    Policy,
+    PolicyContext,
+    PolicyViolation,
+    QoSPolicy,
+    QuotaPolicy,
+    SecurityPolicy,
+    TelemetryPolicy,
+)
+
+# ---------------------------------------------------------------------------
+# Mode presets: (kernel_bypass, zero_copy, polling, enforce_policies)
+# ---------------------------------------------------------------------------
+
+_MODE_PRESETS = {
+    "bypass": dict(kernel_bypass=True, zero_copy=True, polling=True, enforce=False),
+    "cord": dict(kernel_bypass=False, zero_copy=True, polling=True, enforce=True),
+    "socket": dict(kernel_bypass=False, zero_copy=False, polling=False, enforce=True),
+}
+
+_POLICY_FACTORIES: dict[str, Callable[[], Policy]] = {
+    "telemetry": TelemetryPolicy,
+    "security": SecurityPolicy,
+    "quota": QuotaPolicy,
+    "qos": QoSPolicy,
+}
+
+
+class Dataplane:
+    """The narrow waist: all framework communication flows through here."""
+
+    def __init__(
+        self,
+        cfg: DataplaneConfig | None = None,
+        mesh: Mesh | None = None,
+        rules: dict[str, Any] | None = None,
+        tenant: str = "default",
+        policies: Sequence[Policy] | None = None,
+    ) -> None:
+        self.cfg = cfg or DataplaneConfig()
+        self.mesh = mesh
+        self.rules = dict(rules or {})
+        self.tenant = tenant
+        if self.cfg.mode not in _MODE_PRESETS:
+            raise ValueError(f"unknown dataplane mode {self.cfg.mode!r}")
+        preset = _MODE_PRESETS[self.cfg.mode]
+        # Effective techniques: mode preset AND config toggle, so the fig-1
+        # ablations can "remove" a technique from any mode.
+        self.kernel_bypass = preset["kernel_bypass"] and self.cfg.kernel_bypass
+        self.zero_copy = preset["zero_copy"] and self.cfg.zero_copy
+        self.polling = preset["polling"] and self.cfg.polling
+        self.enforce = preset["enforce"]
+        if policies is not None:
+            self.policies = list(policies)
+        else:
+            self.policies = [_POLICY_FACTORIES[p]() for p in self.cfg.policies]
+        self._telemetry = next(
+            (p.telemetry for p in self.policies if isinstance(p, TelemetryPolicy)),
+            tl.Telemetry(enabled=False))
+        self._security = next(
+            (p for p in self.policies if isinstance(p, SecurityPolicy)), None)
+        self.registry: MRRegistry = (self._security.registry
+                                     if self._security else MRRegistry())
+        if self.cfg.emulate_costs:
+            # calibrate the delay primitive NOW (eagerly) — calling it for
+            # the first time under a trace would stage the probe jit.
+            tech.calibrate()
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    @property
+    def telemetry(self) -> tl.Telemetry:
+        return self._telemetry
+
+    @property
+    def mode(self) -> str:
+        return self.cfg.mode
+
+    def with_mode(self, mode: str) -> "Dataplane":
+        return Dataplane(dataclasses.replace(self.cfg, mode=mode),
+                         mesh=self.mesh, rules=self.rules, tenant=self.tenant)
+
+    def reset(self) -> None:
+        for p in self.policies:
+            p.reset()
+
+    # ------------------------------------------------------------------
+    # mediation core
+    # ------------------------------------------------------------------
+    def _policy_pass(self, rec: tl.OpRecord, operand, mr_name: str | None) -> None:
+        """Trace-time policy enforcement (the kernel looking at the WQE)."""
+        if not self.enforce:
+            return
+        ctx = PolicyContext(rec=rec, tenant=self.tenant, mr_name=mr_name,
+                            operand=operand)
+        for p in self.policies:
+            p.on_op(ctx)    # raises PolicyViolation to refuse the op
+
+    def _mediate_in(self, x: jax.Array, rec: tl.OpRecord,
+                    state: jax.Array | None):
+        """Run-time mediation on the send side."""
+        if not self.kernel_bypass:
+            if state is not None:
+                state = tl.counters_bump(state, ops=1, bytes=rec.bytes)
+            if self.cfg.emulate_costs:
+                ns = self.cfg.syscall_cost_ns
+                if self.cfg.mode == "socket":
+                    ns += self.cfg.socket_stack_ns
+                    ns += rec.bytes * self.cfg.socket_ns_per_byte
+                x = tech.delay_chain(x, tech.iters_for_ns(ns))
+        if not self.zero_copy:
+            x = tech.staged_copy(x, copies=1)
+        return x, state
+
+    def _mediate_out(self, x: jax.Array, rec: tl.OpRecord,
+                     state: jax.Array | None):
+        """Run-time mediation on the completion side."""
+        if not self.zero_copy:
+            x = tech.staged_copy(x, copies=1)
+        if not self.polling and self.cfg.emulate_costs:
+            # wait-for-event: interrupt delivery + wakeup instead of polling
+            x = tech.delay_chain(
+                x, tech.iters_for_ns(self.cfg.interrupt_cost_us * 1e3))
+        return x, state
+
+    def _record(self, kind: str, tag: str, x, axes, qos: str = "default",
+                mr: str | None = None, count: int = 1) -> tl.OpRecord:
+        shape, dtype = tl.describe(x)
+        rec = tl.OpRecord(kind=kind, tag=tag, bytes=tl.nbytes(x),
+                          axes=tuple(axes) if isinstance(axes, (tuple, list)) else (axes,),
+                          shape=shape, dtype=dtype, mode=self.cfg.mode,
+                          qos=qos, count=count)
+        self._policy_pass(rec, x, mr)
+        if self.cfg.mode == "bypass":
+            # The OS cannot see bypassed traffic — but we still let the
+            # (trace-time-only) telemetry record it when explicitly enabled
+            # for benchmarking, mirroring NIC counters.
+            pass
+        return rec
+
+    # ------------------------------------------------------------------
+    # GSPMD-mode mediation: logical sharding constraints
+    # ------------------------------------------------------------------
+    def spec(self, names: Sequence[str | None | tuple]) -> P:
+        """Resolve logical axis names to a PartitionSpec via the rules.
+
+        A mesh axis may appear at most once in a spec — later duplicates
+        are dropped (first occurrence wins)."""
+        out = []
+        used: set[str] = set()
+
+        def take(axes):
+            kept = [a for a in axes if a not in used]
+            used.update(kept)
+            return kept
+
+        for n in names:
+            if n is None:
+                out.append(None)
+                continue
+            subs = n if isinstance(n, (tuple, list)) else [n]
+            merged: list[str] = []
+            for sub in subs:
+                r = self.rules.get(sub)
+                if r is None:
+                    continue
+                merged.extend(take(list(r) if isinstance(r, (tuple, list))
+                                  else [r]))
+            out.append(tuple(merged) if len(merged) > 1
+                       else (merged[0] if merged else None))
+        return P(*out)
+
+    def sharding(self, names: Sequence[str | None | tuple]) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(names))
+
+    def constrain(self, x: jax.Array, names: Sequence[str | None | tuple],
+                  tag: str = "constraint") -> jax.Array:
+        """Issue a sharding edge through the dataplane (GSPMD mode)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(names)
+        self._record("constraint", tag, x, tuple(a for a in jax.tree.leaves(tuple(spec)) if a))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # ------------------------------------------------------------------
+    # Explicit collectives (inside shard_map)
+    # ------------------------------------------------------------------
+    def psum(self, x, axis, tag: str = "psum", mr: str | None = None,
+             state: jax.Array | None = None, qos: str = "default"):
+        rec = self._record("all_reduce", tag, x, axis, qos, mr)
+        x, state = self._mediate_in(x, rec, state)
+        out = jax.lax.psum(x, axis)
+        out, state = self._mediate_out(out, rec, state)
+        return (out, state) if state is not None else out
+
+    def all_gather(self, x, axis, tag: str = "all_gather", *, gather_axis: int = 0,
+                   tiled: bool = False, mr: str | None = None,
+                   state: jax.Array | None = None, qos: str = "default"):
+        rec = self._record("all_gather", tag, x, axis, qos, mr)
+        x, state = self._mediate_in(x, rec, state)
+        out = jax.lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
+        out, state = self._mediate_out(out, rec, state)
+        return (out, state) if state is not None else out
+
+    def reduce_scatter(self, x, axis, tag: str = "reduce_scatter", *,
+                       scatter_axis: int = 0, mr: str | None = None,
+                       state: jax.Array | None = None, qos: str = "default"):
+        rec = self._record("reduce_scatter", tag, x, axis, qos, mr)
+        x, state = self._mediate_in(x, rec, state)
+        out = jax.lax.psum_scatter(x, axis, scatter_dimension=scatter_axis,
+                                   tiled=True)
+        out, state = self._mediate_out(out, rec, state)
+        return (out, state) if state is not None else out
+
+    def all_to_all(self, x, axis, tag: str = "all_to_all", *, split_axis: int = 0,
+                   concat_axis: int = 0, mr: str | None = None,
+                   state: jax.Array | None = None, qos: str = "default"):
+        rec = self._record("all_to_all", tag, x, axis, qos, mr)
+        x, state = self._mediate_in(x, rec, state)
+        out = jax.lax.all_to_all(x, axis, split_axis=split_axis,
+                                 concat_axis=concat_axis, tiled=True)
+        out, state = self._mediate_out(out, rec, state)
+        return (out, state) if state is not None else out
+
+    def ppermute(self, x, axis, perm, tag: str = "ppermute",
+                 mr: str | None = None, state: jax.Array | None = None,
+                 qos: str = "default"):
+        rec = self._record("collective_permute", tag, x, axis, qos, mr)
+        x, state = self._mediate_in(x, rec, state)
+        out = jax.lax.ppermute(x, axis, perm)
+        out, state = self._mediate_out(out, rec, state)
+        return (out, state) if state is not None else out
+
+    # ------------------------------------------------------------------
+    # control plane
+    # ------------------------------------------------------------------
+    def reg_mr(self, name: str, x, tenant: str | None = None):
+        """Control-plane memory registration (ioctl path in the paper)."""
+        return self.registry.reg_mr(name, x, tenant or self.tenant)
+
+    def reg_pytree(self, prefix: str, tree, tenant: str | None = None) -> int:
+        return self.registry.reg_pytree(prefix, tree, tenant or self.tenant)
+
+
+def make_dataplane(cfg: DataplaneConfig | None = None, mesh: Mesh | None = None,
+                   rules: dict[str, Any] | None = None, **kw) -> Dataplane:
+    return Dataplane(cfg, mesh=mesh, rules=rules, **kw)
+
+
+__all__ = ["Dataplane", "make_dataplane", "PolicyViolation"]

@@ -1,0 +1,82 @@
+"""Memory-region registration — the security half of CoRD.
+
+The paper (§4): "If the application passes an invalid address, the NIC
+returns an error but does not access any memory that was not explicitly
+provided to the application."  On TPU there are no raw pointers; the
+analogue is that the dataplane only moves arrays belonging to *registered
+memory regions*.  Registration is a control-plane operation (goes through
+``ioctl`` in the paper → goes through the host-side registry here), and in
+``cord``/``socket`` mode every dataplane op validates its operand against
+the registry (shape/dtype signature match).  ``bypass`` mode skips the
+check — exactly the uncontrolled behaviour the paper criticizes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+class MRError(Exception):
+    """Dataplane operand does not belong to a registered memory region."""
+
+
+@dataclass(frozen=True)
+class MemoryRegion:
+    name: str
+    shape: tuple[int, ...]
+    dtype: str
+    lkey: int                   # local key, as in ibverbs
+    tenant: str = "default"
+
+    def matches(self, x) -> bool:
+        return tuple(x.shape) == self.shape and str(jnp.dtype(x.dtype).name) == self.dtype
+
+
+class MRRegistry:
+    """Control-plane registry of communicable memory regions."""
+
+    def __init__(self) -> None:
+        self._regions: dict[str, MemoryRegion] = {}
+        self._next_key = 0x1000
+
+    def reg_mr(self, name: str, x, tenant: str = "default") -> MemoryRegion:
+        """Register an array (or ShapeDtypeStruct) as a memory region."""
+        self._next_key += 1
+        mr = MemoryRegion(name=name, shape=tuple(x.shape),
+                          dtype=str(jnp.dtype(x.dtype).name),
+                          lkey=self._next_key, tenant=tenant)
+        self._regions[name] = mr
+        return mr
+
+    def reg_pytree(self, prefix: str, tree, tenant: str = "default") -> int:
+        """Register every leaf of a pytree (e.g. the full gradient tree)."""
+        leaves = jax.tree_util.tree_leaves_with_path(tree)
+        for path, leaf in leaves:
+            self.reg_mr(prefix + jax.tree_util.keystr(path), leaf, tenant)
+        return len(leaves)
+
+    def dereg_mr(self, name: str) -> None:
+        self._regions.pop(name, None)
+
+    def lookup(self, name: str) -> MemoryRegion | None:
+        return self._regions.get(name)
+
+    def check(self, name: str, x) -> MemoryRegion:
+        """Validate that ``x`` matches registered region ``name``."""
+        mr = self._regions.get(name)
+        if mr is None:
+            raise MRError(f"dataplane op on unregistered memory region {name!r}")
+        if not mr.matches(x):
+            raise MRError(
+                f"MR {name!r} signature mismatch: registered "
+                f"{mr.shape}/{mr.dtype}, got {tuple(x.shape)}/{jnp.dtype(x.dtype).name}")
+        return mr
+
+    def __len__(self) -> int:
+        return len(self._regions)
+
+
+__all__ = ["MemoryRegion", "MRRegistry", "MRError"]

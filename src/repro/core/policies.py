@@ -1,0 +1,144 @@
+"""CoRD policies (paper §3): "lightweight, non-blocking policies ...
+powerful enough to implement QoS, security, and isolation".
+
+A policy sees every dataplane op at issue time and may
+  * account it        (TelemetryPolicy — observability)
+  * validate it       (SecurityPolicy — registered memory regions only)
+  * meter it          (QuotaPolicy — per-tenant byte budgets)
+  * schedule it       (QoSPolicy — chunk issue order by priority class)
+
+Policies must be *non-blocking* and constant-cost per op — the paper's
+requirement that keeps CoRD fast.  Trace-time work (validation, accounting
+into the host-side Telemetry) is free at run time; in-graph work (counter
+bumps, the mediation delay) is the measured per-op crossing cost.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.core import telemetry as tl
+from repro.core.mr import MRError, MRRegistry
+
+
+class PolicyViolation(Exception):
+    pass
+
+
+@dataclass
+class PolicyContext:
+    """Everything a policy may consult when an op is issued."""
+    rec: tl.OpRecord
+    tenant: str = "default"
+    mr_name: str | None = None
+    operand: object | None = None  # abstract value (shape/dtype), not data
+
+
+class Policy:
+    """Base policy: no-op."""
+
+    name = "policy"
+
+    def on_op(self, ctx: PolicyContext) -> None:
+        """Trace-time hook. Raise PolicyViolation to reject the op."""
+
+    def in_graph_cost(self, ctx: PolicyContext) -> int:
+        """Extra mediation iterations this policy adds per op (run time)."""
+        return 0
+
+    def reset(self) -> None:
+        pass
+
+
+@dataclass
+class TelemetryPolicy(Policy):
+    """Record every op into the host-side telemetry registry."""
+
+    telemetry: tl.Telemetry = field(default_factory=tl.Telemetry)
+    name: str = "telemetry"
+
+    def on_op(self, ctx: PolicyContext) -> None:
+        self.telemetry.record(ctx.rec)
+
+    def reset(self) -> None:
+        self.telemetry.reset()
+
+
+@dataclass
+class SecurityPolicy(Policy):
+    """Only registered memory regions may cross the dataplane
+    (paper §4: NIC refuses unregistered addresses)."""
+
+    registry: MRRegistry = field(default_factory=MRRegistry)
+    strict: bool = False   # strict: unnamed operands are rejected too
+    name: str = "security"
+
+    def on_op(self, ctx: PolicyContext) -> None:
+        if ctx.mr_name is None:
+            if self.strict:
+                raise PolicyViolation(
+                    f"op {ctx.rec.tag!r}: anonymous operand under strict security")
+            return
+        try:
+            self.registry.check(ctx.mr_name, ctx.operand)
+        except MRError as e:
+            raise PolicyViolation(str(e)) from e
+
+
+@dataclass
+class QuotaPolicy(Policy):
+    """Per-tenant communication byte budgets (isolation / multi-tenancy —
+    what Justitia/FreeFlow do with extra middleboxes, done at the
+    mediation point instead)."""
+
+    limits: dict[str, int] = field(default_factory=dict)   # tenant -> bytes
+    used: dict[str, int] = field(default_factory=dict)
+    name: str = "quota"
+
+    def on_op(self, ctx: PolicyContext) -> None:
+        lim = self.limits.get(ctx.tenant)
+        if lim is None:
+            return
+        used = self.used.get(ctx.tenant, 0) + ctx.rec.bytes * ctx.rec.count
+        if used > lim:
+            raise PolicyViolation(
+                f"tenant {ctx.tenant!r} exceeded dataplane quota "
+                f"({used} > {lim} bytes)")
+        self.used[ctx.tenant] = used
+
+    def reset(self) -> None:
+        self.used.clear()
+
+
+@dataclass
+class QoSPolicy(Policy):
+    """Priority classes for chunk scheduling.
+
+    Ops tagged with a higher-priority class get their chunks issued first
+    when the dataplane splits large collectives (core/chunking.py). This is
+    a *scheduling* policy: zero data-path cost, pure issue-order control —
+    the kind of control the kernel regains in CoRD."""
+
+    # class name -> priority (lower = sooner). "default" = 100.
+    classes: dict[str, int] = field(default_factory=lambda: {"default": 100})
+    name: str = "qos"
+
+    def priority(self, qos_class: str) -> int:
+        return self.classes.get(qos_class, 100)
+
+    def on_op(self, ctx: PolicyContext) -> None:
+        # Record the class; scheduling happens in the chunker.
+        ctx.rec.qos = ctx.rec.qos or "default"
+
+
+def default_policies() -> list[Policy]:
+    return [TelemetryPolicy()]
+
+
+__all__ = [
+    "Policy", "PolicyContext", "PolicyViolation",
+    "TelemetryPolicy", "SecurityPolicy", "QuotaPolicy", "QoSPolicy",
+    "default_policies",
+]

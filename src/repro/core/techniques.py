@@ -1,0 +1,111 @@
+"""Emulation of the three RDMA performance techniques (paper §2, Fig. 1).
+
+The paper "removes" each technique from perftest to quantify its value:
+
+* **zero-copy removed**  → an extra memory copy on send and on receive.
+  Here: the payload is staged through a bounce buffer; an
+  ``optimization_barrier`` fence prevents XLA from eliding the copies.
+* **kernel-bypass removed** → a ``getppid`` syscall per op in the paper.
+  Here: a calibrated dependent-compute delay (the user→kernel crossing) plus
+  the in-graph policy work of the mediation layer.
+* **polling removed** → wait-for-interrupt instead of busy polling.
+  Here: a (much larger) calibrated delay modelling interrupt delivery +
+  wakeup on the completion path.
+
+The delay primitive is a serial dependent FLOP chain: XLA cannot
+parallelise or elide it, so its wall-time scales linearly with the trip
+count on any backend.  ``calibrate()`` measures ns/iteration once per
+process and converts requested nanoseconds into iterations.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Serial delay primitive
+# ---------------------------------------------------------------------------
+
+def delay_scalar(iters: int, seed=None) -> jax.Array:
+    """A serial dependent scalar computation of ``iters`` steps."""
+    def body(i, v):
+        # dependent fma chain; cannot be vectorized away
+        return v * 1.0000001 + 1e-9
+
+    return jax.lax.fori_loop(0, max(iters, 0),
+                             body, seed if seed is not None
+                             else jnp.float32(1.0))
+
+
+def tie(x: jax.Array, tok: jax.Array) -> jax.Array:
+    """Make ``x`` data-depend on ``tok`` with O(1) work, value-identical.
+
+    A bare optimization_barrier gets pruned when its token output is
+    unused; instead the first element of ``x`` is routed through a select
+    on ``tok == tok`` (true at run time, not foldable under NaN
+    semantics)."""
+    tok = tok.astype(jnp.float32)
+    head = jax.lax.dynamic_slice_in_dim(x.reshape(-1), 0, 1, 0)
+    head = jnp.where(tok == tok, head, head + jnp.ones_like(head))
+    flat = jax.lax.dynamic_update_slice_in_dim(x.reshape(-1), head, 0, 0)
+    return flat.reshape(x.shape)
+
+
+def delay_chain(x: jax.Array, iters: int) -> jax.Array:
+    """Delay the availability of ``x`` by a serial ``iters``-step chain.
+
+    Bit-identical output: the chain runs on a scalar token that ``x`` is
+    barrier-tied to — no copy or arithmetic touches the payload."""
+    if iters <= 0:
+        return x
+    return tie(x, delay_scalar(iters))
+
+
+@functools.cache
+def calibrate(probe_iters: int = 200_000) -> float:
+    """Measure ns per delay_chain iteration on this host."""
+    f = jax.jit(lambda x: delay_chain(x, probe_iters))
+    x = jnp.zeros((), jnp.float32)
+    f(x).block_until_ready()              # compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        f(x).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e9 / probe_iters
+
+
+def iters_for_ns(ns: float) -> int:
+    if ns <= 0:
+        return 0
+    return max(1, int(ns / calibrate()))
+
+
+# ---------------------------------------------------------------------------
+# Copy emulation (zero-copy removed / socket bounce buffers)
+# ---------------------------------------------------------------------------
+
+def staged_copy(x: jax.Array, copies: int = 1) -> jax.Array:
+    """Force ``copies`` real materialized copies of ``x`` (bounce buffer).
+
+    Barriers fence each stage so XLA cannot fuse or elide the copies; the
+    final output is bit-identical to ``x``."""
+    shape = x.shape
+    flat = x.reshape(-1) if x.ndim != 1 else x
+    for _ in range(copies):
+        # roll / barrier / roll-back: two real data movements XLA cannot
+        # fold (the barrier blocks roll∘roll simplification) — the copy
+        # into and out of the bounce buffer.
+        flat = jnp.roll(flat, 1, axis=0)
+        (flat,) = jax.lax.optimization_barrier((flat,))
+        flat = jnp.roll(flat, -1, axis=0)
+    return flat.reshape(shape)
+
+
+__all__ = ["delay_chain", "delay_scalar", "tie", "calibrate",
+           "iters_for_ns", "staged_copy"]

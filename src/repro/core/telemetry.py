@@ -1,0 +1,131 @@
+"""Dataplane telemetry — the observability the paper gains by removing
+kernel bypass (CoRD §1: "facilitate application observability").
+
+Two mechanisms:
+
+* **Trace-time records** (`Telemetry`): every op issued through the
+  Dataplane is recorded with its logical tag, collective kind, byte size and
+  mesh axes while the computation is being traced.  This is the exact
+  information an OS would collect at the syscall boundary, and it is also
+  the source of the roofline collective term (benchmarks/roofline.py).
+
+* **In-graph counters** (`CounterState`): a tiny traced array of per-class
+  counters threaded through measured paths (perftest / NPB / the explicit
+  trainer), so that `cord` mode performs *real* per-op mediation work at run
+  time — the analogue of the user→kernel crossing cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Counter classes for in-graph accounting.
+CTR_OPS = 0          # number of dataplane ops issued
+CTR_BYTES = 1        # bytes moved through the dataplane
+CTR_DENIED = 2       # ops rejected by policy (quota/security)
+CTR_CHUNKS = 3       # chunks issued by the QoS scheduler
+NUM_COUNTERS = 4
+
+
+@dataclass
+class OpRecord:
+    kind: str                 # all_reduce | all_gather | reduce_scatter | ...
+    tag: str                  # logical name, e.g. "grads/psum" or "moe/dispatch"
+    bytes: int                # payload bytes (per-shard operand size)
+    axes: tuple[str, ...]     # mesh axes the op spans
+    shape: tuple[int, ...] = ()
+    dtype: str = ""
+    mode: str = "cord"
+    qos: str = "default"
+    count: int = 1
+
+
+@dataclass
+class Telemetry:
+    """Trace-time op registry. Cheap, purely host-side."""
+
+    records: list[OpRecord] = field(default_factory=list)
+    enabled: bool = True
+
+    def record(self, rec: OpRecord) -> None:
+        if self.enabled:
+            self.records.append(rec)
+
+    def reset(self) -> None:
+        self.records.clear()
+
+    # ---- reporting ------------------------------------------------------
+    def total_bytes(self, kinds: tuple[str, ...] | None = None) -> int:
+        return sum(r.bytes * r.count for r in self.records
+                   if kinds is None or r.kind in kinds)
+
+    def by_kind(self) -> dict[str, dict[str, float]]:
+        agg: dict[str, dict[str, float]] = defaultdict(lambda: {"ops": 0, "bytes": 0})
+        for r in self.records:
+            agg[r.kind]["ops"] += r.count
+            agg[r.kind]["bytes"] += r.bytes * r.count
+        return dict(agg)
+
+    def by_tag(self) -> dict[str, dict[str, float]]:
+        agg: dict[str, dict[str, float]] = defaultdict(lambda: {"ops": 0, "bytes": 0})
+        for r in self.records:
+            agg[r.tag]["ops"] += r.count
+            agg[r.tag]["bytes"] += r.bytes * r.count
+        return dict(agg)
+
+    def report(self) -> str:
+        lines = [f"{'kind':18s} {'ops':>8s} {'MiB':>12s}"]
+        for kind, v in sorted(self.by_kind().items()):
+            lines.append(f"{kind:18s} {int(v['ops']):8d} {v['bytes']/2**20:12.3f}")
+        lines.append(f"{'TOTAL':18s} {sum(int(v['ops']) for v in self.by_kind().values()):8d}"
+                     f" {self.total_bytes()/2**20:12.3f}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# In-graph counter state
+# ---------------------------------------------------------------------------
+
+def counters_init() -> jax.Array:
+    return jnp.zeros((NUM_COUNTERS,), dtype=jnp.float32)
+
+
+def counters_bump(ctrs: jax.Array, *, ops: int = 0, bytes: int = 0,
+                  denied: int = 0, chunks: int = 0) -> jax.Array:
+    """Return updated counters. This is the per-op mediation computation in
+    cord mode — a handful of scalar adds, the 'syscall body'."""
+    upd = jnp.zeros_like(ctrs)
+    upd = upd.at[CTR_OPS].add(float(ops))
+    upd = upd.at[CTR_BYTES].add(float(bytes))
+    upd = upd.at[CTR_DENIED].add(float(denied))
+    upd = upd.at[CTR_CHUNKS].add(float(chunks))
+    return ctrs + upd
+
+
+def counters_dict(ctrs: np.ndarray) -> dict[str, float]:
+    c = np.asarray(ctrs)
+    return {"ops": float(c[CTR_OPS]), "bytes": float(c[CTR_BYTES]),
+            "denied": float(c[CTR_DENIED]), "chunks": float(c[CTR_CHUNKS])}
+
+
+def nbytes(x) -> int:
+    """Payload size of an abstract/concrete array."""
+    dt = jnp.dtype(x.dtype)
+    return int(np.prod(x.shape)) * dt.itemsize
+
+
+def describe(x) -> tuple[tuple[int, ...], str]:
+    return tuple(x.shape), str(jnp.dtype(x.dtype).name)
+
+
+__all__ = [
+    "OpRecord", "Telemetry", "counters_init", "counters_bump",
+    "counters_dict", "nbytes", "describe",
+    "CTR_OPS", "CTR_BYTES", "CTR_DENIED", "CTR_CHUNKS", "NUM_COUNTERS",
+]

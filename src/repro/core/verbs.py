@@ -1,0 +1,153 @@
+"""ibverbs-style point-to-point layer over shard_map + ppermute.
+
+This is the "narrow waist" (paper §4) the perftest reproduction runs on:
+
+* **Queue pairs** are functional ring buffers of fixed-size message slots
+  (the registered memory the NIC reads from / writes to).
+* **post_send / post_recv** enqueue work requests.  In ``cord``/``socket``
+  mode each post crosses the mediation layer (the syscall); in ``bypass``
+  it is a bare ring write (the doorbell in user space).
+* **flush** performs the actual transfer (the NIC DMA): one
+  ``ppermute`` of the ring over the ``rank`` axis — zero-copy, the payload
+  moves directly from the registered ring memory.
+* **poll_cq** completes operations; with polling disabled the completion
+  path pays the emulated interrupt cost.
+
+Transports: ``RC`` (any message size, send/recv + one-sided READ/WRITE)
+and ``UD`` (≤ 4 KiB MTU, send/recv only) — mirroring the paper's matrix.
+One-sided ops mediate only on the *active* side (paper Fig. 3: RDMA read
+with CoRD on the passive server has zero overhead).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import techniques as tech
+from repro.core.dataplane import Dataplane
+
+UD_MTU = 4096
+
+
+class TransportError(Exception):
+    pass
+
+
+@dataclass(frozen=True)
+class QPConfig:
+    transport: str = "RC"          # RC | UD
+    msg_bytes: int = 4096
+    depth: int = 16                # ring slots
+    axis: str = "rank"
+
+    def __post_init__(self):
+        if self.transport not in ("RC", "UD"):
+            raise TransportError(f"unknown transport {self.transport!r}")
+        if self.transport == "UD" and self.msg_bytes > UD_MTU:
+            raise TransportError(
+                f"UD supports messages up to {UD_MTU} B, got {self.msg_bytes}")
+
+
+def qp_init(cfg: QPConfig, dtype=jnp.uint8) -> dict:
+    """Create QP state: send/recv rings + queue counters (a pytree)."""
+    slot = cfg.msg_bytes // jnp.dtype(dtype).itemsize
+    return {
+        "send_ring": jnp.zeros((cfg.depth, slot), dtype),
+        "recv_ring": jnp.zeros((cfg.depth, slot), dtype),
+        "sq_head": jnp.zeros((), jnp.int32),     # posted sends
+        "cq_sent": jnp.zeros((), jnp.int32),     # completed sends
+        "cq_rcvd": jnp.zeros((), jnp.int32),     # completed recvs
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-rank conditional mediation: client and server may independently run
+# bypass (BP) or CoRD (CD) — the paper's fig. 3 matrix.
+# ---------------------------------------------------------------------------
+
+def _mediated(dp: Dataplane, x: jax.Array) -> jax.Array:
+    """The work one endpoint does to issue a dataplane op under ``dp``."""
+    if not dp.kernel_bypass and dp.cfg.emulate_costs:
+        ns = dp.cfg.syscall_cost_ns
+        if dp.mode == "socket":
+            ns += dp.cfg.socket_stack_ns
+        x = tech.delay_chain(x, tech.iters_for_ns(ns))
+    if not dp.zero_copy:
+        x = tech.staged_copy(x, copies=1)
+    return x
+
+
+def rank_mediate(x: jax.Array, rank: jax.Array, active_rank: int,
+                 dp: Dataplane) -> jax.Array:
+    """Apply ``dp``'s mediation only on ``active_rank`` (SPMD-safe)."""
+    return jax.lax.cond(rank == active_rank,
+                        partial(_mediated, dp), lambda v: v, x)
+
+
+def _completion(x: jax.Array, rank: jax.Array, active_rank: int,
+                dp: Dataplane) -> jax.Array:
+    def waited(v):
+        if not dp.polling and dp.cfg.emulate_costs:
+            v = tech.delay_chain(
+                v, tech.iters_for_ns(dp.cfg.interrupt_cost_us * 1e3))
+        if not dp.zero_copy:
+            v = tech.staged_copy(v, copies=1)
+        return v
+    return jax.lax.cond(rank == active_rank, waited, lambda v: v, x)
+
+
+# ---------------------------------------------------------------------------
+# data-plane verbs (call inside shard_map over cfg.axis)
+# ---------------------------------------------------------------------------
+
+def post_send(dp: Dataplane, cfg: QPConfig, qp: dict, buf: jax.Array,
+              rank: jax.Array, src: int) -> dict:
+    """Enqueue ``buf`` into the send ring on rank ``src`` (the syscall)."""
+    buf = rank_mediate(buf, rank, src, dp)
+    slot = jnp.mod(qp["sq_head"], cfg.depth)
+    ring = jax.lax.dynamic_update_index_in_dim(qp["send_ring"], buf, slot, 0)
+    return {**qp, "send_ring": ring, "sq_head": qp["sq_head"] + 1}
+
+
+def flush_send(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
+               src: int, dst: int, *, op: str = "send",
+               state: jax.Array | None = None) -> dict:
+    """The NIC DMA: move the send ring src→dst (or dst→src for READ).
+
+    ``op``: "send" (two-sided), "write" / "read" (one-sided; RC only)."""
+    if op != "send" and cfg.transport != "RC":
+        raise TransportError(f"one-sided {op!r} requires RC transport")
+    perm = [(src, dst)] if op != "read" else [(dst, src)]
+    ring = qp["send_ring"] if op != "read" else qp["recv_ring"]
+    r = dp.ppermute(ring, cfg.axis, perm, tag=f"verbs/{op}",
+                    mr=None, state=state)
+    if state is not None:
+        r, state = r
+    new = dict(qp)
+    if op == "read":
+        new["send_ring"] = r      # reader pulled remote memory
+    else:
+        new["recv_ring"] = r
+    new["cq_sent"] = qp["cq_sent"] + (qp["sq_head"] - qp["cq_sent"])
+    out = (new, state) if state is not None else new
+    return out
+
+
+def poll_cq(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
+            poller: int) -> tuple[jax.Array, dict]:
+    """Completion: returns (#completions, qp). Pays the interrupt cost on
+    the polling rank when polling is disabled."""
+    ring = _completion(qp["recv_ring"], rank, poller, dp)
+    qp = {**qp, "recv_ring": ring,
+          "cq_rcvd": qp["cq_rcvd"] + 1}
+    return qp["cq_sent"], qp
+
+
+__all__ = [
+    "QPConfig", "TransportError", "UD_MTU", "qp_init",
+    "post_send", "flush_send", "poll_cq", "rank_mediate",
+]

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticLM
+
+__all__ = ["DataConfig", "SyntheticLM", "ShardedLoader"]

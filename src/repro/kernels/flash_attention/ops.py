@@ -1,0 +1,47 @@
+"""Jitted public wrapper for the Pallas flash-attention kernel.
+
+Accepts the framework's (B, S, H, D) activation layout, handles GQA
+shapes, dynamic window / valid-length scalars, and padding of ragged
+sequence lengths up to block multiples.  ``interpret=True`` (automatic on
+CPU) runs the kernel body in Python for validation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, q_pos=None, k_pos=None, causal: bool = True,
+                    window=None, logit_cap: float = 0.0,
+                    valid_len=None, q_block: int = 256, kv_block: int = 512,
+                    interpret: bool | None = None):
+    """q: (B, S, H, D); k/v: (B, Skv, KVH, D) — framework layout.
+
+    ``window``: int or traced scalar (0/None = global).
+    ``valid_len``: filled KV length (decode); defaults to full."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    w = jnp.asarray(0 if window is None else window, jnp.int32).reshape(())
+    vl = jnp.asarray(skv if valid_len is None else valid_len,
+                     jnp.int32).reshape(())
+    scalars = jnp.stack([w, vl])
+
+    qt = q.transpose(0, 2, 1, 3)        # (B, H, S, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_fwd(qt, kt, vt, scalars, causal=causal,
+                            logit_cap=logit_cap, q_block=q_block,
+                            kv_block=kv_block, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+__all__ = ["flash_attention"]

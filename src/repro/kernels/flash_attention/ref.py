@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Deliberately naive (materializes the full logits matrix) and written
+independently of repro.layers.attention, so kernel bugs cannot hide
+behind shared code.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0, valid_len: int | None = None,
+                        causal: bool = True, logit_cap: float = 0.0):
+    """q: (B, H, Sq, D); k/v: (B, KVH, Skv, D). Returns (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    if valid_len is None:
+        valid_len = skv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if logit_cap > 0:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = kpos < valid_len
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p * mask  # fully-masked rows → 0 (flash convention), not uniform
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+__all__ = ["flash_attention_ref"]

@@ -1,0 +1,40 @@
+"""Jitted public wrapper for the Pallas SSM-scan kernel: padding to chunk
+multiples (state-neutral: dt=0), dtype handling, CPU interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_fwd
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssm_scan(dt, x, a, b, c, h0=None, *, chunk: int = 128,
+             channel_block: int = 256, interpret: bool | None = None):
+    """Selective scan. Shapes as ssm_scan_fwd; h0 defaults to zeros.
+
+    Returns (y, h_final)."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    bsz, s, di = dt.shape
+    n = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+
+    ck = min(chunk, s)
+    pad = (-s) % ck
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        dt, x, b, c = zf(dt), zf(x), zf(b), zf(c)   # dt=0 ⇒ state-neutral
+    y, hf = ssm_scan_fwd(dt, x, a, b, c, h0, chunk=ck,
+                         channel_block=channel_block, interpret=interpret)
+    if pad:
+        y = y[:, :s]
+    return y, hf
+
+
+__all__ = ["ssm_scan"]

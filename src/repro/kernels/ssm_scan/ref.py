@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSM selective scan: a literal lax.scan over
+time — independent of both the kernel and the model's chunked
+associative-scan path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, x, a, b, c, h0):
+    """dt/x: (B, S, di); a: (di, N); b/c: (B, S, N); h0: (B, di, N).
+
+    Returns (y: (B, S, di), h_final)."""
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+
+    def step(h, args):
+        dt_t, x_t, b_t, c_t = args          # (B,di), (B,di), (B,N), (B,N)
+        dA = jnp.exp(dt_t[..., None] * a)   # (B,di,N)
+        h = dA * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (dt.swapaxes(0, 1), x.swapaxes(0, 1),
+         b.swapaxes(0, 1), c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h_final
+
+
+__all__ = ["ssm_scan_ref"]

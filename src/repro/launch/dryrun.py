@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init), which is why they precede the docstring and
+# why this module has no `from __future__ import annotations`.
+
+DOC = """Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell and extract the roofline raw terms from the compiled artifact.
+
+For each cell this produces (and caches to JSON):
+  * ``memory_analysis``  — per-device bytes (proves the cell fits HBM)
+  * ``cost_analysis``    — per-device HLO FLOPs / bytes accessed
+  * ``collectives``      — bytes per collective kind, parsed from the
+    post-SPMD compiled HLO (the roofline collective term)
+  * the dataplane's logical telemetry (what the mediation layer saw)
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out runs/dryrun]
+"""
+
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, apply_overrides, cells, get_model_config
+from repro.configs.base import DataplaneConfig, ModelConfig, RunConfig, ShapeConfig, TrainConfig
+from repro.core.dataplane import Dataplane
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import build_model, input_specs
+from repro.parallel.sharding import (
+    activation_rules,
+    batch_specs,
+    cache_spec_tree,
+    filter_spec,
+    param_specs,
+)
+from repro.train.step import TrainState, make_train_step
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DT_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+             "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+             "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_RE = re.compile(
+    r"=\s+((?:\(|\w+\[)[^=]*?)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\(([^)]*)\)")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from post-partitioning HLO.
+
+    ``-done`` ops are skipped (their ``-start`` twin carries the operands).
+    Returns {kind: {"ops": n, "bytes": operand_bytes}}."""
+    out: dict[str, dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        result_txt, kind, args_txt = m.groups()
+        operand_bytes = _shape_bytes(args_txt)
+        if operand_bytes == 0:
+            # operand types not printed; fall back to the result shape
+            operand_bytes = _shape_bytes(result_txt)
+        d = out.setdefault(kind, {"ops": 0, "bytes": 0})
+        d["ops"] += 1
+        d["bytes"] += operand_bytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def _abstract_params(model, dtype=None):
+    tree = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if dtype is None:
+        return tree
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, dtype if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype),
+        tree)
+
+
+def _to_sh(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sharded_bytes(tree, spec_tree, sizes) -> int:
+    """Semantic per-device bytes of a pytree under the given specs.
+
+    memory_analysis() on the CPU backend is inflated by f32 upcasts of
+    bf16 dot operands (hoisted whole-stack converts) that do not exist on
+    TPU — this gives the TPU-real resident footprint."""
+    from repro.parallel.sharding import _axis_size
+    total = 0
+    leaves = jax.tree.leaves(tree)
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(leaves, specs):
+        ways = 1
+        for ax in tuple(spec):
+            ways *= _axis_size(ax, sizes)
+        total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize \
+            // max(ways, 1)
+    return total
+
+
+def build_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
+               overrides: list[str] | None = None,
+               remat: str = "full", seq_shard_prefill: bool = True):
+    """Returns (jitted_fn, abstract_args, dp, meta)."""
+    cfg = get_model_config(arch)
+    if overrides:
+        cfg = apply_overrides(cfg, [o for o in overrides
+                                    if o.startswith(tuple(
+                                        f.name for f in
+                                        __import__("dataclasses").fields(ModelConfig)))])
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = mesh_axis_sizes(mesh)
+    rules = activation_rules(cfg, shape, multi_pod=multi_pod,
+                             seq_shard_prefill=seq_shard_prefill)
+    dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh, rules=rules)
+    big = cfg.param_count() > 20e9
+    meta = {"arch": arch, "shape": shape.name, "kind": shape.kind,
+            "multi_pod": multi_pod, "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(), "rules": {
+                k: (list(v) if isinstance(v, tuple) else v)
+                for k, v in rules.items()}}
+
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        # Gradient accumulation sized so the remat-saved activation stack
+        # (L, B_local, S, D) stays under ~4.5 GB/device; bf16 master weights
+        # for >100B archs (see DESIGN.md §7 / EXPERIMENTS.md §Dry-run).
+        data_ways = sizes.get("data", 1) * sizes.get("pod", 1)
+        s_total = shape.seq_len + (cfg.num_patches if cfg.family == "vlm" else 0)
+        stack_per_seq = (cfg.num_layers + cfg.encoder_layers) * s_total \
+            * cfg.d_model * 2
+        mb_local = max(1, int(4.5e9 // max(stack_per_seq, 1)))
+        mb_global = min(mb_local * data_ways, shape.global_batch)
+        while shape.global_batch % mb_global:
+            mb_global -= 1
+        microbatch = 0 if mb_global >= shape.global_batch else mb_global
+        huge = cfg.param_count() > 100e9
+        run = RunConfig(train=TrainConfig(
+            remat=remat, microbatch=microbatch,
+            opt_dtype="bfloat16" if big else "float32"))
+        meta["microbatch"] = microbatch
+        meta["param_dtype"] = "bfloat16" if huge else "float32"
+        _, sharded_jit = make_train_step(model, run, dp, fsdp=True)
+        params_abs = _abstract_params(
+            model, dtype=jnp.bfloat16 if huge else None)
+        from repro.optim.adamw import adamw_init
+        state_abs = jax.eval_shape(
+            lambda p: TrainState(params=p,
+                                 opt=adamw_init(p, run.train.opt_dtype),
+                                 step=jnp.zeros((), jnp.int32), err=None),
+            params_abs)
+        jitted = sharded_jit(state_abs, specs)
+        from repro.train.step import make_train_step as _m  # noqa: F401
+        pspec_t = param_specs(params_abs, fsdp=True, mesh_sizes=sizes)
+        meta["state_bytes_per_device"] = (
+            _sharded_bytes(params_abs, pspec_t, sizes)
+            + 2 * _sharded_bytes(state_abs.opt.mu, pspec_t, sizes))
+        meta["remat_stack_bytes_per_device"] = int(
+            stack_per_seq * max(mb_local, 1))
+        return jitted, (state_abs, specs), dp, meta
+
+    params_abs = _abstract_params(model, dtype=jnp.bfloat16)
+    # Serving: weights statically resident — dense archs shard over model
+    # only; MoE archs get 2D expert sharding (no FSDP regathers).
+    pspec = param_specs(params_abs, fsdp=False, mesh_sizes=sizes,
+                        serve_moe_2d=(cfg.family == "moe"))
+    psh = _to_sh(mesh, pspec)
+
+    meta["params_bytes_per_device"] = _sharded_bytes(params_abs, pspec, sizes)
+
+    if shape.kind == "prefill":
+        cache_len = shape.seq_len
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, cache_len))
+        cspec = cache_spec_tree(cache_abs, rules, sizes)
+        meta["cache_bytes_per_device"] = _sharded_bytes(cache_abs, cspec, sizes)
+        csh = _to_sh(mesh, cspec)
+        bsh = _to_sh(mesh, batch_specs(specs, rules, sizes))
+
+        def prefill_fn(params, batch, cache):
+            return model.prefill(params, batch, cache, dp=dp)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(psh, bsh, csh),
+                         out_shardings=(None, csh), donate_argnums=(2,))
+        return jitted, (params_abs, specs, cache_abs), dp, meta
+
+    # decode
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cspec = cache_spec_tree(cache_abs, rules, sizes)
+    meta["cache_bytes_per_device"] = _sharded_bytes(cache_abs, cspec, sizes)
+    csh = _to_sh(mesh, cspec)
+    token_abs = specs["token"]
+    tsh = NamedSharding(mesh, filter_spec(
+        P(rules.get("batch")), token_abs.shape, sizes))
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos, dp=dp)
+
+    jitted = jax.jit(decode_fn, in_shardings=(psh, tsh, csh, None),
+                     out_shardings=(None, csh), donate_argnums=(2,))
+    return jitted, (params_abs, token_abs, cache_abs, pos_abs), dp, meta
+
+
+# ---------------------------------------------------------------------------
+# run + analyze one cell
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             remat: str = "full", seq_shard_prefill: bool = True,
+             save_hlo: str = None) -> dict:
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    jitted, args, dp, meta = build_cell(arch, shape, multi_pod=multi_pod,
+                                        remat=remat,
+                                        seq_shard_prefill=seq_shard_prefill)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if save_hlo:
+        with gzip.open(save_hlo, "wt") as f:
+            f.write(hlo)
+    coll = parse_collectives(hlo)
+
+    result = {
+        **meta,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops"),
+            "bytes_per_device": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collectives": coll,
+        "collective_bytes_total": sum(v["bytes"] for v in coll.values()),
+        "dataplane": {
+            "mode": dp.mode,
+            "logical_ops": dp.telemetry.by_kind(),
+        },
+    }
+    # memory_analysis pretty print (the 'proves it fits' artifact)
+    print(f"[{arch} × {shape_name} × "
+          f"{'multi' if multi_pod else 'single'}-pod]")
+    print(f"  memory_analysis: {mem}")
+    print(f"  cost_analysis: flops/dev={cost.get('flops'):.3e} "
+          f"bytes/dev={cost.get('bytes accessed'):.3e}")
+    print(f"  collectives: { {k: (int(v['ops']), round(v['bytes']/2**20, 1)) for k, v in coll.items()} } (ops, MiB)")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        todo = [(a, s.name) for a, s in cells()]
+    else:
+        todo = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or
+                               (args.all and not args.multi_pod)) else \
+        [args.multi_pod]
+
+    failures = 0
+    for arch, shape_name in todo:
+        for mp in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if mp else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"skip {tag} (cached)")
+                continue
+            try:
+                res = run_cell(arch, shape_name, multi_pod=mp,
+                               remat=args.remat,
+                               seq_shard_prefill=not args.no_seq_shard,
+                               save_hlo=os.path.join(
+                                   args.out, tag + ".hlo.gz"))
+            except Exception as e:  # noqa: BLE001 — record failures
+                failures += 1
+                res = {"arch": arch, "shape": shape_name, "multi_pod": mp,
+                       "ok": False, "error": str(e),
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"FAILED {tag}: {e}")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  Single pod: 16×16 = 256 chips
+(v5e pod); multi-pod: 2×16×16 = 512 chips with a leading "pod" axis (DP
+across pods over DCN, TP kept inside the pod over ICI).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(n: int | None = None, model: int = 1):
+    """CPU-device mesh for measured runs/tests: (data = n/model, model)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto),
+                         devices=devs[:n])
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]

@@ -1,0 +1,66 @@
+"""Training launcher: ``python -m repro.launch.train --arch gemma3-1b
+[--mode cord] [--steps 100] [key=value overrides...]``
+
+Runs the explicit-DP trainer on the local CPU mesh (all host devices) with
+the fault-tolerant runtime; production meshes use the same RunConfig with
+make_production_mesh on real hardware.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import apply_overrides, get_model_config
+from repro.configs.base import DataplaneConfig, RunConfig, TrainConfig
+from repro.core import Dataplane
+from repro.data import DataConfig, ShardedLoader, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.runtime import run_loop
+from repro.train import init_state, make_explicit_dp_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--mode", default="cord",
+                    choices=["bypass", "cord", "socket"])
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("overrides", nargs="*", default=[])
+    args = ap.parse_args()
+
+    cfg = get_model_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    train = TrainConfig()
+    train = apply_overrides(train, [o for o in args.overrides
+                                    if not o.startswith("model.")])
+    run = RunConfig(train=train)
+
+    mesh = make_local_mesh()
+    dp = Dataplane(DataplaneConfig(mode=args.mode), mesh=mesh)
+    step = make_explicit_dp_step(model, run, dp, axis="data")
+    state = init_state(model, jax.random.PRNGKey(train.seed),
+                       compression=train.grad_compression)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                seq_len=train.seq_len,
+                                global_batch=train.global_batch,
+                                seed=train.seed))
+    loader = ShardedLoader(ds)
+
+    def wrap(s, b):
+        return step(s, {k: jnp.asarray(v) for k, v in b.items()})
+
+    state, report = run_loop(
+        wrap, state, loader, steps=train.steps,
+        ckpt_dir=train.checkpoint_dir if train.checkpoint_every else None,
+        checkpoint_every=train.checkpoint_every,
+        async_ckpt=train.async_checkpoint, log_every=train.log_every)
+    print(f"done: {report.steps_run} steps, "
+          f"final loss {report.metrics[-1]['loss']:.4f}")
+    print(dp.telemetry.report())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Neural network layers (pure functions over explicit param pytrees)."""
+
+from repro.layers.attention import (
+    attend,
+    attend_flash,
+    attend_naive,
+    attention_init,
+    make_mask,
+    output_project,
+    qkv_project,
+)
+from repro.layers.common import (
+    act_fn,
+    constrain,
+    dense_init,
+    dtype_of,
+    embed_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+)
+from repro.layers.embedding import embed, embedding_init, logits
+from repro.layers.kvcache import (
+    cache_positions,
+    cache_validity,
+    kv_cache_init,
+    kv_update,
+)
+from repro.layers.mamba import mamba, mamba_init, mamba_state_init
+from repro.layers.mlp import mlp, mlp_init
+from repro.layers.moe import moe, moe_init, route
+from repro.layers.rope import apply_rope, sinusoidal_positions
+from repro.layers.xlstm import (
+    mlstm,
+    mlstm_init,
+    mlstm_state_init,
+    slstm,
+    slstm_init,
+    slstm_state_init,
+)

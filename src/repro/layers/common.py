@@ -1,0 +1,109 @@
+"""Shared layer primitives: norms, activations, initializers, dense ops.
+
+All layers are pure functions over explicit parameter pytrees (dicts), so
+the whole stack is `jax.lax.scan`-able over stacked per-layer params —
+essential to keep HLO size bounded at 256/512-way SPMD.
+
+Every function takes an optional ``dp`` (Dataplane) used to issue logical
+sharding constraints — communication edges — through the paper's
+mediation layer.  ``dp=None`` means local/unsharded execution.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def constrain(dp, x: jax.Array, names: Sequence, tag: str = "act") -> jax.Array:
+    if dp is None:
+        return x
+    return dp.constrain(x, names, tag=tag)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim: int, *out_dims: int, dtype=jnp.float32,
+               scale: float | None = None) -> jax.Array:
+    """Truncated-normal fan-in init for a (in_dim, *out_dims) kernel."""
+    shape = (in_dim, *out_dims)
+    std = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    # std 1/sqrt(dim): with the sqrt(d) input scaling this gives unit-variance
+    # activations AND ~unit-variance tied logits (initial loss ≈ ln V).
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, (vocab, dim),
+                                        jnp.float32)
+            / np.sqrt(dim)).astype(dtype)
+
+
+def stacked_init(rng, num: int, init_fn) -> jax.Array | dict:
+    """vmap an init over ``num`` layers → leading layer axis for lax.scan."""
+    rngs = jax.random.split(rng, num)
+    return jax.vmap(init_fn)(rngs)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int) -> dict:
+    return {"scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale): zero-init scale = identity at init
+    return (x * (1.0 + params["scale"])).astype(dtype)
+
+
+def layernorm_init(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"] + params["bias"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+__all__ = [
+    "constrain", "act_fn", "dense_init", "embed_init", "stacked_init",
+    "rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm",
+    "softcap", "dtype_of",
+]

@@ -1,0 +1,41 @@
+"""Token embedding (vocab-sharded) and logits projection (tied or untied)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import constrain, embed_init
+
+
+def embedding_init(rng, vocab: int, dim: int, tied: bool = True) -> dict:
+    r = jax.random.split(rng, 2)
+    p = {"tok": embed_init(r[0], vocab, dim)}
+    if not tied:
+        p["head"] = embed_init(r[1], vocab, dim)
+    return p
+
+
+def embed(params: dict, tokens: jax.Array, dtype, *, scale: bool = True,
+          dp=None) -> jax.Array:
+    tab = constrain(dp, params["tok"], ("vocab", "embed"), tag="embed/table")
+    x = tab.astype(dtype)[tokens]
+    if scale:  # gemma-style sqrt(d) embedding scale
+        x = x * jnp.asarray(math.sqrt(x.shape[-1]), dtype)
+    return constrain(dp, x, ("batch", "seq", "embed"), tag="embed/out")
+
+
+def logits(params: dict, x: jax.Array, dp=None,
+           softcap_val: float = 0.0) -> jax.Array:
+    tab = params.get("head", params["tok"])
+    tab = constrain(dp, tab, ("vocab", "embed"), tag="logits/table")
+    out = jnp.einsum("bsd,vd->bsv", x, tab.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    if softcap_val > 0:
+        out = softcap_val * jnp.tanh(out / softcap_val)
+    return constrain(dp, out, ("batch", "seq", "vocab"), tag="logits/out")
+
+
+__all__ = ["embedding_init", "embed", "logits"]

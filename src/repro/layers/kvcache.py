@@ -1,0 +1,45 @@
+"""KV / recurrent-state caches for serving.
+
+Caches are pytrees with a leading layer axis so the decode step can
+``lax.scan`` over layers, slicing one layer's cache in and the updated
+slice out.  Sharding is issued through the dataplane by the serve step
+(kv_seq → data/model axes depending on the shape cell, see
+parallel/sharding.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_cache_init(layers: int, batch: int, max_len: int, kv_heads: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((layers, batch, max_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((layers, batch, max_len, kv_heads, head_dim), dtype),
+    }
+
+
+def kv_update(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array,
+              v: jax.Array, pos) -> tuple[jax.Array, jax.Array]:
+    """Insert (B, s, KVH, hd) new keys/values at position ``pos`` into a
+    single layer's (B, S_max, KVH, hd) cache."""
+    pos = jnp.asarray(pos, jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, pos, 0, 0))
+    return ck, cv
+
+
+def cache_positions(max_len: int) -> jax.Array:
+    return jnp.arange(max_len, dtype=jnp.int32)
+
+
+def cache_validity(max_len: int, filled_len) -> jax.Array:
+    """Boolean (max_len,) mask of filled cache slots."""
+    return jnp.arange(max_len, dtype=jnp.int32) < filled_len
+
+
+__all__ = ["kv_cache_init", "kv_update", "cache_positions", "cache_validity"]

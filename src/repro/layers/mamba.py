@@ -1,0 +1,146 @@
+"""Mamba (S6) selective-state-space block with a chunked parallel scan.
+
+The recurrence  h_t = Ā_t ⊙ h_{t-1} + B̄_t x_t,  y_t = C_t·h_t + D x_t
+is evaluated chunk-parallel: within a chunk by ``associative_scan`` (or the
+Pallas ssm_scan kernel on TPU), across chunks by a short ``lax.scan`` that
+carries the (B, d_inner, N) state.  Memory high-water is
+(B, chunk, d_inner, N) — independent of sequence length.
+
+Decode keeps (conv_tail, h) as recurrent cache: O(1) per token — this is
+what makes hymba runnable at the 500k-token cell.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.layers.common import constrain, dense_init
+
+
+def mamba_init(rng, d_model: int, cfg: SSMConfig) -> dict:
+    di = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(1, math.ceil(d_model / 16))
+    r = jax.random.split(rng, 6)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, cfg.state_size + 1, dtype=jnp.float32)[None, :],
+                 (di, 1))
+    dt = jnp.exp(jax.random.uniform(r[0], (di,)) *
+                 (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(r[1], d_model, 2 * di),
+        "conv": jax.random.normal(r[2], (cfg.conv_width, di), jnp.float32)
+                 / math.sqrt(cfg.conv_width),
+        "conv_bias": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(r[3], di, dt_rank + 2 * cfg.state_size),
+        "dt_proj": dense_init(r[4], dt_rank, di, scale=dt_rank ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(r[5], di, d_model),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 tail: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,di), w: (W,di). Returns (out, new_tail)
+    where tail is the last (W-1) inputs for streaming decode."""
+    wlen = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(wlen))
+    new_tail = xp[:, -(wlen - 1):, :] if wlen > 1 else tail
+    return out + bias.astype(x.dtype), new_tail
+
+
+def ssm_scan_chunked(dt: jax.Array, x: jax.Array, a: jax.Array,
+                     bc: jax.Array, cc: jax.Array, h0: jax.Array, *,
+                     chunk: int = 128):
+    """Evaluate the diagonal SSM recurrence, chunk-parallel.
+
+    dt/x: (B,S,di); a: (di,N); bc/cc: (B,S,N); h0: (B,di,N).
+    Returns y: (B,S,di), h_final: (B,di,N).
+
+    The discretization exp(dt·A) is computed INSIDE the chunk step — the
+    (B, S, di, N) dA tensor must never exist at full sequence length
+    (at hymba prefill_32k it would be 13 TB; see EXPERIMENTS.md §Perf).
+    Same signature as the Pallas kernel (repro.kernels.ssm_scan)."""
+    b, s, di = dt.shape
+    n = a.shape[1]
+    ck = min(chunk, s)
+    while s % ck:
+        ck -= 1
+    nc = s // ck
+
+    resh3 = lambda t: t.reshape(b, nc, ck, -1).swapaxes(0, 1)
+
+    def chunk_step(h, args):
+        dt_c, x_c, b_c, c_c = args                    # (B,ck,·)
+        da = jnp.exp(dt_c[..., None] * a)             # (B,ck,di,N)
+        dbx = (dt_c * x_c)[..., None] * b_c[..., None, :]
+
+        # intra-chunk associative scan of (a, b) pairs
+        def comb(l, r):
+            return l[0] * r[0], r[0] * l[1] + r[1]
+        a_sc, b_sc = jax.lax.associative_scan(comb, (da, dbx), axis=1)
+        # prepend carry: h_t = a_sc * h0 + b_sc
+        h_all = a_sc * h[:, None] + b_sc                      # (B,ck,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, c_c)
+        return h_all[:, -1], y
+
+    h_final, ys = jax.lax.scan(
+        chunk_step, h0, (resh3(dt), resh3(x), resh3(bc), resh3(cc)))
+    return ys.swapaxes(0, 1).reshape(b, s, di), h_final
+
+
+def mamba(params: dict, x: jax.Array, cfg: SSMConfig, *,
+          state: dict | None = None, dp=None, chunk: int = 128):
+    """Mamba block. x: (B,S,D). ``state`` (decode): {"conv": tail, "h": h}.
+
+    Returns (out, new_state)."""
+    b, s, d = x.shape
+    di = cfg.expand * d
+    n = cfg.state_size
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(dp, xi, ("batch", "seq", "mlp"), tag="mamba/inner")
+
+    tail = state["conv"].astype(xi.dtype) if state is not None else None
+    xi, new_tail = _causal_conv(xi, params["conv"], params["conv_bias"], tail)
+    xi = jax.nn.silu(xi)
+
+    proj = jnp.einsum("bse,ef->bsf", xi, params["x_proj"].astype(x.dtype))
+    dt_rank = params["dt_proj"].shape[0]
+    dt_low, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_low, params["dt_proj"].astype(x.dtype))
+        .astype(jnp.float32) + params["dt_bias"])              # (B,S,di)
+    A = -jnp.exp(params["A_log"])                              # (di,N)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((b, di, n), jnp.float32))
+    y, h_final = ssm_scan_chunked(dt, xi.astype(jnp.float32), A,
+                                  Bc.astype(jnp.float32),
+                                  Cc.astype(jnp.float32), h0, chunk=chunk)
+    y = y.astype(x.dtype) + params["D"].astype(x.dtype) * xi
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    out = constrain(dp, out, ("batch", "seq", "embed"), tag="mamba/out")
+    new_state = {"conv": new_tail.astype(jnp.float32), "h": h_final}
+    return out, new_state
+
+
+def mamba_state_init(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    di = cfg.expand * d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+            "h": jnp.zeros((batch, di, cfg.state_size), jnp.float32)}
+
+
+__all__ = ["mamba_init", "mamba", "mamba_state_init", "ssm_scan_chunked"]

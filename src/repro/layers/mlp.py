@@ -1,0 +1,33 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and classic 2-matrix MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import act_fn, constrain, dense_init
+
+
+def mlp_init(rng, d_model: int, d_ff: int, gated: bool = True) -> dict:
+    r = jax.random.split(rng, 3)
+    p = {"wi": dense_init(r[0], d_model, d_ff),
+         "wo": dense_init(r[1], d_ff, d_model)}
+    if gated:
+        p["wg"] = dense_init(r[2], d_model, d_ff)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, *, act: str = "silu", dp=None,
+        tag: str = "mlp") -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    if "wg" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+        h = act_fn(act)(g) * h
+    else:
+        h = act_fn(act)(h)
+    h = constrain(dp, h, ("batch", "seq", "mlp"), tag=f"{tag}/hidden")
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))
+    return constrain(dp, out, ("batch", "seq", "embed"), tag=f"{tag}/out")
+
+
+__all__ = ["mlp_init", "mlp"]

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer: top-k routing with **block-wise capacity**
+dispatch (GShard/MaxText-style "dropping" MoE), EP-shardable under GSPMD.
+
+Tokens are grouped into blocks of ``group_size``; each block dispatches to
+all experts with a per-block capacity C = ceil(group_size·k·cf / E).  The
+dispatch/combine tensors are (G, n, E, C) with E·C ≈ group_size·k·cf —
+their footprint is **independent of the expert count**, which is what
+keeps arctic-480b (128 experts) inside HBM at 256-way SPMD.
+
+Sharding (via the dataplane): blocks G → data axis, experts E → model
+axis.  The G↔E resharding between dispatch and expert compute is the EP
+all-to-all, materialized by GSPMD from the constraints this module issues.
+
+Arctic-style ``dense_residual``: a dense MLP runs in parallel and its
+output is added to the expert output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.layers.common import act_fn, constrain, dense_init
+
+
+def moe_init(rng, d_model: int, d_ff: int, cfg: MoEConfig,
+             gated: bool = True) -> dict:
+    r = jax.random.split(rng, 5)
+    e = cfg.num_experts
+    p = {
+        "router": dense_init(r[0], d_model, e, scale=1e-2),
+        "wi": dense_init(r[1], d_model, e, d_ff).transpose(1, 0, 2),  # (E,D,F)
+        "wo": dense_init(r[2], d_ff, e, d_model).transpose(1, 0, 2),  # (E,F,D)
+    }
+    if gated:
+        p["wg"] = dense_init(r[3], d_model, e, d_ff).transpose(1, 0, 2)
+    if cfg.dense_residual:
+        from repro.layers.mlp import mlp_init
+        p["dense"] = mlp_init(r[4], d_model, cfg.dense_residual_ff, gated)
+    return p
+
+
+def _capacity(group: int, cfg: MoEConfig) -> int:
+    c = int(group * cfg.top_k * cfg.capacity_factor / max(cfg.num_experts, 1))
+    return max(c, 1)
+
+
+def route(params: dict, x2d: jax.Array, cfg: MoEConfig, *,
+          train: bool, rng=None):
+    """Router: top-k gates + aux losses. x2d: (T, D) flat tokens."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    if train and cfg.router_jitter > 0 and rng is not None:
+        logits += cfg.router_jitter * jax.random.normal(rng, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)              # (T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # aux losses (Switch-style)
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = jnp.zeros_like(me).at[idx[:, 0]].add(1.0) / idx.shape[0]
+    lb_loss = cfg.num_experts * jnp.sum(me * ce) * cfg.load_balance_loss
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.router_z_loss
+    return gates, idx, lb_loss + z_loss
+
+
+def moe(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "silu",
+        group_size: int = 512, train: bool = False, rng=None, dp=None):
+    """Apply the MoE layer. x: (B, S, D). Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    tokens = b * s
+    g_sz = min(group_size, tokens)
+    while tokens % g_sz:
+        g_sz -= 1
+    g = tokens // g_sz
+    e, c = cfg.num_experts, _capacity(g_sz, cfg)
+
+    xf = x.reshape(tokens, d)
+    gates, idx, aux = route(params, xf, cfg, train=train, rng=rng)
+
+    # block-local positions in each expert queue
+    onehot = jax.nn.one_hot(idx.reshape(g, g_sz, cfg.top_k), e,
+                            dtype=jnp.int32)                   # (G,n,k,E)
+    flat = onehot.reshape(g, g_sz * cfg.top_k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                         # (G,n*k,E)
+    pos = pos.reshape(g, g_sz, cfg.top_k, e)
+    keep = (pos < c) & (onehot > 0)
+    slot = jax.nn.one_hot(jnp.where(keep, pos, -1), c,
+                          dtype=x.dtype)                       # (G,n,k,E,C)
+    dispatch = slot.sum(2)                                     # (G,n,E,C)
+    gmat = (gates.reshape(g, g_sz, cfg.top_k, 1, 1) * slot).sum(2)
+
+    xg = xf.reshape(g, g_sz, d)
+    xg = constrain(dp, xg, ("exp_groups", None, "embed"), tag="moe/tokens")
+    dispatch = constrain(dp, dispatch, ("exp_groups", None, "experts", None),
+                         tag="moe/dispatch")
+    # EP all-to-all edge: (G blocks on data) -> (E experts on model)
+    ein = jnp.einsum("gnec,gnd->gecd", dispatch, xg)
+    ein = constrain(dp, ein, ("exp_groups", "experts", None, "embed"),
+                    tag="moe/expert_in")
+
+    h = jnp.einsum("gecd,edf->gecf", ein, params["wi"].astype(x.dtype))
+    if "wg" in params:
+        gate = jnp.einsum("gecd,edf->gecf", ein, params["wg"].astype(x.dtype))
+        h = act_fn(act)(gate) * h
+    else:
+        h = act_fn(act)(h)
+    h = constrain(dp, h, ("exp_groups", "experts", None, "expert_mlp"),
+                  tag="moe/hidden")
+    eo = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(x.dtype))
+    eo = constrain(dp, eo, ("exp_groups", "experts", None, "embed"),
+                   tag="moe/expert_out")
+
+    # combine: EP all-to-all back (E on model) -> (G on data)
+    out = jnp.einsum("gnec,gecd->gnd", gmat.astype(x.dtype), eo)
+    out = out.reshape(b, s, d)
+    out = constrain(dp, out, ("batch", "seq", "embed"), tag="moe/out")
+
+    if "dense" in params:  # arctic dense residual
+        from repro.layers.mlp import mlp as dense_mlp
+        out = out + dense_mlp(params["dense"], x, act=act, dp=dp,
+                              tag="moe/dense_residual")
+    return out, aux
+
+
+__all__ = ["moe_init", "moe", "route"]

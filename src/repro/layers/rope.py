@@ -1,0 +1,39 @@
+"""Rotary position embeddings, with per-layer theta (gemma3 uses a larger
+base on global layers than on sliding-window layers)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: jax.Array | float) -> jax.Array:
+    """Inverse frequencies (head_dim//2,). ``theta`` may be a traced scalar
+    (per-layer value inside a scan)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: jax.Array | float = 10_000.0) -> jax.Array:
+    """Rotate ``x`` of shape (..., seq, heads, head_dim) by ``positions``
+    of shape (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., :, None, :]                          # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (max_len, dim)."""
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+__all__ = ["rope_freqs", "apply_rope", "sinusoidal_positions"]

@@ -1,0 +1,233 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM
+(scalar memory with recurrent mixing, inherently sequential).
+
+mLSTM uses the stabilized chunkwise-parallel form (linear attention with
+per-head exponential gating): within a chunk the decay matrix is built in
+log space; across chunks a (C, n, m) state is carried.  Decode is O(1)
+per token — xlstm-350m runs the 500k cell on recurrent state alone.
+
+sLSTM has recurrent weights (h_{t-1} feeds the gates), so it is evaluated
+with ``lax.scan`` over time, block-diagonal per head.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.layers.common import act_fn, constrain, dense_init, rmsnorm, rmsnorm_init
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init(rng, d_model: int, cfg: SSMConfig) -> dict:
+    di = cfg.expand * d_model
+    h = cfg.num_heads
+    r = jax.random.split(rng, 8)
+    return {
+        "up": dense_init(r[0], d_model, 2 * di),
+        "conv": jax.random.normal(r[1], (cfg.conv_width, di), jnp.float32)
+                 / math.sqrt(cfg.conv_width),
+        "conv_bias": jnp.zeros((di,), jnp.float32),
+        "wq": dense_init(r[2], di, di),
+        "wk": dense_init(r[3], di, di),
+        "wv": dense_init(r[4], di, di),
+        "wi": dense_init(r[5], di, h, scale=1e-2),
+        "bi": jnp.zeros((h,), jnp.float32),
+        "wf": dense_init(r[6], di, h, scale=1e-2),
+        "bf": jnp.linspace(3.0, 6.0, h),       # forget-gate bias init (open)
+        "out_norm": rmsnorm_init(di),
+        "down": dense_init(r[7], di, d_model),
+    }
+
+
+def mlstm_state_init(batch: int, d_model: int, cfg: SSMConfig) -> dict:
+    di = cfg.expand * d_model
+    h = cfg.num_heads
+    hd = di // h
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32),
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state, eps=1e-6):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,c,hd); log_i/log_f: (B,H,c); state: dict(C,n,m).
+    Returns (y, new_state)."""
+    b, h, c, hd = q.shape
+    C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    F = jnp.cumsum(log_f, axis=-1)                       # (B,H,c)
+    # log weights for source position s at target t: F_t - F_s + log_i_s
+    lw = F[..., :, None] - F[..., None, :] + log_i[..., None, :]  # (B,H,t,s)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    lw = jnp.where(causal, lw, -jnp.inf)
+    inter_l = F + m0[..., None]                          # (B,H,t) carry weight
+    m_t = jnp.maximum(lw.max(axis=-1), inter_l)          # stabilizer per t
+    D = jnp.exp(lw - m_t[..., None])                     # (B,H,t,s)
+    w_inter = jnp.exp(inter_l - m_t)                     # (B,H,t)
+
+    scale = 1.0 / math.sqrt(hd)
+    qk = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    intra = jnp.einsum("bhts,bhsd->bhtd", qk * D, v)
+    inter = jnp.einsum("bhtd,bhde->bhte", q * scale, C0) * w_inter[..., None]
+    num = intra + inter
+
+    n_t = (jnp.einsum("bhts,bhsd->bhtd", D, k)
+           + n0[..., None, :] * w_inter[..., None])      # (B,H,t,hd)
+    denom = jnp.abs(jnp.einsum("bhtd,bhtd->bht", q * scale, n_t))
+    denom = jnp.maximum(denom, jnp.exp(-m_t)) + eps
+    y = num / denom[..., None]
+
+    # carry to next chunk (state at position c)
+    wc = jnp.exp(F[..., -1:] - F + log_i - m_t[..., -1:])    # (B,H,s)
+    C_new = (C0 * jnp.exp(F[..., -1] + m0 - m_t[..., -1])[..., None, None]
+             + jnp.einsum("bhs,bhsd,bhse->bhde", wc, k, v))
+    n_new = (n0 * jnp.exp(F[..., -1] + m0 - m_t[..., -1])[..., None]
+             + jnp.einsum("bhs,bhsd->bhd", wc, k))
+    return y, {"C": C_new, "n": n_new, "m": m_t[..., -1], "conv": state["conv"]}
+
+
+def mlstm(params: dict, x: jax.Array, cfg: SSMConfig, *,
+          state: dict | None = None, dp=None, chunk: int = 128):
+    """mLSTM block. x: (B,S,D). Returns (out, new_state)."""
+    from repro.layers.mamba import _causal_conv
+    b, s, d = x.shape
+    di = cfg.expand * d
+    h = cfg.num_heads
+    hd = di // h
+
+    xz = jnp.einsum("bsd,de->bse", x, params["up"].astype(x.dtype))
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xm = constrain(dp, xm, ("batch", "seq", "mlp"), tag="mlstm/inner")
+
+    if state is None:
+        state = mlstm_state_init(b, d, cfg)
+    conv_in_tail = state["conv"].astype(xm.dtype)
+    xc, new_tail = _causal_conv(xm, params["conv"], params["conv_bias"],
+                                conv_in_tail)
+    xc = jax.nn.silu(xc)
+
+    def heads(t):  # (B,S,di) -> (B,H,S,hd)
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    q = heads(jnp.einsum("bse,ef->bsf", xc, params["wq"].astype(x.dtype)))
+    k = heads(jnp.einsum("bse,ef->bsf", xc, params["wk"].astype(x.dtype)))
+    v = heads(jnp.einsum("bse,ef->bsf", xm, params["wv"].astype(x.dtype)))
+    log_i = (jnp.einsum("bse,eh->bsh", xc, params["wi"].astype(x.dtype))
+             .astype(jnp.float32) + params["bi"]).transpose(0, 2, 1)
+    log_f_raw = (jnp.einsum("bse,eh->bsh", xc, params["wf"].astype(x.dtype))
+                 .astype(jnp.float32) + params["bf"]).transpose(0, 2, 1)
+    log_f = -jax.nn.softplus(-log_f_raw)                 # log sigmoid
+
+    ck = min(chunk, s)
+    while s % ck:
+        ck -= 1
+    nc = s // ck
+
+    def chunk_step(st, args):
+        qc, kc, vc, lic, lfc = args
+        y, st = _mlstm_chunk(qc.astype(jnp.float32), kc.astype(jnp.float32),
+                             vc.astype(jnp.float32), lic, lfc, st)
+        return st, y
+
+    resh = lambda t: t.reshape(b, h, nc, ck, -1).transpose(2, 0, 1, 3, 4)
+    reshg = lambda t: t.reshape(b, h, nc, ck).transpose(2, 0, 1, 3)
+    st = dict(state)
+    st, ys = jax.lax.scan(chunk_step, st,
+                          (resh(q), resh(k), resh(v), reshg(log_i), reshg(log_f)))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["down"].astype(x.dtype))
+    out = constrain(dp, out, ("batch", "seq", "embed"), tag="mlstm/out")
+    st["conv"] = new_tail.astype(jnp.float32)
+    return out, st
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init(rng, d_model: int, cfg: SSMConfig) -> dict:
+    h = cfg.num_heads
+    hd = d_model // h
+    r = jax.random.split(rng, 4)
+    dff = int(d_model * 4 / 3)
+    return {
+        "w": dense_init(r[0], d_model, 4 * d_model),     # i,f,z,o
+        "r": (jax.random.normal(r[1], (h, hd, 4 * hd), jnp.float32)
+              / math.sqrt(hd)),
+        "b": jnp.concatenate([jnp.zeros((d_model,)),
+                              jnp.full((d_model,), 3.0),   # forget bias open
+                              jnp.zeros((2 * d_model,))]),
+        "ffn": {
+            "wi": dense_init(r[2], d_model, dff),
+            "wg": dense_init(r[2], d_model, dff),
+            "wo": dense_init(r[3], dff, d_model),
+        },
+        "ffn_norm": rmsnorm_init(d_model),
+    }
+
+
+def slstm_state_init(batch: int, d_model: int, cfg: SSMConfig) -> dict:
+    return {"h": jnp.zeros((batch, d_model), jnp.float32),
+            "c": jnp.zeros((batch, d_model), jnp.float32),
+            "n": jnp.ones((batch, d_model), jnp.float32),
+            "m": jnp.zeros((batch, d_model), jnp.float32)}
+
+
+def slstm(params: dict, x: jax.Array, cfg: SSMConfig, *,
+          state: dict | None = None, dp=None):
+    """sLSTM layer + gated FFN. x: (B,S,D). Returns (out, new_state)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    if state is None:
+        state = slstm_state_init(b, d, cfg)
+
+    wx = (jnp.einsum("bsd,de->bse", x, params["w"].astype(x.dtype))
+          .astype(jnp.float32) + params["b"])             # (B,S,4d)
+
+    R = params["r"]                                       # (H,hd,4hd)
+
+    def step(st, wx_t):
+        hp = st["h"].reshape(b, h, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hp, R).reshape(b, 4 * d)
+        gi, gf, gz, go = jnp.split(wx_t + rec, 4, axis=-1)
+        m_new = jnp.maximum(gf + st["m"], gi)
+        i = jnp.exp(gi - m_new)
+        f = jnp.exp(gf + st["m"] - m_new)
+        c = f * st["c"] + i * jnp.tanh(gz)
+        n = f * st["n"] + i
+        hh = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return {"h": hh, "c": c, "n": n, "m": m_new}, hh
+
+    state, ys = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).astype(x.dtype)                 # (B,S,D)
+
+    # gated FFN sub-block (proj factor 4/3)
+    yn = rmsnorm(params["ffn_norm"], y)
+    f = params["ffn"]
+    hdn = jax.nn.gelu(jnp.einsum("bsd,df->bsf", yn, f["wg"].astype(x.dtype))) \
+        * jnp.einsum("bsd,df->bsf", yn, f["wi"].astype(x.dtype))
+    hdn = constrain(dp, hdn, ("batch", "seq", "mlp"), tag="slstm/ffn")
+    out = y + jnp.einsum("bsf,fd->bsd", hdn, f["wo"].astype(x.dtype))
+    out = constrain(dp, out, ("batch", "seq", "embed"), tag="slstm/out")
+    return out, state
+
+
+__all__ = [
+    "mlstm_init", "mlstm", "mlstm_state_init",
+    "slstm_init", "slstm", "slstm_state_init",
+]

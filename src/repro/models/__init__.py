@@ -1,0 +1,6 @@
+"""Model zoo: dense/MoE/VLM transformer, hymba hybrid, xLSTM, whisper
+enc-dec — all behind one Model interface."""
+
+from repro.models.api import Model, build_model, cache_specs, input_specs, make_batch
+
+__all__ = ["Model", "build_model", "cache_specs", "input_specs", "make_batch"]

@@ -1,0 +1,236 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB (per assignment): ``input_specs`` provides
+precomputed frame features (B, T_enc, n_mels) which a linear projection
+lifts to d_model.  Encoder layers are bidirectional; decoder layers are
+causal self-attention + cross-attention over the encoder output.
+Positions are sinusoidal (whisper uses learned/sinusoidal, no RoPE).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import attend, attention_init, output_project, qkv_project
+from repro.layers.common import constrain, dense_init, dtype_of, rmsnorm, rmsnorm_init, stacked_init
+from repro.layers.embedding import embed, embedding_init, logits as logits_fn
+from repro.layers.kvcache import kv_cache_init, kv_update
+from repro.layers.mlp import mlp, mlp_init
+from repro.layers.rope import sinusoidal_positions
+from repro.models.losses import ce_metrics, chunked_ce_loss
+
+
+def encdec_init(rng, cfg: ModelConfig) -> dict:
+    a = cfg.attention
+    r = jax.random.split(rng, 5)
+
+    def enc_layer(lr):
+        ks = jax.random.split(lr, 2)
+        return {
+            "norm1": rmsnorm_init(cfg.d_model),
+            "attn": attention_init(ks[0], cfg.d_model, a.num_heads,
+                                   a.num_kv_heads, cfg.head_dim),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=False),
+        }
+
+    def dec_layer(lr):
+        ks = jax.random.split(lr, 3)
+        return {
+            "norm1": rmsnorm_init(cfg.d_model),
+            "self_attn": attention_init(ks[0], cfg.d_model, a.num_heads,
+                                        a.num_kv_heads, cfg.head_dim),
+            "norm_x": rmsnorm_init(cfg.d_model),
+            "cross_attn": attention_init(ks[1], cfg.d_model, a.num_heads,
+                                         a.num_kv_heads, cfg.head_dim),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, gated=False),
+        }
+
+    return {
+        "frontend": dense_init(r[0], cfg.frontend_dim, cfg.d_model),
+        "enc_layers": stacked_init(r[1], cfg.encoder_layers, enc_layer),
+        "enc_norm": rmsnorm_init(cfg.d_model),
+        "embed": embedding_init(r[2], cfg.vocab_size, cfg.d_model,
+                                tied=cfg.tie_embeddings),
+        "layers": stacked_init(r[3], cfg.num_layers, dec_layer),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, *, dp=None,
+           impl="flash"):
+    """frames: (B, T, n_mels) -> (B, T, D)."""
+    dtype = dtype_of(cfg.dtype)
+    a = cfg.attention
+    x = jnp.einsum("btf,fd->btd", frames.astype(dtype),
+                   params["frontend"].astype(dtype))
+    t = x.shape[1]
+    x = x + sinusoidal_positions(t, cfg.d_model).astype(dtype)
+    x = constrain(dp, x, ("batch", "seq", "embed"), tag="enc/in")
+    positions = jnp.arange(t, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(lp["attn"], h, num_kv_heads=a.num_kv_heads,
+                              positions=positions, theta=None,
+                              qk_norm=False, eps=cfg.norm_eps, dp=dp)
+        o = attend(q, k, v, q_pos=positions, k_pos=positions,
+                   causal=False, window=None, impl=impl)
+        x = x + output_project(lp["attn"], o, dp=dp)
+        h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h, act=cfg.act_fn, dp=dp)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(lp, x, enc, *, cfg, dp, positions, enc_positions, mode,
+               cache_k=None, cache_v=None, cross_k=None, cross_v=None,
+               cache_pos=None, impl="flash"):
+    a = cfg.attention
+    # self attention
+    h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    q, k, v = qkv_project(lp["self_attn"], h, num_kv_heads=a.num_kv_heads,
+                          positions=positions, theta=None, qk_norm=False,
+                          eps=cfg.norm_eps, dp=dp)
+    if mode == "decode":
+        cache_k, cache_v = kv_update(cache_k, cache_v, k, v, cache_pos)
+        s_max = cache_k.shape[1]
+        k_pos = jnp.arange(s_max, dtype=jnp.int32)
+        o = attend(q, cache_k, cache_v, q_pos=positions, k_pos=k_pos,
+                   causal=True, window=None, k_valid=k_pos <= cache_pos,
+                   impl="flash", q_block=1)
+    else:
+        if cache_k is not None:
+            cache_k, cache_v = kv_update(cache_k, cache_v, k, v, 0)
+        o = attend(q, k, v, q_pos=positions, k_pos=positions, causal=True,
+                   window=None, impl=impl)
+    x = x + output_project(lp["self_attn"], o, dp=dp)
+
+    # cross attention
+    h = rmsnorm(lp["norm_x"], x, cfg.norm_eps)
+    if mode == "decode":
+        qc = jnp.einsum("bsd,dhe->bshe", h,
+                        lp["cross_attn"]["wq"].astype(h.dtype))
+        kc, vc = cross_k, cross_v
+    else:
+        qc, kc, vc = qkv_project(lp["cross_attn"], h,
+                                 num_kv_heads=a.num_kv_heads,
+                                 positions=positions, theta=None,
+                                 qk_norm=False, eps=cfg.norm_eps, dp=dp,
+                                 kv_input=enc)
+        cross_k, cross_v = kc, vc
+    o = attend(qc, kc, vc, q_pos=positions, k_pos=enc_positions,
+               causal=False, window=None, impl=impl)
+    x = x + output_project(lp["cross_attn"], o, dp=dp)
+
+    # mlp
+    h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    x = x + mlp(lp["mlp"], h, act=cfg.act_fn, dp=dp)
+    x = constrain(dp, x, ("batch", "seq_resid", "embed"), tag="layer/out")
+    return x, cache_k, cache_v, cross_k, cross_v
+
+
+def encdec_apply(params, cfg: ModelConfig, batch: dict, *, dp=None,
+                 cache=None, train=False, remat="none", impl="flash"):
+    dtype = dtype_of(cfg.dtype)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    enc = encode(params, cfg, batch["frames"], dp=dp, impl=impl)
+    t = enc.shape[1]
+    enc_positions = jnp.arange(t, dtype=jnp.int32)
+
+    x = embed(params["embed"], tokens, dtype, scale=False, dp=dp)
+    x = x + sinusoidal_positions(s, cfg.d_model).astype(dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    mode = "prefill" if cache is not None else "train"
+
+    def body(x, xs):
+        if cache is not None:
+            lp, ck, cv = xs
+        else:
+            lp = xs
+            ck = cv = None
+        x, ck, cv, xk, xv = _dec_layer(
+            lp, x, enc, cfg=cfg, dp=dp, positions=positions,
+            enc_positions=enc_positions, mode=mode, cache_k=ck, cache_v=cv,
+            impl=impl)
+        ys = (ck, cv, xk, xv) if cache is not None else None
+        return x, ys
+
+    if remat in ("full", "dots"):
+        pol = None if remat == "full" else jax.checkpoint_policies.checkpoint_dots
+        body = jax.checkpoint(body, policy=pol, prevent_cse=False)
+
+    xs = (params["layers"], cache["k"], cache["v"]) if cache is not None \
+        else params["layers"]
+    x, ys = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": ys[0], "v": ys[1], "cross_k": ys[2],
+                     "cross_v": ys[3]}
+    return x, jnp.zeros((), jnp.float32), new_cache, 0
+
+
+def encdec_loss(params, cfg, batch, *, dp=None, rng=None, remat="none",
+                impl="flash"):
+    x, aux, _, _ = encdec_apply(params, cfg, batch, dp=dp, train=True,
+                                remat=remat, impl=impl)
+    table = params["embed"].get("head", params["embed"]["tok"])
+    loss, correct, count = chunked_ce_loss(x, table, batch["labels"], dp=dp)
+    m = ce_metrics(loss, correct, count, aux)
+    return m["loss"], m
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    a = cfg.attention
+    kv = kv_cache_init(cfg.num_layers, batch, max_len, a.num_kv_heads,
+                       cfg.head_dim, dtype=dtype_of(cfg.dtype))
+    # cross k/v get filled at prefill (encoder length)
+    t = cfg.encoder_max_len
+    kv["cross_k"] = jnp.zeros((cfg.num_layers, batch, t, a.num_kv_heads,
+                               cfg.head_dim), dtype_of(cfg.dtype))
+    kv["cross_v"] = jnp.zeros_like(kv["cross_k"])
+    return kv
+
+
+def encdec_prefill(params, cfg, batch, cache, *, dp=None, impl="flash"):
+    x, _aux, cache, _ = encdec_apply(params, cfg, batch, dp=dp, cache=cache,
+                                     impl=impl)
+    return logits_fn(params["embed"], x[:, -1:, :], dp=dp), cache
+
+
+def encdec_decode_step(params, cfg, token, cache, pos, *, dp=None, **_):
+    dtype = dtype_of(cfg.dtype)
+    b = token.shape[0]
+    x = embed(params["embed"], token, dtype, scale=False, dp=dp)
+    # sinusoidal position for the current step
+    tbl = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(tbl, pos, 1, 0)[None].astype(dtype)
+    positions = jnp.full((1,), pos, jnp.int32)
+    t = cache["cross_k"].shape[2]
+    enc_positions = jnp.arange(t, dtype=jnp.int32)
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        x, ck, cv, _, _ = _dec_layer(
+            lp, x, None, cfg=cfg, dp=dp, positions=positions,
+            enc_positions=enc_positions, mode="decode", cache_k=ck,
+            cache_v=cv, cross_k=xk, cross_v=xv, cache_pos=pos)
+        return x, (ck, cv, xk, xv)
+
+    xs = (params["layers"], cache["k"], cache["v"], cache["cross_k"],
+          cache["cross_v"])
+    x, ys = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = {"k": ys[0], "v": ys[1], "cross_k": ys[2], "cross_v": ys[3]}
+    return logits_fn(params["embed"], x, dp=dp), new_cache
+
+
+__all__ = ["encdec_init", "encdec_apply", "encdec_loss", "encdec_init_cache",
+           "encdec_prefill", "encdec_decode_step", "encode"]

@@ -1,0 +1,63 @@
+"""Loss functions. Cross-entropy is computed in sequence chunks so the
+(B, S, vocab) logits tensor is never materialized — at vocab 262k /
+seq 4k this is the difference between fitting and not fitting HBM."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import constrain
+
+
+def chunked_ce_loss(x: jax.Array, table: jax.Array, labels: jax.Array, *,
+                    dp=None, chunk: int = 512, softcap_val: float = 0.0):
+    """Cross entropy of final hiddens ``x`` (B,S,D) against ``labels``
+    (B,S; -1 = ignore) with tied/untied vocab ``table`` (V,D).
+
+    Returns (sum_loss, sum_correct, sum_count)."""
+    b, s, d = x.shape
+    ck = min(chunk, s)
+    while s % ck:
+        ck -= 1
+    nc = s // ck
+    xc = x.reshape(b, nc, ck, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, ck).swapaxes(0, 1)
+    table = constrain(dp, table, ("vocab", "embed"), tag="loss/table")
+
+    @jax.checkpoint
+    def step(carry, args):
+        # rematted: the (b, chunk, vocab) logits are recomputed in backward
+        # instead of saved — the difference between fitting HBM and not at
+        # vocab 262k.
+        loss, correct, count = carry
+        xi, li = args
+        logits = jnp.einsum("bsd,vd->bsv", xi, table.astype(xi.dtype),
+                            preferred_element_type=jnp.float32)
+        if softcap_val > 0:
+            logits = softcap_val * jnp.tanh(logits / softcap_val)
+        logits = constrain(dp, logits, ("batch", "seq", "vocab"),
+                           tag="loss/logits")
+        mask = li >= 0
+        safe = jnp.where(mask, li, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - gold, 0.0)
+        pred = logits.argmax(axis=-1)
+        return (loss + nll.sum(),
+                correct + jnp.where(mask, pred == safe, False).sum(),
+                count + mask.sum()), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32))
+    (loss, correct, count), _ = jax.lax.scan(step, init, (xc, lc))
+    return loss, correct, count
+
+
+def ce_metrics(loss, correct, count, aux=0.0):
+    n = jnp.maximum(count, 1)
+    return {"loss": loss / n + aux, "nll": loss / n,
+            "acc": correct / n, "tokens": count, "aux": aux}
+
+
+__all__ = ["chunked_ce_loss", "ce_metrics"]

@@ -1,0 +1,266 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM families
+(gemma3-4b/1b, granite-34b/3-2b, llava-next-34b, arctic-480b, grok-1-314b).
+
+The layer stack is a single ``lax.scan`` over stacked per-layer params;
+per-layer heterogeneity (gemma3's 5:1 local:global pattern, per-layer RoPE
+theta) rides along as scanned flag arrays, so the traced HLO contains ONE
+layer body regardless of depth — which is what keeps 88-layer granite
+compilable at 512-way SPMD.
+
+All communication edges are issued through the CoRD dataplane (``dp``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import attend, attention_init, output_project, qkv_project
+from repro.layers.common import constrain, dense_init, dtype_of, rmsnorm, rmsnorm_init, stacked_init
+from repro.layers.embedding import embed, embedding_init
+from repro.layers.kvcache import kv_cache_init, kv_update
+from repro.layers.mlp import mlp, mlp_init
+from repro.layers.moe import moe, moe_init
+from repro.models.losses import ce_metrics, chunked_ce_loss
+
+BIG_WINDOW = 0  # window value meaning "no window" in make_mask
+
+
+# ---------------------------------------------------------------------------
+# per-layer flags (local/global pattern, per-layer rope theta)
+# ---------------------------------------------------------------------------
+
+def layer_flags(cfg: ModelConfig) -> tuple[np.ndarray, np.ndarray]:
+    a = cfg.attention
+    L = cfg.num_layers
+    if a.local_global_ratio > 0 and a.sliding_window > 0:
+        # pattern: r local layers then 1 global, repeating (gemma3)
+        r = a.local_global_ratio
+        is_global = np.array([(i % (r + 1)) == r for i in range(L)])
+    elif cfg.family == "hybrid" and a.sliding_window > 0:
+        # hymba: first / middle / last layers are global
+        is_global = np.zeros(L, bool)
+        is_global[[0, L // 2, L - 1]] = True
+    elif a.sliding_window > 0:
+        is_global = np.zeros(L, bool)
+    else:
+        is_global = np.ones(L, bool)
+    theta_g = a.rope_theta_global or a.rope_theta
+    theta = np.where(is_global, theta_g, a.rope_theta).astype(np.float32)
+    window = np.where(is_global, 0, a.sliding_window).astype(np.int32)
+    return window, theta
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def transformer_init(rng, cfg: ModelConfig) -> dict:
+    a = cfg.attention
+    r = jax.random.split(rng, 4)
+
+    def one_layer(lr):
+        ks = jax.random.split(lr, 2)
+        p = {
+            "norm1": rmsnorm_init(cfg.d_model),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "attn": attention_init(ks[0], cfg.d_model, a.num_heads,
+                                   a.num_kv_heads, cfg.head_dim,
+                                   qk_norm=a.qk_norm),
+        }
+        if cfg.family == "moe":
+            p["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.moe,
+                                gated=cfg.gated_mlp)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                gated=cfg.gated_mlp)
+        return p
+
+    params = {
+        "embed": embedding_init(r[0], cfg.vocab_size, cfg.d_model,
+                                tied=cfg.tie_embeddings),
+        "layers": stacked_init(r[1], cfg.num_layers, one_layer),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.family == "vlm":
+        params["vision_proj"] = dense_init(r[2], cfg.frontend_dim, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer body (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _layer(lp, x, *, cfg, dp, positions, window, theta, mode,
+           cache_k=None, cache_v=None, cache_pos=None, kv_len=None,
+           train=False, impl="flash", q_block=512, kv_block=1024):
+    a = cfg.attention
+    h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    q, k, v = qkv_project(lp["attn"], h, num_kv_heads=a.num_kv_heads,
+                          positions=positions, theta=theta,
+                          qk_norm=a.qk_norm, eps=cfg.norm_eps, dp=dp)
+    aux = jnp.zeros((), jnp.float32)
+    if mode == "train":
+        o = attend(q, k, v, q_pos=positions, k_pos=positions,
+                   causal=True, window=window, logit_cap=a.logit_softcap,
+                   impl=impl, q_block=q_block, kv_block=kv_block)
+        new_ck = new_cv = None
+    elif mode == "prefill":
+        cache_k, cache_v = kv_update(cache_k, cache_v, k, v, 0)
+        o = attend(q, k, v, q_pos=positions, k_pos=positions,
+                   causal=True, window=window, logit_cap=a.logit_softcap,
+                   impl=impl, q_block=q_block, kv_block=kv_block)
+        new_ck, new_cv = cache_k, cache_v
+    else:  # decode: q len 1 against the cache
+        cache_k, cache_v = kv_update(cache_k, cache_v, k, v, cache_pos)
+        s_max = cache_k.shape[1]
+        k_pos = jnp.arange(s_max, dtype=jnp.int32)
+        k_valid = k_pos <= cache_pos
+        ck = constrain(dp, cache_k,
+                       ("batch", "kv_seq", "kv_heads", "cache_head_dim"),
+                       tag="attn/cache_k")
+        cv = constrain(dp, cache_v,
+                       ("batch", "kv_seq", "kv_heads", "cache_head_dim"),
+                       tag="attn/cache_v")
+        o = attend(q, ck, cv, q_pos=positions, k_pos=k_pos, causal=True,
+                   window=window, logit_cap=a.logit_softcap, k_valid=k_valid,
+                   impl="flash", q_block=1, kv_block=kv_block)
+        new_ck, new_cv = cache_k, cache_v
+    x = x + output_project(lp["attn"], o, dp=dp)
+
+    h = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = moe(lp["moe"], h, cfg.moe, act=cfg.act_fn, train=train,
+                     dp=dp)
+    else:
+        f = mlp(lp["mlp"], h, act=cfg.act_fn, dp=dp)
+    x = x + f
+    x = constrain(dp, x, ("batch", "seq_resid", "embed"), tag="layer/out")
+    return x, aux, new_ck, new_cv
+
+
+# ---------------------------------------------------------------------------
+# full-sequence apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+def transformer_apply(params, cfg: ModelConfig, batch: dict, *, dp=None,
+                      cache=None, train=False, remat="none", impl="flash",
+                      q_block=512, kv_block=1024):
+    """Returns (final_hiddens, aux_loss, new_cache, prefix_len)."""
+    dtype = dtype_of(cfg.dtype)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, dtype, dp=dp)
+    prefix = 0
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(dtype),
+                        params["vision_proj"].astype(dtype))
+        pe = constrain(dp, pe, ("batch", "seq", "embed"), tag="vision/proj")
+        x = jnp.concatenate([pe, x], axis=1)
+        prefix = pe.shape[1]
+        s = s + prefix
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    window_arr, theta_arr = layer_flags(cfg)
+    mode = "prefill" if cache is not None else "train"
+
+    def body(carry, xs):
+        x, aux = carry
+        if cache is not None:
+            lp, w, th, ck, cv = xs
+        else:
+            lp, w, th = xs
+            ck = cv = None
+        x, a, ck, cv = _layer(lp, x, cfg=cfg, dp=dp, positions=positions,
+                              window=w, theta=th, mode=mode, cache_k=ck,
+                              cache_v=cv, train=train, impl=impl,
+                              q_block=q_block, kv_block=kv_block)
+        out = (ck, cv) if cache is not None else None
+        return (x, aux + a), out
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots,
+            prevent_cse=False)
+
+    xs = (params["layers"], jnp.asarray(window_arr), jnp.asarray(theta_arr))
+    if cache is not None:
+        xs = xs + (cache["k"], cache["v"])
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": caches[0], "v": caches[1]}
+    return x, aux, new_cache, prefix
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def transformer_loss(params, cfg: ModelConfig, batch: dict, *, dp=None,
+                     rng=None, remat="none", impl="flash"):
+    x, aux, _, prefix = transformer_apply(params, cfg, batch, dp=dp,
+                                          train=True, remat=remat, impl=impl)
+    if prefix:
+        x = x[:, prefix:]
+    table = params["embed"].get("head", params["embed"]["tok"])
+    loss, correct, count = chunked_ce_loss(x, table, batch["labels"], dp=dp)
+    m = ce_metrics(loss, correct, count, aux)
+    return m["loss"], m
+
+
+def transformer_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    a = cfg.attention
+    return kv_cache_init(cfg.num_layers, batch, max_len, a.num_kv_heads,
+                         cfg.head_dim, dtype=dtype_of(cfg.dtype))
+
+
+def transformer_prefill(params, cfg: ModelConfig, batch: dict, cache, *,
+                        dp=None, impl="flash"):
+    """Fill the cache with the prompt; returns (last_hidden_logits, cache)."""
+    # caches sized >= prompt length; positions start at 0
+    x, _aux, cache, _ = transformer_apply(params, cfg, batch, dp=dp,
+                                          cache=cache, impl=impl)
+    from repro.layers.embedding import logits as logits_fn
+    last = x[:, -1:, :]
+    return logits_fn(params["embed"], last, dp=dp), cache
+
+
+def transformer_decode_step(params, cfg: ModelConfig, token, cache, pos, *,
+                            dp=None, kv_block=1024):
+    """One decode step. token: (B,1) int32; pos: scalar int32 (current
+    write position = number of tokens already in cache)."""
+    dtype = dtype_of(cfg.dtype)
+    b = token.shape[0]
+    x = embed(params["embed"], token, dtype, dp=dp)
+    positions = jnp.full((1,), pos, jnp.int32)
+    window_arr, theta_arr = layer_flags(cfg)
+
+    def body(x, xs):
+        lp, w, th, ck, cv = xs
+        x, _aux, ck, cv = _layer(lp, x, cfg=cfg, dp=dp, positions=positions,
+                                 window=w, theta=th, mode="decode",
+                                 cache_k=ck, cache_v=cv, cache_pos=pos,
+                                 kv_block=kv_block)
+        return x, (ck, cv)
+
+    xs = (params["layers"], jnp.asarray(window_arr), jnp.asarray(theta_arr),
+          cache["k"], cache["v"])
+    x, caches = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    from repro.layers.embedding import logits as logits_fn
+    return logits_fn(params["embed"], x, dp=dp), {"k": caches[0], "v": caches[1]}
+
+
+__all__ = [
+    "transformer_init", "transformer_apply", "transformer_loss",
+    "transformer_init_cache", "transformer_prefill",
+    "transformer_decode_step", "layer_flags",
+]

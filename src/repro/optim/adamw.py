@@ -1,0 +1,89 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping.
+
+Self-contained (no optax): init/update pure functions over pytrees, so
+optimizer state shards exactly like the parameters.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def warmup_cosine(cfg: TrainConfig, total_steps: int | None = None):
+    total = total_steps or max(cfg.steps, 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(total - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+    return schedule
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, jnp.asarray(0.0)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_init(params, opt_dtype: str = "float32") -> AdamWState:
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[opt_dtype]
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, dt), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: TrainConfig,
+                 schedule=None):
+    """Returns (new_params, new_state, stats)."""
+    schedule = schedule or warmup_cosine(cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(step)
+    b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        mdt = m.dtype
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(mdt), v32.astype(mdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    stats = {"lr": lr, "grad_norm": gnorm}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), stats
+
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "warmup_cosine",
+           "clip_by_global_norm"]

@@ -1,0 +1,15 @@
+from repro.parallel.sharding import (
+    DATA,
+    MODEL,
+    POD,
+    activation_rules,
+    batch_specs,
+    cache_spec_tree,
+    param_specs,
+    spec_for_param,
+)
+
+__all__ = [
+    "DATA", "MODEL", "POD", "activation_rules", "batch_specs",
+    "cache_spec_tree", "param_specs", "spec_for_param",
+]

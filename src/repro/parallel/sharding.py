@@ -1,0 +1,253 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP over pod/data/model) and
+per-parameter PartitionSpec derivation.
+
+Activations are constrained through the dataplane using *logical* names
+("batch", "heads", "mlp", ...); these rule tables map them to mesh axes.
+Parameters get specs from path-pattern rules (``param_specs``), TP-sharding
+attention heads / MLP hidden / vocab / experts over the ``model`` axis,
+with optional FSDP sharding of the remaining large dimension over
+``data``.
+
+Shape-cell specialisations:
+  * train / prefill / decode: batch → (pod, data)
+  * long-context decode (batch=1): KV sequence → (data, model) —
+    sequence-parallel attention, GSPMD inserts the reduction collectives.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+DATA = "data"
+MODEL = "model"
+POD = "pod"
+
+
+def activation_rules(cfg: ModelConfig, shape: ShapeConfig, *,
+                     multi_pod: bool = False,
+                     seq_shard_prefill: bool = True,
+                     model_size: int = 16) -> dict:
+    """Logical-name -> mesh-axis rules for activation constraints.
+
+    Head axes are only mapped to ``model`` when the head count is at least
+    the axis size (GSPMD pads the remainder, ≤2× waste); below that the
+    padding blow-up is worse than replicating the attention activations
+    (measured: KVH=1 padded to 16 materializes a 16× K buffer)."""
+    batch_axes = (POD, DATA) if multi_pod else (DATA,)
+    long_ctx = shape.kind == "decode" and shape.global_batch == 1
+    a = cfg.attention
+    rules = {
+        "batch": batch_axes if not long_ctx else None,
+        "seq": None,
+        "embed": None,
+        # heads shard only when they divide-ish the axis (≥ axis size):
+        # padding 8→16 was MEASURED to double collective time (padded q/k
+        # reshards) for a smaller compute win — see EXPERIMENTS.md §Perf
+        # gemma3-4b iteration 1 (refuted).
+        "heads": MODEL if a.num_heads >= model_size else None,
+        "kv_heads": MODEL if a.num_kv_heads >= model_size else None,
+        "mlp": MODEL,
+        "expert_mlp": None,
+        "vocab": MODEL,
+        "experts": MODEL,
+        "exp_groups": batch_axes,
+        "kv_seq": None,
+        "head_dim": None,
+        # sequence-parallel residual stream (Megatron-SP): the residual /
+        # norm segments and the remat-saved layer inputs shard over model,
+        # re-gathered inside attention/MLP by GSPMD (reduce-scatter +
+        # all-gather replaces the post-projection psum).
+        "seq_resid": MODEL if shape.kind in ("train", "prefill") else None,
+    }
+    if shape.kind == "decode":
+        # decode activations are (B, 1, H, hd) — tiny; constraining them on
+        # heads only forces weight-side resharding/padding (measured 7.7 GiB
+        # padded wq stacks on arctic). Let GSPMD place them.
+        rules["heads"] = None
+        rules["kv_heads"] = None
+    rules["cache_head_dim"] = None
+    if rules["kv_heads"] is None and not long_ctx and \
+            shape.kind in ("decode", "prefill"):
+        # KV heads don't divide the model axis: shard the KV *cache* over
+        # head_dim instead — dynamic cache updates stay local, GSPMD adds a
+        # small psum on decode logits.  (Without this, arctic's 300 GB
+        # decode cache and llava's 16 GB/device prefill cache replicate.)
+        rules["cache_head_dim"] = MODEL
+        if shape.kind == "decode":
+            rules["head_dim"] = MODEL
+    if long_ctx:
+        # batch=1: shard the KV cache sequence across the whole mesh (SP)
+        rules["kv_seq"] = (batch_axes + (MODEL,)) if multi_pod \
+            else (DATA, MODEL)
+        rules["heads"] = None
+        rules["kv_heads"] = None
+        rules["mlp"] = MODEL
+    if shape.kind == "prefill" and seq_shard_prefill:
+        # sequence parallelism only when the batch cannot fill the data
+        # axis — sharding seq while replicating batch is a memory disaster
+        # (measured: llava prefill_32k at 481 GiB/device).
+        data_size = 16
+        if shape.global_batch < data_size:
+            rules["seq"] = DATA
+            rules["batch"] = (POD,) if multi_pod else None
+            rules["exp_groups"] = (POD,) if multi_pod else None
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by path pattern
+# ---------------------------------------------------------------------------
+
+# (regex over the param path, spec for the LAST ndims of the leaf)
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/(tok|head)$", (MODEL, None)),             # vocab-sharded tables
+    (r"attn.*/(wq|wk|wv)$", (None, MODEL, None)),      # heads sharded
+    (r"attn.*/wo$", (MODEL, None)),
+    (r"(q_norm|k_norm)/scale$", (None,)),
+    (r"moe/router$", (None, MODEL)),
+    (r"moe/(wi|wg|wo)$", (MODEL, None, None)),         # experts sharded
+    (r"moe/dense/(wi|wg)$", (None, MODEL)),
+    (r"moe/dense/wo$", (MODEL, None)),
+    (r"mlp/(wi|wg)$", (None, MODEL)),
+    (r"mlp/wo$", (MODEL, None)),
+    (r"ffn/(wi|wg)$", (None, MODEL)),
+    (r"ffn/wo$", (MODEL, None)),
+    (r"mamba/in_proj$", (None, MODEL)),
+    (r"mamba/(out_proj|x_proj)$", (MODEL, None)),
+    (r"mamba/dt_proj$", (None, MODEL)),
+    (r"mamba/(conv|A_log)$", (None, MODEL) ),
+    (r"mamba/(conv_bias|dt_bias|D)$", (MODEL,)),
+    (r"core/up$", (None, MODEL)),
+    (r"core/(down)$", (MODEL, None)),
+    (r"core/(wq|wk|wv)$", (None, MODEL)),
+    (r"core/conv$", (None, MODEL)),
+    (r"core/(conv_bias)$", (MODEL,)),
+    (r"core/w$", (None, MODEL)),
+    (r"vision_proj$", (None, MODEL)),
+    (r"frontend$", (None, None)),
+]
+
+_FSDP_BLOCKLIST = re.compile(r"(norm|bias|scale|b[if]?$|/D$|A_log|conv)")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axis_size(axis, mesh_sizes: dict) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh_sizes.get(a, 1)
+        return n
+    return mesh_sizes.get(axis, 1)
+
+
+# Serving (decode/prefill) 2D expert sharding: experts over model AND the
+# FFN dim over data, statically resident — no ZeRO-style regathers on the
+# latency path.  Contractions over the data-sharded dim become psums.
+_SERVE_MOE_RULES: list[tuple[str, tuple]] = [
+    (r"moe/(wi|wg)$", (MODEL, None, DATA)),
+    (r"moe/wo$", (MODEL, DATA, None)),
+]
+
+
+def spec_for_param(path: str, ndim: int, shape: tuple, *,
+                   fsdp: bool = False, mesh_sizes: dict | None = None,
+                   serve_moe_2d: bool = False) -> P:
+    """Derive the PartitionSpec for a parameter leaf.
+
+    ``mesh_sizes`` (axis name -> size): axes that do not divide the dim are
+    dropped (in/out shardings must divide exactly, unlike constraints)."""
+    mesh_sizes = mesh_sizes or {}
+
+    def fits(i, axis):
+        return shape[i] % _axis_size(axis, mesh_sizes) == 0
+
+    rules = (_SERVE_MOE_RULES + _PARAM_RULES) if serve_moe_2d else _PARAM_RULES
+    for pat, tail in rules:
+        if re.search(pat, path):
+            if len(tail) > ndim:
+                return P()
+            spec = [None] * (ndim - len(tail)) + list(tail)
+            spec = [s if fits(i, s) else None for i, s in enumerate(spec)]
+            if fsdp and not _FSDP_BLOCKLIST.search(path):
+                # shard the largest remaining unsharded dim over data
+                free = [i for i, s in enumerate(spec) if s is None]
+                if free:
+                    big = max(free, key=lambda i: shape[i])
+                    if shape[big] >= 64 and fits(big, DATA):
+                        spec[big] = DATA
+            return P(*spec)
+    return P()  # replicate by default (norms, biases, small tensors)
+
+
+def param_specs(params_tree, *, fsdp: bool = False,
+                mesh_sizes: dict | None = None, serve_moe_2d: bool = False):
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays)."""
+    def leaf_spec(path, leaf):
+        return spec_for_param(_path_str(path), leaf.ndim, tuple(leaf.shape),
+                              fsdp=fsdp, mesh_sizes=mesh_sizes,
+                              serve_moe_2d=serve_moe_2d)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def filter_spec(spec: P, shape: tuple, mesh_sizes: dict | None) -> P:
+    """Drop spec axes that do not divide the corresponding dim exactly
+    (required for jit in/out shardings, unlike constraints)."""
+    if mesh_sizes is None:
+        return spec
+    out = []
+    for i, s in enumerate(tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        out.append(s if shape[i] % _axis_size(s, mesh_sizes) == 0 else None)
+    return P(*out)
+
+
+def cache_spec_tree(cache_tree, rules: dict, mesh_sizes: dict | None = None):
+    """Specs for decode caches: (L, B, S, KVH, hd) KV tensors get
+    (None, batch, kv_seq, kv_heads, None); recurrent states get batch."""
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        if re.search(r"(^|/)(k|v|cross_k|cross_v)$", p) and leaf.ndim == 5:
+            spec = P(None, rules.get("batch"), rules.get("kv_seq"),
+                     rules.get("kv_heads"), rules.get("cache_head_dim"))
+        elif leaf.ndim >= 2:
+            spec = P(None, rules.get("batch"))
+        else:
+            spec = P()
+        return filter_spec(spec, tuple(leaf.shape), mesh_sizes)
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def batch_specs(batch_tree, rules: dict, mesh_sizes: dict | None = None):
+    """Specs for input batches: leading dim = batch, text dims replicated."""
+    def leaf_spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.ndim >= 2 and rules.get("seq") is not None:
+            spec = P(rules.get("batch"), rules.get("seq"))
+        else:
+            spec = P(rules.get("batch"), *([None] * (leaf.ndim - 1)))
+        return filter_spec(spec, tuple(leaf.shape), mesh_sizes)
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+__all__ = [
+    "DATA", "MODEL", "POD", "activation_rules", "param_specs",
+    "spec_for_param", "cache_spec_tree", "batch_specs",
+]

@@ -1,0 +1,5 @@
+from repro.runtime.elastic import remesh, state_shardings
+from repro.runtime.fault import FaultInjector, RunReport, SimulatedFailure, run_loop
+
+__all__ = ["run_loop", "FaultInjector", "SimulatedFailure", "RunReport",
+           "remesh", "state_shardings"]

@@ -1,0 +1,47 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+Checkpoints are mesh-agnostic (full arrays + manifest), and sharding specs
+are *logical* (parallel/sharding.py), so growing or shrinking the mesh is:
+restore → derive specs for the new mesh → device_put.  ``remesh`` does the
+same for live states (device-loss recovery without a disk round-trip when
+the state still fits).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import param_specs
+
+
+def state_shardings(state, mesh: Mesh, *, fsdp: bool = False):
+    """NamedSharding pytree for a TrainState on ``mesh``."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspec = param_specs(state.params, fsdp=fsdp, mesh_sizes=sizes)
+
+    def to_sh(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return type(state)(
+        params=to_sh(pspec),
+        opt=type(state.opt)(step=NamedSharding(mesh, P()), mu=to_sh(pspec),
+                            nu=to_sh(pspec)),
+        step=NamedSharding(mesh, P()),
+        err=None if state.err is None else to_sh(
+            param_specs(state.err, fsdp=fsdp, mesh_sizes=sizes)),
+    )
+
+
+def remesh(state, new_mesh: Mesh, *, fsdp: bool = False):
+    """Re-shard a live state onto ``new_mesh`` (elastic grow/shrink)."""
+    sh = state_shardings(state, new_mesh, fsdp=fsdp)
+    flat_s, tdef = jax.tree.flatten(state)
+    flat_sh = jax.tree.leaves(sh)
+    moved = [jax.device_put(jax.device_get(x), s)
+             for x, s in zip(flat_s, flat_sh)]
+    return jax.tree.unflatten(tdef, moved)
+
+
+__all__ = ["state_shardings", "remesh"]

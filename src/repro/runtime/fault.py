@@ -1,0 +1,129 @@
+"""Fault-tolerant training runtime.
+
+At thousands of nodes the question is not *if* a step fails but *when*:
+this runner wraps the train loop with
+
+  * periodic (optionally async) checkpointing,
+  * auto-resume from the latest valid checkpoint,
+  * bounded retry on step failure (``FaultInjector`` simulates device/node
+    loss in tests),
+  * a step watchdog flagging stragglers (steps slower than
+    ``straggler_factor`` × the trailing median get logged and counted —
+    the mitigation at scale is re-issue/skip, which the data pipeline's
+    deterministic ``batch_at(step)`` makes safe).
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.checkpoint import store
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FaultInjector:
+    """Deterministically fail specific steps (for tests/examples)."""
+    fail_steps: tuple[int, ...] = ()
+    max_failures_per_step: int = 1
+    _counts: dict = field(default_factory=dict)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_steps:
+            n = self._counts.get(step, 0)
+            if n < self.max_failures_per_step:
+                self._counts[step] = n + 1
+                raise SimulatedFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class RunReport:
+    steps_run: int = 0
+    failures: int = 0
+    restores: int = 0
+    straggler_steps: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    metrics: list = field(default_factory=list)
+
+
+def run_loop(step_fn, state, loader, *, steps: int, ckpt_dir: str | None = None,
+             checkpoint_every: int = 0, keep_last: int = 3,
+             async_ckpt: bool = True, injector: FaultInjector | None = None,
+             straggler_factor: float = 3.0, max_retries: int = 2,
+             log_every: int = 0, start_step: int = 0) -> tuple:
+    """Run ``steps`` steps with checkpoint/restart and straggler tracking.
+
+    Returns (state, RunReport)."""
+    report = RunReport()
+    pending: list = []
+
+    # auto-resume
+    step = start_step
+    if ckpt_dir:
+        latest = store.latest_step(ckpt_dir)
+        if latest is not None and latest > step:
+            state = store.restore(ckpt_dir, latest, state)
+            step = latest
+            report.restores += 1
+
+    while step < steps:
+        batch = loader.get(step)
+        retries = 0
+        while True:
+            try:
+                if injector is not None:
+                    injector.check(step)
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(jax.tree.leaves(metrics))
+                dt = time.perf_counter() - t0
+                break
+            except SimulatedFailure:
+                report.failures += 1
+                retries += 1
+                if retries > max_retries:
+                    # full restart path: restore from checkpoint
+                    if ckpt_dir and store.latest_step(ckpt_dir) is not None:
+                        latest = store.latest_step(ckpt_dir)
+                        state = store.restore(ckpt_dir, latest, state)
+                        step = latest
+                        report.restores += 1
+                        batch = loader.get(step)
+                        retries = 0
+                    else:
+                        raise
+
+        report.step_times.append(dt)
+        trailing = report.step_times[-20:]
+        if len(trailing) >= 5:
+            med = statistics.median(trailing)
+            if dt > straggler_factor * med:
+                report.straggler_steps.append(step)
+
+        report.metrics.append({k: float(v) for k, v in metrics.items()})
+        report.steps_run += 1
+        step += 1
+
+        if ckpt_dir and checkpoint_every and step % checkpoint_every == 0:
+            th = store.save(ckpt_dir, step, state, keep_last=keep_last,
+                            blocking=not async_ckpt)
+            if th is not None:
+                pending.append(th)
+        if log_every and step % log_every == 0:
+            m = report.metrics[-1]
+            print(f"step {step:5d} loss={m.get('loss', float('nan')):.4f} "
+                  f"dt={dt*1e3:.1f}ms")
+
+    for th in pending:
+        th.join()
+    return state, report
+
+
+__all__ = ["run_loop", "FaultInjector", "SimulatedFailure", "RunReport"]

@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, Request, sample
+
+__all__ = ["Engine", "Request", "sample"]

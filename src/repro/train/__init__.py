@@ -1,0 +1,5 @@
+from repro.train.gradsync import err_state_init, sync_grads
+from repro.train.step import TrainState, init_state, make_explicit_dp_step, make_train_step
+
+__all__ = ["TrainState", "init_state", "make_train_step",
+           "make_explicit_dp_step", "sync_grads", "err_state_init"]

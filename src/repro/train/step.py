@@ -1,0 +1,175 @@
+"""Train-step builders.
+
+Two distribution styles, matching DESIGN.md §4:
+
+* :func:`make_train_step` — pjit/GSPMD: the step is jitted with
+  in/out shardings derived from parallel/sharding.py; all communication
+  edges inside the model flow through the dataplane as constraints.  Used
+  by the production launcher and the multi-pod dry-run.
+
+* :func:`make_explicit_dp_step` — shard_map over the data axis with the
+  gradient all-reduce issued *explicitly* through the dataplane
+  (bucketing / QoS / int8 compression) — the measured CoRD path; also the
+  vehicle for the bypass/cord/socket end-to-end comparison (paper Fig. 6).
+
+Both support gradient accumulation (microbatching) and donate the train
+state.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.core.dataplane import Dataplane
+from repro.optim.adamw import adamw_init, adamw_update, warmup_cosine
+from repro.parallel.sharding import batch_specs, param_specs
+from repro.train.gradsync import err_state_init, sync_grads
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+    err: Any = None      # compression error feedback
+
+
+def init_state(model, rng, compression: str = "none",
+               opt_dtype: str = "float32") -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=adamw_init(params, opt_dtype),
+                      step=jnp.zeros((), jnp.int32),
+                      err=err_state_init(params, compression))
+
+
+def _accumulate(loss_fn, params, batch, microbatch: int):
+    """Gradient accumulation over microbatches via lax.scan."""
+    b = jax.tree.leaves(batch)[0].shape[0]
+    if microbatch <= 0 or microbatch >= b:
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    n = b // microbatch
+    micro = jax.tree.map(
+        lambda x: x.reshape((n, microbatch) + x.shape[1:]), batch)
+
+    def mb_step(carry, mb):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        acc_loss, acc_metrics, acc_grads = carry
+        acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+        acc_metrics = jax.tree.map(jnp.add, acc_metrics, metrics)
+        return (acc_loss + loss, acc_metrics, acc_grads), None
+
+    (loss0, metrics0), grads0 = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, jax.tree.map(lambda x: x[0], micro))
+    rest = jax.tree.map(lambda x: x[1:], micro)
+    (loss, metrics, grads), _ = jax.lax.scan(
+        mb_step, (loss0, metrics0, grads0), rest)
+    inv = 1.0 / n
+    return (loss * inv, jax.tree.map(lambda m: m * inv, metrics)), \
+        jax.tree.map(lambda g: g * inv, grads)
+
+
+# ---------------------------------------------------------------------------
+# pjit/GSPMD step
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, run: RunConfig, dp: Dataplane, *,
+                    total_steps: int | None = None, fsdp: bool = False,
+                    jit: bool = True):
+    """Returns (step_fn, state_sharding_fn). ``step_fn(state, batch)``."""
+    tcfg = run.train
+    schedule = warmup_cosine(tcfg, total_steps)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, dp=dp, remat=tcfg.remat)
+
+    def step_fn(state: TrainState, batch):
+        (loss, metrics), grads = _accumulate(loss_fn, state.params, batch,
+                                             tcfg.microbatch)
+        new_params, new_opt, stats = adamw_update(
+            grads, state.opt, state.params, tcfg, schedule)
+        metrics = {**metrics, **stats}
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1, err=state.err), metrics
+
+    if not jit:
+        return step_fn
+
+    mesh = dp.mesh
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0,))
+
+    def shard_state(state_shape):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        pspec = param_specs(state_shape.params, fsdp=fsdp, mesh_sizes=sizes)
+        return TrainState(
+            params=pspec,
+            opt=type(state_shape.opt)(step=P(), mu=pspec, nu=pspec),
+            step=P(),
+            err=None if state_shape.err is None else param_specs(
+                state_shape.err, fsdp=fsdp, mesh_sizes=sizes),
+        )
+
+    def sharded_jit(state_shape, batch_shape):
+        st_spec = shard_state(state_shape)
+        b_spec = batch_specs(batch_shape, dp.rules)
+        to_sh = lambda spec: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), spec,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(step_fn,
+                       in_shardings=(to_sh(st_spec), to_sh(b_spec)),
+                       out_shardings=(to_sh(st_spec), None),
+                       donate_argnums=(0,))
+
+    return step_fn, sharded_jit
+
+
+# ---------------------------------------------------------------------------
+# explicit shard_map DP step (the measured CoRD path)
+# ---------------------------------------------------------------------------
+
+def make_explicit_dp_step(model, run: RunConfig, dp: Dataplane, *,
+                          axis: str = "data",
+                          total_steps: int | None = None):
+    """DP over ``axis``: per-shard grads + dataplane all-reduce.
+
+    The returned function must be called under jit; batch leading dim is
+    sharded over ``axis``, params replicated."""
+    tcfg = run.train
+    schedule = warmup_cosine(tcfg, total_steps)
+    mesh = dp.mesh
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, dp=None, remat=tcfg.remat)
+
+    def local_step(state: TrainState, batch):
+        (loss, metrics), grads = _accumulate(loss_fn, state.params, batch,
+                                             tcfg.microbatch)
+        grads, new_err = sync_grads(
+            dp, grads, axis, compression=tcfg.grad_compression,
+            err_state=state.err)
+        loss = jax.lax.pmean(loss, axis)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(
+            jnp.asarray(m, jnp.float32), axis), metrics)
+        new_params, new_opt, stats = adamw_update(
+            grads, state.opt, state.params, tcfg, schedule)
+        metrics = {**metrics, **stats}
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1, err=new_err), metrics
+
+    state_specs = TrainState(params=P(), opt=P(), step=P(), err=P())
+    shard = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(state_specs, P(axis)),
+        out_specs=(state_specs, P()),
+        check_vma=False)
+    return jax.jit(shard, donate_argnums=(0,))
+
+
+__all__ = ["TrainState", "init_state", "make_train_step",
+           "make_explicit_dp_step"]

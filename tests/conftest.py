@@ -1,0 +1,28 @@
+# Multi-device tests need several host devices. 8 is the standard JAX test
+# harness value — NOT the 512-device dry-run configuration, which is set
+# exclusively inside launch/dryrun.py (see its header comment).
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+@pytest.fixture(scope="session")
+def mesh42():
+    return jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def mesh2():
+    return jax.make_mesh((2,), ("rank",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,167 @@
+"""CoRD dataplane semantics: mode numerics, policies, verbs, chunking."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DataplaneConfig
+from repro.core import Dataplane, MRError, PolicyViolation, verbs
+from repro.core.chunking import bucket_pytree, chunked_psum, schedule_batch
+from repro.core.policies import QoSPolicy, QuotaPolicy, SecurityPolicy, TelemetryPolicy
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _psum_over(mesh, dp, x):
+    @partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P())
+    def f(v):
+        return dp.psum(v.sum(), "data", tag="t/psum")
+    return jax.jit(f)(x)
+
+
+def test_modes_numerically_identical(mesh8):
+    """The paper's architecture changes WHO controls the dataplane, never
+    WHAT is computed: all three modes must be bit-identical."""
+    x = jax.random.normal(RNG, (64,))
+    outs = {}
+    for mode in ("bypass", "cord", "socket"):
+        dp = Dataplane(DataplaneConfig(mode=mode, emulate_costs=True),
+                       mesh=mesh8)
+        outs[mode] = _psum_over(mesh8, dp, x)
+    np.testing.assert_array_equal(outs["bypass"], outs["cord"])
+    np.testing.assert_array_equal(outs["bypass"], outs["socket"])
+
+
+def test_bypass_is_invisible_to_the_os(mesh8):
+    dp = Dataplane(DataplaneConfig(mode="bypass"), mesh=mesh8)
+    _psum_over(mesh8, dp, jnp.ones(16))
+    assert dp.telemetry.total_bytes() == 0  # no OS visibility — the problem
+
+
+def test_cord_telemetry_accounts_every_op(mesh8):
+    dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh8)
+
+    @partial(jax.shard_map, mesh=mesh8, in_specs=P("data"), out_specs=P("data"))
+    def f(v):
+        s = dp.psum(v.sum(), "data", tag="a")
+        g = dp.all_gather(v, "data", tag="b")
+        return v + s + g.sum()
+    jax.jit(f)(jnp.ones(16))
+    kinds = dp.telemetry.by_kind()
+    assert kinds["all_reduce"]["ops"] == 1
+    assert kinds["all_gather"]["ops"] == 1
+    assert dp.telemetry.by_tag()["a"]["bytes"] == 4
+
+
+def test_quota_policy_refuses_over_budget(mesh8):
+    dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh8,
+                   policies=[TelemetryPolicy(),
+                             QuotaPolicy(limits={"default": 2})])
+    with pytest.raises(PolicyViolation):
+        _psum_over(mesh8, dp, jnp.ones(64))  # 4-byte op > 2-byte quota
+
+
+def test_security_policy_mr_registration(mesh8):
+    sec = SecurityPolicy(strict=False)
+    dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh8,
+                   policies=[sec])
+    buf = jnp.ones(8)
+    dp.reg_mr("grads", buf)
+
+    @partial(jax.shard_map, mesh=mesh8, in_specs=P(), out_specs=P())
+    def ok(v):
+        return dp.psum(v, "data", mr="grads")
+    jax.jit(ok)(buf)  # registered → allowed
+
+    @partial(jax.shard_map, mesh=mesh8, in_specs=P(), out_specs=P())
+    def bad(v):
+        return dp.psum(v, "data", mr="grads")
+    with pytest.raises(PolicyViolation):
+        jax.jit(bad)(jnp.ones(16))  # signature mismatch → refused
+
+
+def test_mr_registry_shape_check():
+    from repro.core.mr import MRRegistry
+    reg = MRRegistry()
+    reg.reg_mr("a", jnp.ones((4, 4)))
+    assert reg.check("a", jnp.ones((4, 4)))
+    with pytest.raises(MRError):
+        reg.check("a", jnp.ones((4, 5)))
+    with pytest.raises(MRError):
+        reg.check("missing", jnp.ones(1))
+
+
+def test_chunked_psum_equals_psum(mesh8):
+    dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh8)
+    x = jax.random.normal(RNG, (64, 4))
+
+    @partial(jax.shard_map, mesh=mesh8, in_specs=P("data"), out_specs=P("data"))
+    def f(v):
+        whole = dp.psum(v, "data")
+        chunked = chunked_psum(dp, v, "data", num_chunks=4)
+        return whole - chunked
+    np.testing.assert_allclose(jax.jit(f)(x), 0.0, atol=1e-6)
+
+
+def test_qos_schedule_returns_original_order():
+    qos = QoSPolicy(classes={"hi": 0, "lo": 9})
+    outs = schedule_batch(qos, [
+        ("lo", lambda: jnp.asarray(1.0)),
+        ("hi", lambda: jnp.asarray(2.0)),
+        ("lo", lambda: jnp.asarray(3.0)),
+    ])
+    assert [float(o) for o in outs] == [1.0, 2.0, 3.0]
+
+
+def test_bucket_pytree_partition():
+    tree = {"a": jnp.ones((100,)), "b": jnp.ones((3,)),
+            "c": jnp.ones((50, 2))}
+    buckets = bucket_pytree(tree, bucket_bytes=256)
+    leaves = [leaf for b in buckets for _, leaf in b]
+    assert len(leaves) == 3
+    assert sum(l.size for l in leaves) == 203
+
+
+def test_verbs_send_read_write_payload(mesh2):
+    dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh2)
+    cfg = verbs.QPConfig(transport="RC", msg_bytes=64, depth=2)
+    payload = jnp.arange(64, dtype=jnp.uint8)
+
+    @partial(jax.shard_map, mesh=mesh2, in_specs=P("rank", None),
+             out_specs=P("rank", None))
+    def send(buf):
+        rank = jax.lax.axis_index("rank")
+        qp = verbs.qp_init(cfg)
+        qp = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
+        qp = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1, op="send")
+        return qp["recv_ring"][None, 0]
+
+    out = jax.jit(send)(jnp.stack([payload, jnp.zeros(64, jnp.uint8)]))
+    np.testing.assert_array_equal(np.asarray(out)[1], np.asarray(payload))
+
+    with pytest.raises(verbs.TransportError):
+        verbs.QPConfig(transport="UD", msg_bytes=8192)  # > MTU
+
+
+def test_technique_toggles_preserve_values(mesh8):
+    """'Removing' techniques changes timing, never results."""
+    base = Dataplane(DataplaneConfig(mode="bypass"), mesh=mesh8)
+    ablated = Dataplane(DataplaneConfig(
+        mode="bypass", zero_copy=False, polling=False, kernel_bypass=False,
+        emulate_costs=True), mesh=mesh8)
+    x = jax.random.normal(RNG, (64,))
+    np.testing.assert_array_equal(_psum_over(mesh8, base, x),
+                                  _psum_over(mesh8, ablated, x))
+
+
+def test_spec_dedupes_mesh_axes(mesh42):
+    dp = Dataplane(DataplaneConfig(), mesh=mesh42,
+                   rules={"heads": "model", "head_dim": "model",
+                          "batch": ("data",)})
+    spec = dp.spec(("batch", None, "heads", "head_dim"))
+    flat = [a for s in spec if s for a in (s if isinstance(s, tuple) else (s,))]
+    assert len(flat) == len(set(flat)), f"duplicate axes in {spec}"

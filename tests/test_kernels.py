@@ -1,0 +1,106 @@
+"""Pallas kernel validation: shape/dtype sweeps in interpret mode against
+the pure-jnp oracles (assert_allclose per the deliverable contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+RNG = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, H, KVH, S, D)
+    (1, 2, 2, 128, 32),
+    (2, 4, 2, 256, 64),
+    (1, 8, 1, 128, 128),      # MQA
+    (2, 3, 1, 192, 64),       # odd head count, ragged blocks
+])
+def test_flash_kernel_sweep(shape, dtype):
+    b, h, kvh, s, d = shape
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kvh, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kvh, s, d), dtype)
+    scal = jnp.array([0, s], jnp.int32)
+    o = flash_attention_fwd(q, k, v, scal, causal=True, q_block=64,
+                            kv_block=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window,valid", [(16, None), (0, 100), (32, 150)])
+def test_flash_kernel_window_and_validity(window, valid):
+    b, h, kvh, s, d = 1, 2, 1, 192, 32
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, kvh, s, d))
+    v = jax.random.normal(ks[2], (b, kvh, s, d))
+    vl = valid if valid is not None else s
+    scal = jnp.array([window, vl], jnp.int32)
+    o = flash_attention_fwd(q, k, v, scal, causal=True, q_block=64,
+                            kv_block=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, window=window, valid_len=vl,
+                              causal=True)
+    np.testing.assert_allclose(o, ref, atol=2e-5)
+
+
+def test_flash_ops_layout_wrapper():
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))   # (B,S,H,D) layout
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    o = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), causal=True)
+    np.testing.assert_allclose(o.transpose(0, 2, 1, 3), ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, S, DI, N)
+    (1, 64, 32, 8),
+    (2, 100, 96, 16),        # ragged S (padding path)
+    (1, 128, 256, 4),
+])
+def test_ssm_kernel_sweep(shape, dtype):
+    b, s, di, n = shape
+    ks = jax.random.split(RNG, 6)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, di))).astype(dtype)
+    x = jax.random.normal(ks[1], (b, s, di), dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, n), dtype)
+    c = jax.random.normal(ks[4], (b, s, n), dtype)
+    h0 = jax.random.normal(ks[5], (b, di, n), jnp.float32)
+    y, hf = ssm_scan(dt, x, a, bb, c, h0, chunk=32, channel_block=32,
+                     interpret=True)
+    yr, hr = ssm_scan_ref(dt, x, a, bb, c, h0)
+    tol = 1e-4 if dtype == jnp.float32 else 1.5e-1
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol)
+    np.testing.assert_allclose(hf, hr, atol=tol)
+
+
+def test_ssm_state_neutral_padding():
+    """dt = 0 padding must leave the carried state untouched."""
+    b, s, di, n = 1, 50, 32, 8   # 50 pads to 64 with chunk 32
+    ks = jax.random.split(RNG, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, di)))
+    x = jax.random.normal(ks[1], (b, s, di))
+    a = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, n))
+    c = jax.random.normal(ks[4], (b, s, n))
+    _, hf = ssm_scan(dt, x, a, bb, c, chunk=32, channel_block=32,
+                     interpret=True)
+    _, hr = ssm_scan_ref(dt, x, a, bb, c, jnp.zeros((b, di, n)))
+    np.testing.assert_allclose(hf, hr, atol=1e-4)

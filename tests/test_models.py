@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests (reduced same-family configs) + the
+decode-consistency invariant: teacher-forced full forward and
+prefill+decode must produce the same next-token predictions."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_model_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model, input_specs, make_batch
+
+RNG = jax.random.PRNGKey(0)
+TRAIN_SHAPE = ShapeConfig("t", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_model_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg, TRAIN_SHAPE, RNG)
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(lambda p, b: model.loss(p, b), has_aux=True)
+    )(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    assert loss.shape == ()
+    gn = sum(jnp.sum(jnp.abs(g)) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0, f"{arch}: degenerate grads"
+    # output shapes via input specs
+    specs = input_specs(cfg, TRAIN_SHAPE)
+    assert specs["tokens"].shape[0] == 2
+
+
+# MoE archs are excluded: capacity-based dropping makes routing depend on
+# the token batch (full-seq groups vs single-token decode groups differ) —
+# an inherent property of dropped-MoE serving, covered by the smoke test
+# below instead.
+@pytest.mark.parametrize("arch", ["gemma3-4b", "hymba-1.5b", "xlstm-350m",
+                                  "granite-34b", "whisper-small"])
+def test_decode_matches_teacher_forcing(arch):
+    """Greedy decode over a prompt must predict the same tokens the full
+    forward pass predicts at each position."""
+    cfg = get_model_config(arch, smoke=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    S = 12
+    batch = make_batch(cfg, ShapeConfig("t", S, 2, "prefill"), RNG)
+    tokens = batch["tokens"]
+    prefix = cfg.num_patches if cfg.family == "vlm" else 0
+
+    # full forward logits
+    x, _, _, pre = model.apply(params, batch)
+    from repro.layers.embedding import logits as logits_fn
+    full_logits = logits_fn(params["embed"], x)
+
+    # prefill on first S-3 tokens, then decode 3 steps teacher-forced
+    cut = tokens.shape[1] - 3
+    b1 = dict(batch)
+    b1["tokens"] = tokens[:, :cut]
+    cache = model.init_cache(2, prefix + tokens.shape[1] + 4)
+    lg, cache = jax.jit(lambda p, b, c: model.prefill(p, b, c))(
+        params, b1, cache)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, -1]), np.asarray(full_logits[:, cut - 1 + pre]),
+        atol=2e-3, rtol=1e-3)
+    step = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos))
+    for i in range(3):
+        tok = tokens[:, cut + i][:, None]
+        lg, cache = step(params, tok, cache,
+                         jnp.asarray(prefix + cut + i, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, -1]),
+            np.asarray(full_logits[:, prefix + cut + i]),
+            atol=2e-3, rtol=1e-3)
+
+
+def test_moe_decode_finite_and_batch_dependent():
+    """MoE decode produces finite logits; routing differs between batched
+    and full-sequence evaluation (capacity dropping) — assert the invariant
+    we CAN rely on (finiteness + shape), not bit-equality."""
+    cfg = get_model_config("arctic-480b", smoke=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    cache = model.init_cache(2, 16)
+    b = make_batch(cfg, ShapeConfig("t", 8, 2, "prefill"), RNG)
+    lg, cache = jax.jit(lambda p, b, c: model.prefill(p, b, c))(
+        params, b, cache)
+    assert jnp.isfinite(lg).all()
+    lg2, cache = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos))(
+        params, b["tokens"][:, -1:], cache, jnp.asarray(8, jnp.int32))
+    assert jnp.isfinite(lg2).all() and lg2.shape == (2, 1, cfg.vocab_size)
+
+
+def test_vlm_prefix_changes_text_logits():
+    cfg = get_model_config("llava-next-34b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg, ShapeConfig("t", 24, 2, "train"), RNG)
+    loss1, _ = model.loss(params, batch)
+    batch2 = dict(batch)
+    batch2["patches"] = batch["patches"] + 1.0
+    loss2, _ = model.loss(params, batch2)
+    assert not np.allclose(float(loss1), float(loss2)), \
+        "vision prefix should influence text loss"
+
+
+def test_whisper_encoder_conditions_decoder():
+    cfg = get_model_config("whisper-small", smoke=True)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    batch = make_batch(cfg, ShapeConfig("t", 16, 2, "train"), RNG)
+    loss1, _ = model.loss(params, batch)
+    batch2 = dict(batch)
+    batch2["frames"] = batch["frames"] * 2.0 + 1.0
+    loss2, _ = model.loss(params, batch2)
+    assert not np.allclose(float(loss1), float(loss2))
+
+
+def test_long_context_flags():
+    from repro.configs import LONG_CONTEXT_ARCHS
+    for arch in ARCHS:
+        cfg = get_model_config(arch)
+        assert cfg.is_subquadratic == (arch in LONG_CONTEXT_ARCHS), arch

@@ -1,0 +1,107 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, TrainConfig, apply_overrides
+from repro.core.chunking import bucket_pytree
+from repro.core.telemetry import OpRecord, Telemetry, counters_bump, counters_init
+from repro.layers.attention import make_mask
+from repro.train.gradsync import dequantize_int8, quantize_int8
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@SETTINGS
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=1, max_size=200))
+def test_int8_quantization_error_bounded(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-5
+
+
+@SETTINGS
+@given(st.integers(1, 64), st.integers(1, 64),
+       st.integers(0, 32), st.booleans())
+def test_mask_invariants(sq, sk, window, causal):
+    qp = jnp.arange(sq)
+    kp = jnp.arange(sk)
+    m = np.asarray(make_mask(qp, kp, causal=causal, window=window))
+    assert m.shape == (sq, sk)
+    if causal:
+        for i in range(min(sq, sk)):
+            assert not m[i, i + 1:].any(), "future leak"
+    if window > 0 and causal:
+        mw = np.asarray(make_mask(qp, kp, causal=True, window=0))
+        assert (m <= mw).all(), "window mask must be subset of causal"
+    # every causal row with a visible position attends somewhere
+    if causal and window == 0 and sk >= 1:
+        assert m[0, 0]
+
+
+@SETTINGS
+@given(st.lists(st.integers(1, 2000), min_size=1, max_size=12),
+       st.integers(64, 4096))
+def test_bucket_pytree_is_partition(sizes, bucket_bytes):
+    tree = {f"l{i}": jnp.zeros((n,), jnp.float32)
+            for i, n in enumerate(sizes)}
+    buckets = bucket_pytree(tree, bucket_bytes)
+    flat = [path for b in buckets for path, _ in b]
+    assert len(flat) == len(sizes)          # every leaf exactly once
+    assert len(set(str(p) for p in flat)) == len(sizes)
+    for b in buckets[:-1]:
+        if len(b) > 1:
+            total = sum(leaf.size * 4 for _, leaf in b)
+            assert total <= bucket_bytes * 2  # bounded (greedy fill)
+
+
+@SETTINGS
+@given(st.integers(1, 100), st.integers(0, 10**6))
+def test_telemetry_counters_additive(ops, nbytes):
+    c = counters_init()
+    for _ in range(3):
+        c = counters_bump(c, ops=ops, bytes=nbytes)
+    assert float(c[0]) == 3 * ops
+    assert float(c[1]) == 3 * nbytes
+
+
+@SETTINGS
+@given(st.integers(1, 10**5))
+def test_telemetry_bytes_accounting(n):
+    t = Telemetry()
+    t.record(OpRecord(kind="all_reduce", tag="x", bytes=n, axes=("data",)))
+    t.record(OpRecord(kind="all_gather", tag="x", bytes=n, axes=("data",),
+                      count=2))
+    assert t.total_bytes() == n * 3
+    assert t.by_kind()["all_gather"]["ops"] == 2
+
+
+@SETTINGS
+@given(st.integers(1, 512), st.integers(1, 64), st.floats(1e-5, 1.0))
+def test_config_override_roundtrip(d_model, layers, lr):
+    cfg = ModelConfig()
+    cfg = apply_overrides(cfg, [f"d_model={d_model}",
+                                f"num_layers={layers}"])
+    assert cfg.d_model == d_model and cfg.num_layers == layers
+    t = apply_overrides(TrainConfig(), [f"learning_rate={lr}"])
+    assert abs(t.learning_rate - lr) < 1e-9
+
+
+@SETTINGS
+@given(st.integers(2, 8), st.integers(1, 8), st.integers(16, 128))
+def test_param_spec_always_divides(model_ways, data_ways, dim):
+    from repro.parallel.sharding import spec_for_param
+    sizes = {"model": model_ways, "data": data_ways}
+    spec = spec_for_param("layers/mlp/wi", 2, (dim, dim * 2),
+                          fsdp=True, mesh_sizes=sizes)
+    shape = (dim, dim * 2)
+    for i, ax in enumerate(tuple(spec)):
+        if ax is None:
+            continue
+        ways = sizes.get(ax, 1) if isinstance(ax, str) else \
+            int(np.prod([sizes.get(a, 1) for a in ax]))
+        assert shape[i] % ways == 0

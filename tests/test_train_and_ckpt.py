@@ -1,0 +1,173 @@
+"""Training substrate: grad sync + compression, microbatching, fault
+tolerance, checkpoint/restore, elastic remesh."""
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.configs import get_model_config
+from repro.configs.base import DataplaneConfig, RunConfig, TrainConfig
+from repro.core import Dataplane
+from repro.data import DataConfig, ShardedLoader, SyntheticLM
+from repro.models import build_model
+from repro.runtime import FaultInjector, remesh, run_loop
+from repro.train import init_state, make_explicit_dp_step, make_train_step
+from repro.train.gradsync import compress_error_feedback, quantize_int8
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _setup(mesh, compression="none", steps=8, lr=5e-3):
+    cfg = get_model_config("granite-3-2b", smoke=True)
+    model = build_model(cfg)
+    run = RunConfig(train=TrainConfig(steps=steps, learning_rate=lr,
+                                      warmup_steps=2,
+                                      grad_compression=compression))
+    dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh)
+    step = make_explicit_dp_step(model, run, dp, axis="data")
+    state = init_state(model, RNG, compression=compression)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                global_batch=16))
+    return model, step, state, ds, dp
+
+
+def test_explicit_dp_training_reduces_loss(mesh8):
+    _, step, state, ds, dp = _setup(mesh8)
+    losses = []
+    for i in range(8):
+        b = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert dp.telemetry.by_kind()["all_reduce"]["ops"] > 0
+
+
+def test_int8_compression_trains_and_tracks_exact(mesh8):
+    _, step_c, state_c, ds, _ = _setup(mesh8, compression="int8")
+    _, step_e, state_e, _, _ = _setup(mesh8, compression="none")
+    for i in range(6):
+        b = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        state_c, mc = step_c(state_c, b)
+        state_e, me = step_e(state_e, b)
+    # compressed training stays close to exact (error feedback)
+    assert abs(float(mc["loss"]) - float(me["loss"])) < 0.3
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(RNG, (1000,)) * 5
+    q, scale = quantize_int8(x)
+    err = jnp.abs(q.astype(jnp.float32) * scale - x)
+    assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    g = jax.random.normal(RNG, (256,))
+    err = jnp.zeros_like(g)
+    q, s, err = compress_error_feedback(g, err)
+    recon = q.astype(jnp.float32) * s
+    np.testing.assert_allclose(recon + err, g, atol=1e-6)
+
+
+def test_microbatch_equals_full_batch():
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    dpn = Dataplane(DataplaneConfig(mode="cord"))
+    state = init_state(model, RNG)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                global_batch=8))
+    b = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+    outs = {}
+    for mb in (0, 4):
+        run = RunConfig(train=TrainConfig(microbatch=mb, learning_rate=1e-3))
+        step = make_train_step(model, run, dpn)  # no mesh -> plain jit
+        # the step donates its input state: hand each variant its own copy
+        s2, m = step(jax.tree.map(jnp.copy, state), b)
+        outs[mb] = (float(m["loss"]), s2.params)
+    assert abs(outs[0][0] - outs[4][0]) < 1e-3
+    for a, b_ in zip(jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[4][1])):
+        np.testing.assert_allclose(a, b_, atol=5e-5)
+
+
+def test_fault_tolerant_loop_recovers(tmp_path, mesh8):
+    _, step, state, ds, _ = _setup(mesh8)
+    loader = ShardedLoader(ds)
+
+    def wrap(s, b):
+        return step(s, {k: jnp.asarray(v) for k, v in b.items()})
+
+    inj = FaultInjector(fail_steps=(3, 5), max_failures_per_step=1)
+    state, rep = run_loop(wrap, state, loader, steps=8,
+                          ckpt_dir=str(tmp_path), checkpoint_every=2,
+                          injector=inj, async_ckpt=False)
+    assert rep.failures == 2
+    assert rep.steps_run >= 8
+    assert store.latest_step(str(tmp_path)) is not None
+
+
+def test_hard_failure_restores_from_checkpoint(tmp_path, mesh8):
+    _, step, state, ds, _ = _setup(mesh8)
+    loader = ShardedLoader(ds)
+
+    def wrap(s, b):
+        return step(s, {k: jnp.asarray(v) for k, v in b.items()})
+
+    inj = FaultInjector(fail_steps=(4,), max_failures_per_step=99)
+    # unrecoverable by retry → must restore from the step-2 checkpoint;
+    # the injector then allows... max_failures=99 would loop forever, so
+    # bound retries: after restore the loop replays step 4 and hits the
+    # injector again — use max_failures within budget instead.
+    inj = FaultInjector(fail_steps=(4,), max_failures_per_step=4)
+    state, rep = run_loop(wrap, state, loader, steps=6,
+                          ckpt_dir=str(tmp_path), checkpoint_every=2,
+                          injector=inj, max_retries=2, async_ckpt=False)
+    assert rep.restores >= 1
+    assert rep.steps_run >= 6
+
+
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    tree = {"w": jnp.arange(12.0).reshape(3, 4),
+            "b": {"x": jnp.ones(3, jnp.int32)}}
+    for s in (2, 4, 6, 8):
+        store.save(str(tmp_path), s, tree, keep_last=2)
+    assert store.all_steps(str(tmp_path)) == [6, 8]
+    like = jax.tree.map(jnp.zeros_like, tree)
+    back = store.restore(str(tmp_path), 8, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    store.save(str(tmp_path), 1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        store.restore(str(tmp_path), 1, {"w": jnp.ones((5,))})
+
+
+def test_elastic_remesh_preserves_values(mesh42):
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    state = init_state(model, RNG)
+    state2 = remesh(state, mesh42)
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(state2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and back onto a smaller mesh
+    small = jax.make_mesh((2, 1), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                          devices=jax.devices()[:2])
+    state3 = remesh(state2, small)
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(state3.params)[0]),
+        np.asarray(jax.tree.leaves(state.params)[0]))
+
+
+def test_loader_determinism_across_shards():
+    ds = SyntheticLM(DataConfig(vocab_size=64, seq_len=16, global_batch=8))
+    full = ds.batch_at(3)
+    sh0 = ds.batch_at(3, shard=0, num_shards=2)
+    sh1 = ds.batch_at(3, shard=1, num_shards=2)
+    np.testing.assert_array_equal(
+        np.concatenate([sh0["tokens"], sh1["tokens"]]), full["tokens"])
