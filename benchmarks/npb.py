@@ -13,7 +13,14 @@ Five kernels with the paper's communication profiles, running on an
   MG — multigrid V-cycle (halo exchanges at every level; many small
        messages)
 
-Reported: wall time per mode and runtime relative to bypass.
+Every kernel threads the dataplane's per-tenant runtime state through its
+shard_map body with the uniform ``(x, state)`` convention, so in ``cord``/
+``socket`` mode the runtime op/byte counters are bumped on the measured
+path (the per-op mediation work) and reported alongside the trace-time
+telemetry.
+
+Reported: wall time per mode, runtime relative to bypass, and both
+accountings (trace-time comm_* and runtime rt_*).
 """
 
 from __future__ import annotations
@@ -26,14 +33,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import DataplaneConfig
+from repro.core import compat
 from repro.core.dataplane import Dataplane
 
 RANKS = 8
 
 
 def make_mesh():
-    return jax.make_mesh((RANKS,), ("rank",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((RANKS,), ("rank",))
 
 
 def make_dp(mode: str, mesh, *, syscall_ns=1500.0, interrupt_us=45.0,
@@ -45,12 +52,18 @@ def make_dp(mode: str, mesh, *, syscall_ns=1500.0, interrupt_us=45.0,
         mesh=mesh)
 
 
+def _shard(body, mesh, in_spec):
+    """shard_map a ``(arg, state) -> (out, state)`` kernel body."""
+    return jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(in_spec, P()), out_specs=(in_spec, P())))
+
+
 # ---------------------------------------------------------------------------
-# kernels
+# kernels — every body is (arg, state) -> (out, state)
 # ---------------------------------------------------------------------------
 
 def build_ep(mesh, dp: Dataplane, n_per_rank: int = 1 << 18, steps: int = 4):
-    def body(seed):
+    def body(seed, rt):
         rank = jax.lax.axis_index("rank")
 
         def one(carry, i):
@@ -62,81 +75,80 @@ def build_ep(mesh, dp: Dataplane, n_per_rank: int = 1 << 18, steps: int = 4):
             return s + acc, None
 
         s, _ = jax.lax.scan(one, jnp.zeros(()), jnp.arange(steps))
-        return dp.psum(s, "rank", tag="ep/final")
+        out, rt = dp.psum(s, "rank", tag="ep/final", state=rt)
+        return out + 0.0 * seed, rt
 
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(),
-                                 out_specs=P(), check_vma=False))
+    return _shard(body, mesh, P())
 
 
 def build_is(mesh, dp: Dataplane, n_per_rank: int = 1 << 14, steps: int = 8):
     nbuckets = RANKS
 
-    def body(keys):  # (RANKS, n) int32, rank-sharded
+    def body(keys, rt):  # (RANKS, n) int32, rank-sharded
         rank = jax.lax.axis_index("rank")
         k = keys[0]
 
         def one(carry, i):
-            k = carry
+            k, rt = carry
             # bucket by top bits → destination rank
             dest = k // (2**20 // nbuckets)
             hist = jnp.zeros((nbuckets,), jnp.int32).at[dest].add(1)
-            hist = dp.psum(hist, "rank", tag="is/histogram")
+            hist, rt = dp.psum(hist, "rank", tag="is/histogram", state=rt)
             # sort locally by destination, then all-to-all exchange
             order = jnp.argsort(dest)
             ks = k[order].reshape(nbuckets, -1)
-            recv = dp.all_to_all(ks, "rank", tag="is/exchange",
-                                 split_axis=0, concat_axis=0)
+            recv, rt = dp.all_to_all(ks, "rank", tag="is/exchange",
+                                     split_axis=0, concat_axis=0, state=rt)
             k2 = jnp.sort(recv.reshape(-1))
             # re-randomize for the next iteration (keeps sizes static)
             key = jax.random.fold_in(jax.random.PRNGKey(1), rank * 77 + i)
-            return jax.random.randint(key, k.shape, 0, 2**20,
-                                      jnp.int32) + (k2[:1] & 0), hist.sum()
+            k = jax.random.randint(key, k.shape, 0, 2**20,
+                                   jnp.int32) + (k2[:1] & 0)
+            return (k, rt), hist.sum()
 
-        k, _ = jax.lax.scan(one, k, jnp.arange(steps))
-        return k[None]
+        (k, rt), _ = jax.lax.scan(one, (k, rt), jnp.arange(steps))
+        return k[None], rt
 
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
-                                 out_specs=P("rank"), check_vma=False))
+    return _shard(body, mesh, P("rank"))
 
 
 def build_cg(mesh, dp: Dataplane, n_per_rank: int = 1 << 15,
              iters: int = 12):
-    def halo_matvec(x, rank):
+    def halo_matvec(x, rt):
         # banded operator: 3-point stencil across the rank boundary
-        left = dp.ppermute(x[-1:], "rank",
-                           [(i, (i + 1) % RANKS) for i in range(RANKS)],
-                           tag="cg/halo_r")
-        right = dp.ppermute(x[:1], "rank",
-                            [(i, (i - 1) % RANKS) for i in range(RANKS)],
-                            tag="cg/halo_l")
+        left, rt = dp.ppermute(x[-1:], "rank",
+                               [(i, (i + 1) % RANKS) for i in range(RANKS)],
+                               tag="cg/halo_r", state=rt)
+        right, rt = dp.ppermute(x[:1], "rank",
+                                [(i, (i - 1) % RANKS) for i in range(RANKS)],
+                                tag="cg/halo_l", state=rt)
         xm = jnp.concatenate([left, x, right])
-        return 2.0 * x - 0.5 * xm[:-2] - 0.5 * xm[2:] + 0.01 * x
+        return 2.0 * x - 0.5 * xm[:-2] - 0.5 * xm[2:] + 0.01 * x, rt
 
-    def body(b):  # (RANKS, n) rank-sharded rhs
-        rank = jax.lax.axis_index("rank")
+    def body(b, rt):  # (RANKS, n) rank-sharded rhs
         b = b[0]
         x = jnp.zeros_like(b)
         r = b
         p = r
-        rs = dp.psum(jnp.dot(r, r), "rank", tag="cg/dot")
+        rs, rt = dp.psum(jnp.dot(r, r), "rank", tag="cg/dot", state=rt)
 
         def one(carry, _):
-            x, r, p, rs = carry
-            ap = halo_matvec(p, rank)
-            pap = dp.psum(jnp.dot(p, ap), "rank", tag="cg/dot")
+            x, r, p, rs, rt = carry
+            ap, rt = halo_matvec(p, rt)
+            pap, rt = dp.psum(jnp.dot(p, ap), "rank", tag="cg/dot", state=rt)
             alpha = rs / jnp.maximum(pap, 1e-30)
             x = x + alpha * p
             r = r - alpha * ap
-            rs_new = dp.psum(jnp.dot(r, r), "rank", tag="cg/dot")
+            rs_new, rt = dp.psum(jnp.dot(r, r), "rank", tag="cg/dot",
+                                 state=rt)
             p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
-            return (x, r, p, rs_new), None
+            return (x, r, p, rs_new, rt), None
 
-        (x, r, p, rs), _ = jax.lax.scan(one, (x, r, p, rs), None,
-                                        length=iters)
-        return x[None]
+        (x, r, p, rs, rt), _ = jax.lax.scan(one, (x, r, p, rs, rt), None,
+                                            length=iters)
+        return x[None], rt
 
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
-                                 out_specs=P("rank"), check_vma=False))
+    return _shard(body, mesh, P("rank"))
 
 
 def build_ft(mesh, dp: Dataplane, n: int = 512, steps: int = 3):
@@ -144,68 +156,63 @@ def build_ft(mesh, dp: Dataplane, n: int = 512, steps: int = 3):
     # → FFT rows (= columns of the original) → inverse path.
     rows = n // RANKS
 
-    def body(grid):  # (RANKS*rows, n) sharded on dim 0
+    def body(grid, rt):  # (RANKS*rows, n) sharded on dim 0
         g = grid  # local (rows, n)
 
-        def transpose(a):
+        def transpose(a, rt):
             blocks = a.reshape(rows, RANKS, n // RANKS).swapaxes(0, 1)
-            recv = dp.all_to_all(blocks, "rank", tag="ft/transpose",
-                                 split_axis=0, concat_axis=0)
-            return recv.reshape(RANKS, rows, n // RANKS) \
-                .transpose(2, 0, 1).reshape(n // RANKS * RANKS, rows) \
-                .astype(a.dtype)[: rows * RANKS].reshape(rows, -1) \
-                if False else recv.reshape(n, n // RANKS).T
+            recv, rt = dp.all_to_all(blocks, "rank", tag="ft/transpose",
+                                     split_axis=0, concat_axis=0, state=rt)
+            return recv.reshape(n, n // RANKS).T, rt
 
         def one(carry, _):
-            g = carry
+            g, rt = carry
             g = jnp.fft.fft(g, axis=1)
-            gt = transpose(g)
+            gt, rt = transpose(g, rt)
             gt = jnp.fft.fft(gt, axis=1)
-            g = transpose(gt)
+            g, rt = transpose(gt, rt)
             g = jnp.fft.ifft(g, axis=1)
-            return (g * (1.0 + 1e-6)).astype(g.dtype), None
+            return ((g * (1.0 + 1e-6)).astype(g.dtype), rt), None
 
-        g, _ = jax.lax.scan(one, g.astype(jnp.complex64), None,
-                            length=steps)
-        return jnp.real(g)
+        (g, rt), _ = jax.lax.scan(one, (g.astype(jnp.complex64), rt), None,
+                                  length=steps)
+        return jnp.real(g), rt
 
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
-                                 out_specs=P("rank"), check_vma=False))
+    return _shard(body, mesh, P("rank"))
 
 
 def build_mg(mesh, dp: Dataplane, n_per_rank: int = 1 << 14,
              cycles: int = 3, levels: int = 5):
-    def smooth(x, tag):
-        left = dp.ppermute(x[-1:], "rank",
-                           [(i, (i + 1) % RANKS) for i in range(RANKS)],
-                           tag=f"mg/halo_r/{tag}")
-        right = dp.ppermute(x[:1], "rank",
-                            [(i, (i - 1) % RANKS) for i in range(RANKS)],
-                            tag=f"mg/halo_l/{tag}")
+    def smooth(x, rt, tag):
+        left, rt = dp.ppermute(x[-1:], "rank",
+                               [(i, (i + 1) % RANKS) for i in range(RANKS)],
+                               tag=f"mg/halo_r/{tag}", state=rt)
+        right, rt = dp.ppermute(x[:1], "rank",
+                                [(i, (i - 1) % RANKS) for i in range(RANKS)],
+                                tag=f"mg/halo_l/{tag}", state=rt)
         xm = jnp.concatenate([left, x, right])
-        return 0.25 * xm[:-2] + 0.5 * x + 0.25 * xm[2:]
+        return 0.25 * xm[:-2] + 0.5 * x + 0.25 * xm[2:], rt
 
-    def body(x0):
+    def body(x0, rt):
         x = x0[0]
 
         def vcycle(carry, _):
-            x = carry
+            x, rt = carry
             grids = []
             g = x
             for lev in range(levels):          # restrict
-                g = smooth(g, f"d{lev}")
+                g, rt = smooth(g, rt, f"d{lev}")
                 grids.append(g)
                 g = g.reshape(-1, 2).mean(-1)
             for lev in reversed(range(levels)):  # prolong
                 g = jnp.repeat(g, 2)
-                g = smooth(g + grids[lev], f"u{lev}")
-            return g, None
+                g, rt = smooth(g + grids[lev], rt, f"u{lev}")
+            return (g, rt), None
 
-        x, _ = jax.lax.scan(vcycle, x, None, length=cycles)
-        return x[None]
+        (x, rt), _ = jax.lax.scan(vcycle, (x, rt), None, length=cycles)
+        return x[None], rt
 
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
-                                 out_specs=P("rank"), check_vma=False))
+    return _shard(body, mesh, P("rank"))
 
 
 # ---------------------------------------------------------------------------
@@ -225,14 +232,15 @@ BENCHES = {
 }
 
 
-def _measure(fn, arg, reps=3):
-    jax.block_until_ready(fn(arg))
+def _measure(fn, arg, rt, reps=3):
+    """Best wall time over ``reps`` plus the (out, state) of the warmup."""
+    result = jax.block_until_ready(fn(arg, rt))
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(arg))
+        jax.block_until_ready(fn(arg, rt))
         best = min(best, time.perf_counter() - t0)
-    return best
+    return best, result
 
 
 def run_all(benches=None, modes=("bypass", "cord", "socket")):
@@ -246,10 +254,11 @@ def run_all(benches=None, modes=("bypass", "cord", "socket")):
         for mode in modes:
             dp = make_dp(mode, mesh)
             fn = builder(mesh, dp)
-            t = _measure(fn, arg)
-            if mode == "bypass":
+            t, (_, rt) = _measure(fn, arg, dp.runtime_init())
+            if base is None:
                 base = t
             comm = dp.telemetry.by_kind()
+            runtime = dp.runtime_report(rt)[dp.tenant]
             rows.append({
                 "table": "fig6", "bench": name, "mode": mode,
                 "ms": round(t * 1e3, 2),
@@ -257,6 +266,8 @@ def run_all(benches=None, modes=("bypass", "cord", "socket")):
                 "comm_ops": int(sum(v["ops"] for v in comm.values())),
                 "comm_mib": round(sum(v["bytes"] for v in comm.values())
                                   / 2**20, 2),
+                "rt_ops": int(runtime["ops"]),
+                "rt_mib": round(runtime["bytes"] / 2**20, 2),
             })
     return rows
 

@@ -23,7 +23,6 @@ structure, which is what the paper argues from.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 
 import jax
@@ -32,15 +31,15 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import DataplaneConfig
-from repro.core import verbs
+from repro.core import compat, verbs
+from repro.core import telemetry as tl
 from repro.core.dataplane import Dataplane
 
 MSG_SIZES = [64, 1024, 4096, 32_768, 262_144, 1_048_576]
 
 
 def make_mesh2():
-    return jax.make_mesh((2,), ("rank",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((2,), ("rank",))
 
 
 def _dp(mode: str, *, emulate=True, syscall_ns=400.0, interrupt_us=8.0,
@@ -70,11 +69,11 @@ def build_pingpong(mesh, dp_client: Dataplane, dp_server: Dataplane,
                 # client post (syscall side) → NIC → server completion
                 x = verbs.rank_mediate(x, rank, 0, dp_client)
                 x = jax.lax.ppermute(x, "rank", [(0, 1)])
-                x = verbs._completion(x, rank, 1, dp_server)
+                x = verbs.rank_complete(x, rank, 1, dp_server)
                 # reply
                 x = verbs.rank_mediate(x, rank, 1, dp_server)
                 x = jax.lax.ppermute(x, "rank", [(1, 0)])
-                x = verbs._completion(x, rank, 0, dp_client)
+                x = verbs.rank_complete(x, rank, 0, dp_client)
             elif op == "write":
                 # one-sided write: only the active (client) side mediates
                 x = verbs.rank_mediate(x, rank, 0, dp_client)
@@ -82,19 +81,19 @@ def build_pingpong(mesh, dp_client: Dataplane, dp_server: Dataplane,
                 # perftest write latency: server writes back (its own post)
                 x = verbs.rank_mediate(x, rank, 1, dp_server)
                 x = jax.lax.ppermute(x, "rank", [(1, 0)])
-                x = verbs._completion(x, rank, 0, dp_client)
+                x = verbs.rank_complete(x, rank, 0, dp_client)
             else:  # read: client pulls; server CPU never involved
                 x = verbs.rank_mediate(x, rank, 0, dp_client)
                 x = jax.lax.ppermute(x, "rank", [(1, 0)])   # data server→client
-                x = verbs._completion(x, rank, 0, dp_client)
+                x = verbs.rank_complete(x, rank, 0, dp_client)
                 x = jax.lax.ppermute(x, "rank", [(0, 1)])   # sync back
             return x, None
 
         x, _ = jax.lax.scan(one, buf, None, length=iters)
         return x
 
-    shard = jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
-                          out_specs=P("rank"), check_vma=False)
+    shard = compat.shard_map(body, mesh=mesh, in_specs=P("rank"),
+                             out_specs=P("rank"))
     return jax.jit(shard), cfg
 
 
@@ -133,23 +132,14 @@ def build_throughput(mesh, dp_client: Dataplane, dp_server: Dataplane,
 
     from repro.core import techniques as tech
 
-    def mediation_iters(dp):
-        if not dp.kernel_bypass and dp.cfg.emulate_costs:
-            ns = dp.cfg.syscall_cost_ns
-            if dp.mode == "socket":
-                ns += dp.cfg.socket_stack_ns
-            return tech.iters_for_ns(ns)
-        return 0
-
-    def completion_iters(dp):
-        if not dp.polling and dp.cfg.emulate_costs:
-            return tech.iters_for_ns(dp.cfg.interrupt_cost_us * 1e3)
-        return 0
-
-    post_it = mediation_iters(dp_client)
-    poll_it = completion_iters(dp_server if op == "send" else dp_client)
+    # Per-message mediation work comes straight from each endpoint's
+    # compiled pipeline — the same cost model every other path runs.
+    rec = tl.OpRecord(kind="verbs", tag=f"tput/{op}", bytes=msg_bytes,
+                      axes=("rank",))
+    post_it = dp_client.pipeline.send_delay_iters(rec)
     poll_side = 1 if op == "send" else 0
     dp_poll = dp_server if op == "send" else dp_client
+    poll_it = dp_poll.pipeline.complete_delay_iters(rec)
 
     def body(ring):
         rank = jax.lax.axis_index("rank")
@@ -187,8 +177,8 @@ def build_throughput(mesh, dp_client: Dataplane, dp_server: Dataplane,
         ring, _ = jax.lax.scan(one, ring, None, length=iters)
         return ring
 
-    shard = jax.shard_map(body, mesh=mesh, in_specs=P("rank"),
-                          out_specs=P("rank"), check_vma=False)
+    shard = compat.shard_map(body, mesh=mesh, in_specs=P("rank"),
+                             out_specs=P("rank"))
     return jax.jit(shard), cfg
 
 

@@ -28,7 +28,26 @@ if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "
              + sys.argv[1:])
 
 
+def dry_run() -> None:
+    """CI smoke: build the measured paths and execute a minimal slice of
+    each — perftest ping-pong over the verbs layer and one NPB kernel in
+    bypass+cord — without the full figure sweeps."""
+    from benchmarks import npb, perftest
+
+    mesh2 = perftest.make_mesh2()
+    dp = perftest._dp("cord", emulate=True, mesh=mesh2)
+    lat = perftest.pingpong_latency_us(mesh2, dp, dp, 1024, iters=4)
+    print(json.dumps({"table": "dryrun", "pingpong_us": round(lat, 2),
+                      "pipeline": list(dp.pipeline.stage_names)}))
+    for row in npb.run_all(benches=("EP",), modes=("bypass", "cord")):
+        print(json.dumps(row))
+    print("dry-run ok")
+
+
 def main() -> None:
+    if "--dry-run" in sys.argv:
+        dry_run()
+        return
     fast = "--fast" in sys.argv
     rows = []
 

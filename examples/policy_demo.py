@@ -1,5 +1,6 @@
-"""CoRD policies in action: telemetry, quotas and memory-region security
-enforced on a live dataplane — the OS-level control the paper regains.
+"""CoRD policies in action: telemetry, quotas, memory-region security and
+runtime QoS throttling enforced on a live dataplane — the OS-level control
+the paper regains.
 
     PYTHONPATH=src python examples/policy_demo.py
 """
@@ -15,13 +16,17 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import DataplaneConfig
-from repro.core import Dataplane, PolicyViolation
-from repro.core.policies import QuotaPolicy, SecurityPolicy, TelemetryPolicy
+from repro.core import Dataplane, PolicyViolation, compat
+from repro.core.policies import (
+    QoSPolicy,
+    QuotaPolicy,
+    SecurityPolicy,
+    TelemetryPolicy,
+)
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("data",))
     dp = Dataplane(
         DataplaneConfig(mode="cord"), mesh=mesh, tenant="team-a",
         policies=[TelemetryPolicy(), SecurityPolicy(),
@@ -30,10 +35,12 @@ def main():
     grads = jnp.ones((512,))
     dp.reg_mr("grads", jnp.ones(64))    # register the per-shard region
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("data"),
+             out_specs=P("data"))
     def sync(g):
-        return dp.psum(g, "data", tag="grads/allreduce",
-                       mr="grads" if g.shape == (64,) else None)
+        out, _ = dp.psum(g, "data", tag="grads/allreduce",
+                         mr="grads" if g.shape == (64,) else None)
+        return out
 
     out = jax.jit(sync)(grads)
     print("allreduce under full policy stack ok:", float(out[0]))
@@ -54,15 +61,41 @@ def main():
     dp2 = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh,
                     policies=[SecurityPolicy(strict=True)])
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("data"),
+             out_specs=P("data"))
     def rogue(g):
-        return dp2.psum(g, "data", tag="rogue")
+        return dp2.psum(g, "data", tag="rogue")[0]
 
     try:
         jax.jit(rogue)(grads)
         print("rogue op allowed (unexpected)")
     except PolicyViolation as e:
         print(f"strict security refused anonymous op: {e}")
+
+    # runtime QoS: the mediation pipeline's token bucket throttles the
+    # "noisy" tenant's op rate inside traced code — per-tenant counters
+    # come back in the runtime state.
+    dp3 = Dataplane(
+        DataplaneConfig(mode="cord"), mesh=mesh,
+        tenant="victim", tenants=("victim", "noisy"),
+        policies=[TelemetryPolicy(),
+                  QoSPolicy(rates={"noisy": 0.25}, burst=2.0, stall_ns=5e4)])
+
+    @partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
+             out_specs=(P("data"), P()))
+    def burst(g, rt):
+        def one(carry, _):
+            g, rt = carry
+            s, rt = dp3.psum(g.sum(), "data", tag="noisy/op", state=rt,
+                             tenant="noisy")
+            return (g + 0 * s, rt), None
+        (g, rt), _ = jax.lax.scan(one, (g, rt), None, length=16)
+        return g, rt
+
+    _, rt = jax.jit(burst)(grads, dp3.runtime_init())
+    print("\nper-tenant runtime accounting:")
+    for tenant, ctrs in dp3.runtime_report(rt).items():
+        print(f"  {tenant:8s} {ctrs}")
 
 
 if __name__ == "__main__":

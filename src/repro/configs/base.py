@@ -198,6 +198,9 @@ class DataplaneConfig:
     kernel_bypass: bool = True
     # Policy set enforced in cord mode.
     policies: tuple[str, ...] = ("telemetry",)
+    # Tenants sharing this dataplane (per-tenant runtime accounting/QoS).
+    # The Dataplane's own tenant is always included.
+    tenants: tuple[str, ...] = ()
     # Chunked-collective scheduling (QoS + compute/comm overlap).
     chunk_bytes: int = 0          # 0 = no chunking
     # Cost emulation (perftest/NPB measured paths only; off for model paths

@@ -5,10 +5,20 @@ every communication operation in the framework flows, with three modes
 (bypass / cord / socket), CoRD policies (telemetry, security/MR, quota,
 QoS), technique toggles for the paper's Fig.-1 ablations, chunked
 collective scheduling, and an ibverbs-style point-to-point layer for the
-perftest reproduction.
+perftest reproduction.  Mediation itself is one composable artifact — the
+`MediationPipeline` (core/mediation.py) — that the collectives, the GSPMD
+constraint path and the verbs layer all compile their paths from, with
+per-tenant runtime accounting threaded through shard_map bodies via the
+uniform ``(x, state)`` convention.
 """
 
 from repro.core.dataplane import Dataplane, make_dataplane
+from repro.core.mediation import (
+    HostTokenBucket,
+    MediationPipeline,
+    MediationStage,
+    build_pipeline,
+)
 from repro.core.mr import MemoryRegion, MRError, MRRegistry
 from repro.core.policies import (
     Policy,
@@ -23,6 +33,8 @@ from repro.core.telemetry import OpRecord, Telemetry
 
 __all__ = [
     "Dataplane", "make_dataplane",
+    "MediationPipeline", "MediationStage", "build_pipeline",
+    "HostTokenBucket",
     "MemoryRegion", "MRError", "MRRegistry",
     "Policy", "PolicyContext", "PolicyViolation",
     "QoSPolicy", "QuotaPolicy", "SecurityPolicy", "TelemetryPolicy",

@@ -22,6 +22,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry as tl
 from repro.core.policies import QoSPolicy
 
 
@@ -41,14 +42,17 @@ def chunked_psum(
     num_chunks: int,
     tag: str = "chunked_psum",
     qos: str = "default",
-    state: jax.Array | None = None,
+    state=None,
+    tenant: str | None = None,
     interleave: Callable[[int], None] | None = None,
 ):
     """psum ``x`` in ``num_chunks`` sequentially-issued chunks.
 
     Chunks are fenced with optimization barriers so the compiler cannot
     re-merge them into one collective — preserving both the scheduling
-    semantics and the overlap opportunity."""
+    semantics and the overlap opportunity.  Returns ``(out, state)`` —
+    the uniform dataplane state convention; with runtime state threaded,
+    the issuing tenant's ``chunks`` counter accounts every chunk."""
     chunks = split_chunks(x, num_chunks, axis=0)
     outs = []
     for i, c in enumerate(chunks):
@@ -56,12 +60,16 @@ def chunked_psum(
             interleave(i)
         if len(chunks) > 1:
             (c,) = jax.lax.optimization_barrier((c,))
-        r = dp.psum(c, axis, tag=f"{tag}/chunk{i}", qos=qos, state=state)
-        if state is not None:
-            r, state = r
+        r, state = dp.psum(c, axis, tag=f"{tag}/chunk{i}", qos=qos,
+                           state=state, tenant=tenant)
         outs.append(r)
     out = jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
-    return (out, state) if state is not None else out
+    if state is not None and "counters" in state and len(chunks) > 1:
+        ctrs = tl.tenant_counters_bump(state["counters"],
+                                       dp.tenant_index(tenant),
+                                       chunks=len(chunks))
+        state = {**state, "counters": ctrs}
+    return out, state
 
 
 def bucket_pytree(tree, bucket_bytes: int) -> list[list[tuple]]:

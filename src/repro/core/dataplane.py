@@ -14,6 +14,20 @@ Every communication edge in the framework is issued through a
   :meth:`all_to_all` / :meth:`ppermute`, which lower to ``jax.lax``
   collectives *after* passing the mediation layer.
 
+Mediation is one composable artifact: ``self.pipeline`` — a
+:class:`~repro.core.mediation.MediationPipeline` compiled by
+:func:`~repro.core.mediation.build_pipeline` from the mode presets,
+technique toggles and policy set.  The GSPMD constraint path, the five
+explicit collectives and the verbs layer (core/verbs.py) all run it, so a
+mode or policy ablation applies identically everywhere.
+
+Runtime state follows one uniform convention: every explicit collective
+takes an optional ``state`` pytree (from :meth:`runtime_init`) and
+returns ``(out, state)`` — always a pair, state ``None`` when not
+threaded.  The state carries per-tenant counter blocks and policy state
+(QoS token buckets), so quota/QoS have *runtime* teeth inside traced
+code, not just at trace time.
+
 Three modes (paper Fig. 2):
 
 ====== ============= ========= ============ =========================
@@ -35,12 +49,12 @@ import dataclasses
 from typing import Any, Callable, Sequence
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DataplaneConfig
 from repro.core import techniques as tech
 from repro.core import telemetry as tl
+from repro.core.mediation import build_pipeline, runtime_state_init
 from repro.core.mr import MRRegistry
 from repro.core.policies import (
     Policy,
@@ -79,12 +93,17 @@ class Dataplane:
         mesh: Mesh | None = None,
         rules: dict[str, Any] | None = None,
         tenant: str = "default",
+        tenants: Sequence[str] | None = None,
         policies: Sequence[Policy] | None = None,
     ) -> None:
         self.cfg = cfg or DataplaneConfig()
         self.mesh = mesh
         self.rules = dict(rules or {})
         self.tenant = tenant
+        names = list(tenants if tenants is not None else self.cfg.tenants)
+        if tenant not in names:
+            names.insert(0, tenant)
+        self.tenants: tuple[str, ...] = tuple(names)
         if self.cfg.mode not in _MODE_PRESETS:
             raise ValueError(f"unknown dataplane mode {self.cfg.mode!r}")
         preset = _MODE_PRESETS[self.cfg.mode]
@@ -109,6 +128,8 @@ class Dataplane:
             # calibrate the delay primitive NOW (eagerly) — calling it for
             # the first time under a trace would stage the probe jit.
             tech.calibrate()
+        # The single mediation artifact every path compiles against.
+        self.pipeline = build_pipeline(self)
 
     # ------------------------------------------------------------------
     # introspection
@@ -123,65 +144,68 @@ class Dataplane:
 
     def with_mode(self, mode: str) -> "Dataplane":
         return Dataplane(dataclasses.replace(self.cfg, mode=mode),
-                         mesh=self.mesh, rules=self.rules, tenant=self.tenant)
+                         mesh=self.mesh, rules=self.rules, tenant=self.tenant,
+                         tenants=self.tenants)
 
     def reset(self) -> None:
         for p in self.policies:
             p.reset()
 
     # ------------------------------------------------------------------
+    # per-tenant runtime state
+    # ------------------------------------------------------------------
+    def tenant_index(self, tenant: str | None = None) -> int:
+        """Static index of a tenant in this dataplane's tenant table."""
+        name = tenant or self.tenant
+        try:
+            return self.tenants.index(name)
+        except ValueError:
+            raise KeyError(
+                f"unknown tenant {name!r}; known tenants: {self.tenants}")
+
+    def runtime_init(self) -> dict:
+        """Per-tenant runtime-state pytree: thread it through shard_map
+        bodies with the uniform ``(x, state)`` convention."""
+        return runtime_state_init(self.tenants, self.policies)
+
+    def runtime_report(self, state) -> dict:
+        """Host-side per-tenant view of a runtime-state pytree."""
+        return tl.tenant_counters_report(state["counters"], self.tenants)
+
+    # ------------------------------------------------------------------
     # mediation core
     # ------------------------------------------------------------------
-    def _policy_pass(self, rec: tl.OpRecord, operand, mr_name: str | None) -> None:
+    def _policy_pass(self, rec: tl.OpRecord, operand, mr_name: str | None,
+                     tenant: str) -> None:
         """Trace-time policy enforcement (the kernel looking at the WQE)."""
         if not self.enforce:
             return
-        ctx = PolicyContext(rec=rec, tenant=self.tenant, mr_name=mr_name,
+        ctx = PolicyContext(rec=rec, tenant=tenant, mr_name=mr_name,
                             operand=operand)
         for p in self.policies:
             p.on_op(ctx)    # raises PolicyViolation to refuse the op
 
-    def _mediate_in(self, x: jax.Array, rec: tl.OpRecord,
-                    state: jax.Array | None):
-        """Run-time mediation on the send side."""
-        if not self.kernel_bypass:
-            if state is not None:
-                state = tl.counters_bump(state, ops=1, bytes=rec.bytes)
-            if self.cfg.emulate_costs:
-                ns = self.cfg.syscall_cost_ns
-                if self.cfg.mode == "socket":
-                    ns += self.cfg.socket_stack_ns
-                    ns += rec.bytes * self.cfg.socket_ns_per_byte
-                x = tech.delay_chain(x, tech.iters_for_ns(ns))
-        if not self.zero_copy:
-            x = tech.staged_copy(x, copies=1)
-        return x, state
-
-    def _mediate_out(self, x: jax.Array, rec: tl.OpRecord,
-                     state: jax.Array | None):
-        """Run-time mediation on the completion side."""
-        if not self.zero_copy:
-            x = tech.staged_copy(x, copies=1)
-        if not self.polling and self.cfg.emulate_costs:
-            # wait-for-event: interrupt delivery + wakeup instead of polling
-            x = tech.delay_chain(
-                x, tech.iters_for_ns(self.cfg.interrupt_cost_us * 1e3))
-        return x, state
-
     def _record(self, kind: str, tag: str, x, axes, qos: str = "default",
-                mr: str | None = None, count: int = 1) -> tl.OpRecord:
+                mr: str | None = None, count: int = 1,
+                tenant: str | None = None) -> tl.OpRecord:
         shape, dtype = tl.describe(x)
         rec = tl.OpRecord(kind=kind, tag=tag, bytes=tl.nbytes(x),
-                          axes=tuple(axes) if isinstance(axes, (tuple, list)) else (axes,),
+                          axes=tl.normalize_axes(axes),
                           shape=shape, dtype=dtype, mode=self.cfg.mode,
                           qos=qos, count=count)
-        self._policy_pass(rec, x, mr)
-        if self.cfg.mode == "bypass":
-            # The OS cannot see bypassed traffic — but we still let the
-            # (trace-time-only) telemetry record it when explicitly enabled
-            # for benchmarking, mirroring NIC counters.
-            pass
+        self._policy_pass(rec, x, mr, tenant or self.tenant)
         return rec
+
+    def _mediate(self, collective, kind: str, x, axis, tag: str, *,
+                 mr: str | None, state, qos: str, tenant: str | None):
+        """One dataplane op: record → pipeline.send → collective →
+        pipeline.complete.  All five explicit collectives are this."""
+        rec = self._record(kind, tag, x, axis, qos, mr, tenant=tenant)
+        ti = self.tenant_index(tenant)
+        x, state = self.pipeline.send(x, rec, state, ti)
+        out = collective(x)
+        out, state = self.pipeline.complete(out, rec, state, ti)
+        return out, state
 
     # ------------------------------------------------------------------
     # GSPMD-mode mediation: logical sharding constraints
@@ -221,62 +245,64 @@ class Dataplane:
         return NamedSharding(self.mesh, self.spec(names))
 
     def constrain(self, x: jax.Array, names: Sequence[str | None | tuple],
-                  tag: str = "constraint") -> jax.Array:
-        """Issue a sharding edge through the dataplane (GSPMD mode)."""
+                  tag: str = "constraint", qos: str = "default",
+                  tenant: str | None = None) -> jax.Array:
+        """Issue a sharding edge through the dataplane (GSPMD mode).
+
+        Runs the same mediation pipeline as the explicit collectives
+        (send side only — GSPMD materializes the completion); no runtime
+        state can be threaded through a pjit constraint, so stateful
+        stages are inert here."""
         if self.mesh is None:
             return x
         spec = self.spec(names)
-        self._record("constraint", tag, x, tuple(a for a in jax.tree.leaves(tuple(spec)) if a))
+        rec = self._record("constraint", tag, x, spec, qos, tenant=tenant)
+        x, _ = self.pipeline.send(x, rec, None, self.tenant_index(tenant))
         return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
 
     # ------------------------------------------------------------------
-    # Explicit collectives (inside shard_map)
+    # Explicit collectives (inside shard_map) — uniform (out, state)
     # ------------------------------------------------------------------
     def psum(self, x, axis, tag: str = "psum", mr: str | None = None,
-             state: jax.Array | None = None, qos: str = "default"):
-        rec = self._record("all_reduce", tag, x, axis, qos, mr)
-        x, state = self._mediate_in(x, rec, state)
-        out = jax.lax.psum(x, axis)
-        out, state = self._mediate_out(out, rec, state)
-        return (out, state) if state is not None else out
+             state=None, qos: str = "default", tenant: str | None = None):
+        return self._mediate(lambda v: jax.lax.psum(v, axis), "all_reduce",
+                             x, axis, tag, mr=mr, state=state, qos=qos,
+                             tenant=tenant)
 
     def all_gather(self, x, axis, tag: str = "all_gather", *, gather_axis: int = 0,
                    tiled: bool = False, mr: str | None = None,
-                   state: jax.Array | None = None, qos: str = "default"):
-        rec = self._record("all_gather", tag, x, axis, qos, mr)
-        x, state = self._mediate_in(x, rec, state)
-        out = jax.lax.all_gather(x, axis, axis=gather_axis, tiled=tiled)
-        out, state = self._mediate_out(out, rec, state)
-        return (out, state) if state is not None else out
+                   state=None, qos: str = "default", tenant: str | None = None):
+        return self._mediate(
+            lambda v: jax.lax.all_gather(v, axis, axis=gather_axis, tiled=tiled),
+            "all_gather", x, axis, tag, mr=mr, state=state, qos=qos,
+            tenant=tenant)
 
     def reduce_scatter(self, x, axis, tag: str = "reduce_scatter", *,
                        scatter_axis: int = 0, mr: str | None = None,
-                       state: jax.Array | None = None, qos: str = "default"):
-        rec = self._record("reduce_scatter", tag, x, axis, qos, mr)
-        x, state = self._mediate_in(x, rec, state)
-        out = jax.lax.psum_scatter(x, axis, scatter_dimension=scatter_axis,
-                                   tiled=True)
-        out, state = self._mediate_out(out, rec, state)
-        return (out, state) if state is not None else out
+                       state=None, qos: str = "default",
+                       tenant: str | None = None):
+        return self._mediate(
+            lambda v: jax.lax.psum_scatter(v, axis,
+                                           scatter_dimension=scatter_axis,
+                                           tiled=True),
+            "reduce_scatter", x, axis, tag, mr=mr, state=state, qos=qos,
+            tenant=tenant)
 
     def all_to_all(self, x, axis, tag: str = "all_to_all", *, split_axis: int = 0,
                    concat_axis: int = 0, mr: str | None = None,
-                   state: jax.Array | None = None, qos: str = "default"):
-        rec = self._record("all_to_all", tag, x, axis, qos, mr)
-        x, state = self._mediate_in(x, rec, state)
-        out = jax.lax.all_to_all(x, axis, split_axis=split_axis,
-                                 concat_axis=concat_axis, tiled=True)
-        out, state = self._mediate_out(out, rec, state)
-        return (out, state) if state is not None else out
+                   state=None, qos: str = "default", tenant: str | None = None):
+        return self._mediate(
+            lambda v: jax.lax.all_to_all(v, axis, split_axis=split_axis,
+                                         concat_axis=concat_axis, tiled=True),
+            "all_to_all", x, axis, tag, mr=mr, state=state, qos=qos,
+            tenant=tenant)
 
     def ppermute(self, x, axis, perm, tag: str = "ppermute",
-                 mr: str | None = None, state: jax.Array | None = None,
-                 qos: str = "default"):
-        rec = self._record("collective_permute", tag, x, axis, qos, mr)
-        x, state = self._mediate_in(x, rec, state)
-        out = jax.lax.ppermute(x, axis, perm)
-        out, state = self._mediate_out(out, rec, state)
-        return (out, state) if state is not None else out
+                 mr: str | None = None, state=None, qos: str = "default",
+                 tenant: str | None = None):
+        return self._mediate(
+            lambda v: jax.lax.ppermute(v, axis, perm), "collective_permute",
+            x, axis, tag, mr=mr, state=state, qos=qos, tenant=tenant)
 
     # ------------------------------------------------------------------
     # control plane

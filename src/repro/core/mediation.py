@@ -1,0 +1,303 @@
+"""The composable mediation pipeline — CoRD's "kernel on the data path"
+as one reusable artifact.
+
+The paper's claim is that OS-level control over the RDMA dataplane is
+cheap because mediation is built from a handful of composable techniques.
+This module is that composition: a :class:`MediationPipeline` is an
+ordered list of :class:`MediationStage` objects, compiled once per
+:class:`~repro.core.dataplane.Dataplane` from its mode, technique toggles
+and policy set by :func:`build_pipeline`.  Every path that crosses the
+dataplane — GSPMD sharding constraints, explicit shard_map collectives,
+and the ibverbs-style point-to-point layer — runs the *same* pipeline, so
+mode/policy ablations apply identically everywhere.
+
+Stages (declared order):
+
+  ============== ========================================== ==============
+  stage          emulates                                   side
+  ============== ========================================== ==============
+  syscall-cost   user→kernel crossing (kernel bypass off)   send
+  socket-stack   full kernel network stack + per-byte cost  send
+  staged-copy    bounce-buffer copies (zero copy off)       send+complete
+  interrupt-wait interrupt delivery + wakeup (polling off)  complete
+  token-bucket   per-tenant QoS rate limiting (QoSPolicy)   send
+  counter-bump   per-tenant runtime accounting + quota mark send
+  ============== ========================================== ==============
+
+Every stage preserves values bit-exactly: mediation changes *cost* and
+*state*, never results.
+
+Runtime state is a pytree dict threaded through shard_map bodies with the
+uniform ``(x, state)`` convention:
+
+    state = dp.runtime_init()              # {"counters": (T, C) f32, ...}
+    out, state = dp.psum(x, "data", state=state)
+
+``state=None`` disables all stateful stages (GSPMD constraint paths,
+where no state can be threaded, pass None).
+
+:class:`HostTokenBucket` is the host-side mirror of the traced token
+bucket, used by the serving engine for tenant admission control.
+"""
+
+from __future__ import annotations
+
+from repro.core import techniques as tech
+from repro.core import telemetry as tl
+from repro.core.policies import Policy, QoSPolicy, QuotaPolicy
+
+
+# ---------------------------------------------------------------------------
+# Stage protocol
+# ---------------------------------------------------------------------------
+
+class MediationStage:
+    """One composable mediation technique.
+
+    ``send`` runs on the issue side (before the NIC DMA / collective);
+    ``complete`` on the completion side.  Both must return ``x``
+    value-identical — a stage may delay, copy, account or throttle, never
+    alter.  ``send_delay_iters`` / ``complete_delay_iters`` report the
+    stage's static serial-delay cost so benchmark harnesses can aggregate
+    per-op mediation work without reimplementing the cost model."""
+
+    name = "stage"
+
+    def send(self, x, rec: tl.OpRecord, state, tenant_idx: int):
+        return x, state
+
+    def complete(self, x, rec: tl.OpRecord, state, tenant_idx: int):
+        return x, state
+
+    def send_delay_iters(self, rec: tl.OpRecord) -> int:
+        return 0
+
+    def complete_delay_iters(self, rec: tl.OpRecord) -> int:
+        return 0
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class SyscallCostStage(MediationStage):
+    """The user→kernel crossing paid per op when kernel bypass is off."""
+
+    name = "syscall-cost"
+
+    def __init__(self, syscall_ns: float):
+        self.syscall_ns = float(syscall_ns)
+
+    def send(self, x, rec, state, tenant_idx):
+        return tech.delay_chain(x, self.send_delay_iters(rec)), state
+
+    def send_delay_iters(self, rec):
+        return tech.iters_for_ns(self.syscall_ns)
+
+
+class SocketStackStage(MediationStage):
+    """The extra cost of the full kernel network stack (socket mode):
+    a fixed per-op term plus a per-payload-byte term (IPoIB bandwidth
+    degradation)."""
+
+    name = "socket-stack"
+
+    def __init__(self, stack_ns: float, ns_per_byte: float):
+        self.stack_ns = float(stack_ns)
+        self.ns_per_byte = float(ns_per_byte)
+
+    def send(self, x, rec, state, tenant_idx):
+        return tech.delay_chain(x, self.send_delay_iters(rec)), state
+
+    def send_delay_iters(self, rec):
+        return tech.iters_for_ns(self.stack_ns + rec.bytes * self.ns_per_byte)
+
+
+class StagedCopyStage(MediationStage):
+    """Bounce-buffer copies on both sides when zero copy is removed."""
+
+    name = "staged-copy"
+
+    def __init__(self, copies: int = 1):
+        self.copies = int(copies)
+
+    def send(self, x, rec, state, tenant_idx):
+        return tech.staged_copy(x, copies=self.copies), state
+
+    def complete(self, x, rec, state, tenant_idx):
+        return tech.staged_copy(x, copies=self.copies), state
+
+
+class InterruptWaitStage(MediationStage):
+    """Wait-for-event completion: interrupt delivery + wakeup instead of
+    busy polling."""
+
+    name = "interrupt-wait"
+
+    def __init__(self, interrupt_us: float):
+        self.interrupt_us = float(interrupt_us)
+
+    def complete(self, x, rec, state, tenant_idx):
+        return tech.delay_chain(x, self.complete_delay_iters(rec)), state
+
+    def complete_delay_iters(self, rec):
+        return tech.iters_for_ns(self.interrupt_us * 1e3)
+
+
+class TokenBucketStage(MediationStage):
+    """Per-tenant QoS throttling: delegates to QoSPolicy.on_op_runtime
+    (the traced token bucket)."""
+
+    name = "token-bucket"
+
+    def __init__(self, policy: QoSPolicy, tenants: tuple[str, ...]):
+        self.policy = policy
+        self.tenants = tenants
+
+    def send(self, x, rec, state, tenant_idx):
+        return self.policy.on_op_runtime(x, state, rec,
+                                         self.tenants[tenant_idx], tenant_idx)
+
+
+class CounterBumpStage(MediationStage):
+    """The 'syscall body': bump the issuing tenant's runtime counters, then
+    let the quota policy mark over-budget traffic."""
+
+    name = "counter-bump"
+
+    def __init__(self, tenants: tuple[str, ...],
+                 quota: QuotaPolicy | None = None):
+        self.tenants = tenants
+        self.quota = quota
+
+    def send(self, x, rec, state, tenant_idx):
+        if state is None or "counters" not in state:
+            return x, state
+        ctrs = tl.tenant_counters_bump(state["counters"], tenant_idx,
+                                       ops=rec.count,
+                                       bytes=rec.bytes * rec.count)
+        state = {**state, "counters": ctrs}
+        if self.quota is not None:
+            x, state = self.quota.on_op_runtime(
+                x, state, rec, self.tenants[tenant_idx], tenant_idx)
+        return x, state
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+class MediationPipeline:
+    """An ordered composition of mediation stages.
+
+    ``send``/``complete`` apply every stage's respective hook in declared
+    order.  An empty pipeline (bypass mode) is the identity — the OS is
+    off the data path."""
+
+    def __init__(self, stages=()):
+        self.stages: tuple[MediationStage, ...] = tuple(stages)
+
+    @property
+    def stage_names(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.stages)
+
+    def send(self, x, rec: tl.OpRecord, state=None, tenant_idx: int = 0):
+        for s in self.stages:
+            x, state = s.send(x, rec, state, tenant_idx)
+        return x, state
+
+    def complete(self, x, rec: tl.OpRecord, state=None, tenant_idx: int = 0):
+        for s in self.stages:
+            x, state = s.complete(x, rec, state, tenant_idx)
+        return x, state
+
+    def send_delay_iters(self, rec: tl.OpRecord) -> int:
+        return sum(s.send_delay_iters(rec) for s in self.stages)
+
+    def complete_delay_iters(self, rec: tl.OpRecord) -> int:
+        return sum(s.complete_delay_iters(rec) for s in self.stages)
+
+    def __repr__(self) -> str:
+        return f"MediationPipeline{self.stage_names}"
+
+
+def build_pipeline(dp) -> MediationPipeline:
+    """Compile a dataplane's effective techniques + policies into stages.
+
+    ``dp`` duck-types a Dataplane: cfg, mode, kernel_bypass, zero_copy,
+    polling, enforce, policies, tenants."""
+    cfg = dp.cfg
+    stages: list[MediationStage] = []
+    mediated = not dp.kernel_bypass        # the OS sees this traffic
+    if mediated and cfg.emulate_costs:
+        stages.append(SyscallCostStage(cfg.syscall_cost_ns))
+        if dp.mode == "socket":
+            stages.append(SocketStackStage(cfg.socket_stack_ns,
+                                           cfg.socket_ns_per_byte))
+    if not dp.zero_copy:
+        stages.append(StagedCopyStage())
+    if not dp.polling and cfg.emulate_costs:
+        stages.append(InterruptWaitStage(cfg.interrupt_cost_us))
+    if dp.enforce:
+        qos = next((p for p in dp.policies
+                    if isinstance(p, QoSPolicy) and p.rates), None)
+        if qos is not None:
+            stages.append(TokenBucketStage(qos, dp.tenants))
+    if mediated:
+        quota = next((p for p in dp.policies
+                      if isinstance(p, QuotaPolicy)), None) \
+            if dp.enforce else None
+        stages.append(CounterBumpStage(dp.tenants, quota))
+    return MediationPipeline(stages)
+
+
+def runtime_state_init(tenants: tuple[str, ...],
+                       policies: list[Policy]) -> dict:
+    """The per-tenant runtime-state pytree threaded through shard_map:
+    a counter block plus each stateful policy's slice keyed by name."""
+    state = {"counters": tl.tenant_counters_init(len(tenants))}
+    for p in policies:
+        ps = p.init_state(len(tenants))
+        if ps is not None:
+            state[p.name] = ps
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Host-side token bucket (serving admission control)
+# ---------------------------------------------------------------------------
+
+class HostTokenBucket:
+    """Pure-python mirror of the traced QoS token bucket.
+
+    The serving engine refills explicitly once per batching round (the
+    host-side analogue of per-op refill), keeping admission deterministic
+    and clock-free for tests."""
+
+    def __init__(self, rate: float, burst: float):
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+
+    def refill(self) -> None:
+        self.tokens = min(self.tokens + self.rate, self.burst)
+
+    def take(self, n: float = 1.0) -> bool:
+        if self.tokens >= n:
+            self.tokens -= n
+            return True
+        return False
+
+    @classmethod
+    def from_policy(cls, qos: QoSPolicy | None) -> dict[str, "HostTokenBucket"]:
+        if qos is None:
+            return {}
+        return {t: cls(rate, qos.burst)
+                for t, rate in qos.rates.items() if rate > 0}
+
+
+__all__ = [
+    "MediationStage", "MediationPipeline", "build_pipeline",
+    "runtime_state_init", "SyscallCostStage", "SocketStackStage",
+    "StagedCopyStage", "InterruptWaitStage", "TokenBucketStage",
+    "CounterBumpStage", "HostTokenBucket",
+]

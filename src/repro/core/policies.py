@@ -5,12 +5,22 @@ A policy sees every dataplane op at issue time and may
   * account it        (TelemetryPolicy — observability)
   * validate it       (SecurityPolicy — registered memory regions only)
   * meter it          (QuotaPolicy — per-tenant byte budgets)
-  * schedule it       (QoSPolicy — chunk issue order by priority class)
+  * throttle it       (QoSPolicy — priority classes + token-bucket limiter)
 
 Policies must be *non-blocking* and constant-cost per op — the paper's
-requirement that keeps CoRD fast.  Trace-time work (validation, accounting
-into the host-side Telemetry) is free at run time; in-graph work (counter
-bumps, the mediation delay) is the measured per-op crossing cost.
+requirement that keeps CoRD fast.  Each policy has two planes:
+
+* **trace-time hook** ``on_op`` — the kernel inspecting the WQE while the
+  program is being built.  Free at run time; may refuse the op by raising
+  :class:`PolicyViolation`.
+* **runtime hooks** ``init_state`` / ``on_op_runtime`` — contribute a
+  pytree slice to the dataplane's per-tenant runtime state and transform
+  ``(x, state)`` inside traced code.  This is how QoS becomes a *real*
+  rate limiter and quota becomes *real* per-tenant accounting: the work
+  happens on the measured path, not just when the graph is traced.
+
+Runtime hooks are invoked by the mediation pipeline stages
+(core/mediation.py), never directly by user code.
 """
 
 from __future__ import annotations
@@ -18,7 +28,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import techniques as tech
 from repro.core import telemetry as tl
 from repro.core.mr import MRError, MRRegistry
 
@@ -37,19 +49,31 @@ class PolicyContext:
 
 
 class Policy:
-    """Base policy: no-op."""
+    """Base policy: no-op on both planes."""
 
     name = "policy"
 
+    # ---- trace-time plane ------------------------------------------------
     def on_op(self, ctx: PolicyContext) -> None:
         """Trace-time hook. Raise PolicyViolation to reject the op."""
 
-    def in_graph_cost(self, ctx: PolicyContext) -> int:
-        """Extra mediation iterations this policy adds per op (run time)."""
-        return 0
-
     def reset(self) -> None:
         pass
+
+    # ---- runtime plane ---------------------------------------------------
+    def init_state(self, num_tenants: int):
+        """Host-side: this policy's slice of the runtime state pytree, or
+        None if the policy keeps no traced state."""
+        return None
+
+    def on_op_runtime(self, x, state, rec: tl.OpRecord, tenant: str,
+                      tenant_idx: int):
+        """Traced hook: transform ``(x, state)`` for one issued op.
+
+        ``state`` is the dataplane's full runtime-state dict (the policy's
+        own slice lives under ``state[self.name]``); ``tenant``/
+        ``tenant_idx`` are static.  Must keep ``x`` value-identical."""
+        return x, state
 
 
 @dataclass
@@ -91,10 +115,20 @@ class SecurityPolicy(Policy):
 class QuotaPolicy(Policy):
     """Per-tenant communication byte budgets (isolation / multi-tenancy —
     what Justitia/FreeFlow do with extra middleboxes, done at the
-    mediation point instead)."""
+    mediation point instead).
+
+    Two enforcement planes:
+      * ``hard=True`` (default): exceeding the budget at trace time raises
+        PolicyViolation — the op is refused before it exists.
+      * runtime: the counter-bump mediation stage calls
+        :meth:`on_op_runtime` after bumping the tenant's byte counter, so
+        over-budget traffic is marked in the per-tenant ``denied`` counter
+        on the measured path (useful with ``hard=False`` for observe-only
+        metering)."""
 
     limits: dict[str, int] = field(default_factory=dict)   # tenant -> bytes
     used: dict[str, int] = field(default_factory=dict)
+    hard: bool = True
     name: str = "quota"
 
     def on_op(self, ctx: PolicyContext) -> None:
@@ -102,11 +136,22 @@ class QuotaPolicy(Policy):
         if lim is None:
             return
         used = self.used.get(ctx.tenant, 0) + ctx.rec.bytes * ctx.rec.count
-        if used > lim:
+        if used > lim and self.hard:
             raise PolicyViolation(
                 f"tenant {ctx.tenant!r} exceeded dataplane quota "
                 f"({used} > {lim} bytes)")
         self.used[ctx.tenant] = used
+
+    def on_op_runtime(self, x, state, rec, tenant, tenant_idx):
+        lim = self.limits.get(tenant)
+        if state is None or lim is None or "counters" not in state:
+            return x, state
+        # counter-bump has already added this op's bytes: flag the tenant's
+        # row as denied when its cumulative runtime bytes exceed the budget.
+        used = state["counters"][tenant_idx, tl.CTR_BYTES]
+        over = (used > lim).astype(jnp.float32)
+        ctrs = state["counters"].at[tenant_idx, tl.CTR_DENIED].add(over)
+        return x, {**state, "counters": ctrs}
 
     def reset(self) -> None:
         self.used.clear()
@@ -114,16 +159,31 @@ class QuotaPolicy(Policy):
 
 @dataclass
 class QoSPolicy(Policy):
-    """Priority classes for chunk scheduling.
+    """Priority classes + per-tenant token-bucket rate limiting.
 
-    Ops tagged with a higher-priority class get their chunks issued first
-    when the dataplane splits large collectives (core/chunking.py). This is
-    a *scheduling* policy: zero data-path cost, pure issue-order control —
-    the kind of control the kernel regains in CoRD."""
+    Two mechanisms, matching the two kinds of control the kernel regains
+    in CoRD:
+
+    * **scheduling** — ops tagged with a higher-priority class get their
+      chunks issued first when the dataplane splits large collectives
+      (core/chunking.py).  Zero data-path cost, pure issue-order control.
+    * **throttling** — tenants listed in ``rates`` are limited by a token
+      bucket evaluated *inside traced code*: each op consumes one token,
+      each op refills ``rates[tenant]`` tokens (capacity ``burst``).  An
+      op issued on an empty bucket is stalled by a serial delay
+      proportional to the deficit (``stall_ns`` per missing token) and
+      accounted in the tenant's ``throttled`` runtime counter.  Values are
+      never altered — only op *rate* is."""
 
     # class name -> priority (lower = sooner). "default" = 100.
     classes: dict[str, int] = field(default_factory=lambda: {"default": 100})
+    rates: dict[str, float] = field(default_factory=dict)  # tenant -> tokens/op
+    burst: float = 4.0
+    stall_ns: float = 0.0   # emulated stall per missing token; 0 = account only
     name: str = "qos"
+
+    def __post_init__(self):
+        self._stall_iters = 0
 
     def priority(self, qos_class: str) -> int:
         return self.classes.get(qos_class, 100)
@@ -131,6 +191,37 @@ class QoSPolicy(Policy):
     def on_op(self, ctx: PolicyContext) -> None:
         # Record the class; scheduling happens in the chunker.
         ctx.rec.qos = ctx.rec.qos or "default"
+
+    def init_state(self, num_tenants: int):
+        if not self.rates:
+            return None
+        # convert the stall cost to delay iterations now, host-side —
+        # calibrate() must never run under a trace.
+        self._stall_iters = tech.iters_for_ns(self.stall_ns) \
+            if self.stall_ns > 0 else 0
+        return {"tokens": jnp.full((num_tenants,), float(self.burst),
+                                   jnp.float32)}
+
+    def on_op_runtime(self, x, state, rec, tenant, tenant_idx):
+        rate = self.rates.get(tenant)
+        if state is None or rate is None or self.name not in state:
+            return x, state
+        tokens = state[self.name]["tokens"]
+        tk = jnp.minimum(tokens[tenant_idx] + rate, float(self.burst))
+        ok = tk >= 1.0
+        new_tk = jnp.where(ok, tk - 1.0, 0.0)
+        deficit = jnp.where(ok, 0.0, 1.0 - tk)
+        if self._stall_iters:
+            x = tech.delay_chain_dyn(
+                x, (deficit * self._stall_iters).astype(jnp.int32))
+        state = {**state,
+                 self.name: {"tokens": tokens.at[tenant_idx].set(new_tk)}}
+        if "counters" in state:
+            ctrs = tl.tenant_counters_bump(
+                state["counters"], tenant_idx,
+                throttled=(~ok).astype(jnp.float32))
+            state = {**state, "counters": ctrs}
+        return x, state
 
 
 def default_policies() -> list[Policy]:

@@ -31,13 +31,20 @@ import jax.numpy as jnp
 # Serial delay primitive
 # ---------------------------------------------------------------------------
 
-def delay_scalar(iters: int, seed=None) -> jax.Array:
-    """A serial dependent scalar computation of ``iters`` steps."""
+def delay_scalar(iters, seed=None) -> jax.Array:
+    """A serial dependent scalar computation of ``iters`` steps.
+
+    ``iters`` may be a static int (unrollable fori_loop) or a traced int32
+    scalar (lowers to a while loop with a dynamic trip count)."""
     def body(i, v):
         # dependent fma chain; cannot be vectorized away
         return v * 1.0000001 + 1e-9
 
-    return jax.lax.fori_loop(0, max(iters, 0),
+    if isinstance(iters, jax.Array):
+        iters = jnp.maximum(iters.astype(jnp.int32), 0)
+    else:
+        iters = max(int(iters), 0)
+    return jax.lax.fori_loop(0, iters,
                              body, seed if seed is not None
                              else jnp.float32(1.0))
 
@@ -64,6 +71,15 @@ def delay_chain(x: jax.Array, iters: int) -> jax.Array:
     if iters <= 0:
         return x
     return tie(x, delay_scalar(iters))
+
+
+def delay_chain_dyn(x: jax.Array, iters: jax.Array) -> jax.Array:
+    """``delay_chain`` with a *traced* trip count (lowers to a while loop).
+
+    Used by runtime policies whose stall length depends on traced state —
+    e.g. the QoS token bucket stalling proportionally to its deficit.
+    Zero iterations is a cheap no-op loop; the output stays bit-identical."""
+    return tie(x, delay_scalar(jnp.maximum(jnp.asarray(iters, jnp.int32), 0)))
 
 
 @functools.cache
@@ -107,5 +123,5 @@ def staged_copy(x: jax.Array, copies: int = 1) -> jax.Array:
     return flat.reshape(shape)
 
 
-__all__ = ["delay_chain", "delay_scalar", "tie", "calibrate",
-           "iters_for_ns", "staged_copy"]
+__all__ = ["delay_chain", "delay_chain_dyn", "delay_scalar", "tie",
+           "calibrate", "iters_for_ns", "staged_copy"]

@@ -28,9 +28,11 @@ import numpy as np
 # Counter classes for in-graph accounting.
 CTR_OPS = 0          # number of dataplane ops issued
 CTR_BYTES = 1        # bytes moved through the dataplane
-CTR_DENIED = 2       # ops rejected by policy (quota/security)
+CTR_DENIED = 2       # ops over a policy limit (quota) observed at run time
 CTR_CHUNKS = 3       # chunks issued by the QoS scheduler
-NUM_COUNTERS = 4
+CTR_THROTTLED = 4    # ops stalled by the QoS token bucket
+NUM_COUNTERS = 5
+COUNTER_NAMES = ("ops", "bytes", "denied", "chunks", "throttled")
 
 
 @dataclass
@@ -96,22 +98,46 @@ def counters_init() -> jax.Array:
     return jnp.zeros((NUM_COUNTERS,), dtype=jnp.float32)
 
 
-def counters_bump(ctrs: jax.Array, *, ops: int = 0, bytes: int = 0,
-                  denied: int = 0, chunks: int = 0) -> jax.Array:
+def _counter_row(ops, bytes, denied, chunks, throttled) -> jax.Array:
+    return jnp.stack([jnp.asarray(v, jnp.float32)
+                      for v in (ops, bytes, denied, chunks, throttled)])
+
+
+def counters_bump(ctrs: jax.Array, *, ops=0, bytes=0, denied=0, chunks=0,
+                  throttled=0) -> jax.Array:
     """Return updated counters. This is the per-op mediation computation in
     cord mode — a handful of scalar adds, the 'syscall body'."""
-    upd = jnp.zeros_like(ctrs)
-    upd = upd.at[CTR_OPS].add(float(ops))
-    upd = upd.at[CTR_BYTES].add(float(bytes))
-    upd = upd.at[CTR_DENIED].add(float(denied))
-    upd = upd.at[CTR_CHUNKS].add(float(chunks))
-    return ctrs + upd
+    return ctrs + _counter_row(ops, bytes, denied, chunks, throttled)
 
 
 def counters_dict(ctrs: np.ndarray) -> dict[str, float]:
     c = np.asarray(ctrs)
-    return {"ops": float(c[CTR_OPS]), "bytes": float(c[CTR_BYTES]),
-            "denied": float(c[CTR_DENIED]), "chunks": float(c[CTR_CHUNKS])}
+    return {name: float(c[i]) for i, name in enumerate(COUNTER_NAMES)}
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant counter blocks (runtime accounting for multi-tenant dataplanes)
+# ---------------------------------------------------------------------------
+
+def tenant_counters_init(num_tenants: int) -> jax.Array:
+    """A (num_tenants, NUM_COUNTERS) float32 counter block — the per-tenant
+    runtime state the mediation pipeline bumps inside traced code."""
+    return jnp.zeros((num_tenants, NUM_COUNTERS), dtype=jnp.float32)
+
+
+def tenant_counters_bump(ctrs: jax.Array, tenant_idx: int, *, ops=0, bytes=0,
+                         denied=0, chunks=0, throttled=0) -> jax.Array:
+    """Bump one tenant's counter row. ``tenant_idx`` is a static index into
+    the dataplane's tenant table; the bump values may be traced scalars."""
+    return ctrs.at[tenant_idx].add(
+        _counter_row(ops, bytes, denied, chunks, throttled))
+
+
+def tenant_counters_report(ctrs, tenants: tuple[str, ...]) -> dict:
+    """Host-side view: {tenant: {ops, bytes, denied, chunks, throttled}}."""
+    c = np.asarray(ctrs)
+    return {t: {name: float(c[i, j]) for j, name in enumerate(COUNTER_NAMES)}
+            for i, t in enumerate(tenants)}
 
 
 def nbytes(x) -> int:
@@ -124,8 +150,22 @@ def describe(x) -> tuple[tuple[int, ...], str]:
     return tuple(x.shape), str(jnp.dtype(x.dtype).name)
 
 
+def normalize_axes(axes) -> tuple[str, ...]:
+    """Flatten any axes description — a string, a (possibly nested) tuple,
+    or a PartitionSpec — into the tuple of mesh-axis names an OpRecord
+    stores.  Shared by GSPMD constraints and the explicit collectives."""
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    leaves = jax.tree.leaves(tuple(axes))
+    return tuple(a for a in leaves if isinstance(a, str) and a)
+
+
 __all__ = [
     "OpRecord", "Telemetry", "counters_init", "counters_bump",
-    "counters_dict", "nbytes", "describe",
-    "CTR_OPS", "CTR_BYTES", "CTR_DENIED", "CTR_CHUNKS", "NUM_COUNTERS",
+    "counters_dict", "tenant_counters_init", "tenant_counters_bump",
+    "tenant_counters_report", "nbytes", "describe", "normalize_axes",
+    "CTR_OPS", "CTR_BYTES", "CTR_DENIED", "CTR_CHUNKS", "CTR_THROTTLED",
+    "NUM_COUNTERS", "COUNTER_NAMES",
 ]

@@ -13,6 +13,12 @@ This is the "narrow waist" (paper §4) the perftest reproduction runs on:
 * **poll_cq** completes operations; with polling disabled the completion
   path pays the emulated interrupt cost.
 
+Mediation is NOT reimplemented here: the per-endpoint issue/completion
+work is the dataplane's :class:`~repro.core.mediation.MediationPipeline`
+(``dp.pipeline``), applied on the active rank only via
+:func:`rank_mediate` / :func:`rank_complete` — the same composable stages
+the collectives and GSPMD constraints run.
+
 Transports: ``RC`` (any message size, send/recv + one-sided READ/WRITE)
 and ``UD`` (≤ 4 KiB MTU, send/recv only) — mirroring the paper's matrix.
 One-sided ops mediate only on the *active* side (paper Fig. 3: RDMA read
@@ -22,12 +28,11 @@ with CoRD on the passive server has zero overhead).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import techniques as tech
+from repro.core import telemetry as tl
 from repro.core.dataplane import Dataplane
 
 UD_MTU = 4096
@@ -60,44 +65,41 @@ def qp_init(cfg: QPConfig, dtype=jnp.uint8) -> dict:
         "recv_ring": jnp.zeros((cfg.depth, slot), dtype),
         "sq_head": jnp.zeros((), jnp.int32),     # posted sends
         "cq_sent": jnp.zeros((), jnp.int32),     # completed sends
-        "cq_rcvd": jnp.zeros((), jnp.int32),     # completed recvs
+        "cq_rcvd": jnp.zeros((), jnp.int32),     # completed (polled) recvs
     }
 
 
 # ---------------------------------------------------------------------------
 # per-rank conditional mediation: client and server may independently run
-# bypass (BP) or CoRD (CD) — the paper's fig. 3 matrix.
+# bypass (BP) or CoRD (CD) — the paper's fig. 3 matrix.  Both sides'
+# work is the dataplane's mediation pipeline, gated by lax.cond.
 # ---------------------------------------------------------------------------
 
-def _mediated(dp: Dataplane, x: jax.Array) -> jax.Array:
-    """The work one endpoint does to issue a dataplane op under ``dp``."""
-    if not dp.kernel_bypass and dp.cfg.emulate_costs:
-        ns = dp.cfg.syscall_cost_ns
-        if dp.mode == "socket":
-            ns += dp.cfg.socket_stack_ns
-        x = tech.delay_chain(x, tech.iters_for_ns(ns))
-    if not dp.zero_copy:
-        x = tech.staged_copy(x, copies=1)
-    return x
+def _verbs_rec(dp: Dataplane, x: jax.Array, tag: str) -> tl.OpRecord:
+    shape, dtype = tl.describe(x)
+    return tl.OpRecord(kind="verbs", tag=tag, bytes=tl.nbytes(x),
+                       axes=("rank",), shape=shape, dtype=dtype,
+                       mode=dp.mode)
 
 
 def rank_mediate(x: jax.Array, rank: jax.Array, active_rank: int,
-                 dp: Dataplane) -> jax.Array:
-    """Apply ``dp``'s mediation only on ``active_rank`` (SPMD-safe)."""
+                 dp: Dataplane, tag: str = "verbs/post") -> jax.Array:
+    """Apply ``dp.pipeline``'s issue-side stages only on ``active_rank``
+    (SPMD-safe; value-only — no runtime state crosses the cond)."""
+    rec = _verbs_rec(dp, x, tag)
     return jax.lax.cond(rank == active_rank,
-                        partial(_mediated, dp), lambda v: v, x)
+                        lambda v: dp.pipeline.send(v, rec)[0],
+                        lambda v: v, x)
 
 
-def _completion(x: jax.Array, rank: jax.Array, active_rank: int,
-                dp: Dataplane) -> jax.Array:
-    def waited(v):
-        if not dp.polling and dp.cfg.emulate_costs:
-            v = tech.delay_chain(
-                v, tech.iters_for_ns(dp.cfg.interrupt_cost_us * 1e3))
-        if not dp.zero_copy:
-            v = tech.staged_copy(v, copies=1)
-        return v
-    return jax.lax.cond(rank == active_rank, waited, lambda v: v, x)
+def rank_complete(x: jax.Array, rank: jax.Array, active_rank: int,
+                  dp: Dataplane, tag: str = "verbs/completion") -> jax.Array:
+    """Apply ``dp.pipeline``'s completion-side stages only on
+    ``active_rank`` (interrupt wait / bounce copy)."""
+    rec = _verbs_rec(dp, x, tag)
+    return jax.lax.cond(rank == active_rank,
+                        lambda v: dp.pipeline.complete(v, rec)[0],
+                        lambda v: v, x)
 
 
 # ---------------------------------------------------------------------------
@@ -107,7 +109,7 @@ def _completion(x: jax.Array, rank: jax.Array, active_rank: int,
 def post_send(dp: Dataplane, cfg: QPConfig, qp: dict, buf: jax.Array,
               rank: jax.Array, src: int) -> dict:
     """Enqueue ``buf`` into the send ring on rank ``src`` (the syscall)."""
-    buf = rank_mediate(buf, rank, src, dp)
+    buf = rank_mediate(buf, rank, src, dp, tag="verbs/post_send")
     slot = jnp.mod(qp["sq_head"], cfg.depth)
     ring = jax.lax.dynamic_update_index_in_dim(qp["send_ring"], buf, slot, 0)
     return {**qp, "send_ring": ring, "sq_head": qp["sq_head"] + 1}
@@ -115,39 +117,43 @@ def post_send(dp: Dataplane, cfg: QPConfig, qp: dict, buf: jax.Array,
 
 def flush_send(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
                src: int, dst: int, *, op: str = "send",
-               state: jax.Array | None = None) -> dict:
+               state=None) -> tuple[dict, object]:
     """The NIC DMA: move the send ring src→dst (or dst→src for READ).
 
-    ``op``: "send" (two-sided), "write" / "read" (one-sided; RC only)."""
+    ``op``: "send" (two-sided), "write" / "read" (one-sided; RC only).
+    Returns ``(qp, state)`` — the uniform dataplane state convention."""
     if op != "send" and cfg.transport != "RC":
         raise TransportError(f"one-sided {op!r} requires RC transport")
     perm = [(src, dst)] if op != "read" else [(dst, src)]
     ring = qp["send_ring"] if op != "read" else qp["recv_ring"]
-    r = dp.ppermute(ring, cfg.axis, perm, tag=f"verbs/{op}",
-                    mr=None, state=state)
-    if state is not None:
-        r, state = r
+    r, state = dp.ppermute(ring, cfg.axis, perm, tag=f"verbs/{op}",
+                           mr=None, state=state)
     new = dict(qp)
     if op == "read":
         new["send_ring"] = r      # reader pulled remote memory
     else:
         new["recv_ring"] = r
-    new["cq_sent"] = qp["cq_sent"] + (qp["sq_head"] - qp["cq_sent"])
-    out = (new, state) if state is not None else new
-    return out
+    # every posted send is completed by the DMA
+    new["cq_sent"] = qp["sq_head"]
+    return new, state
 
 
 def poll_cq(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
             poller: int) -> tuple[jax.Array, dict]:
-    """Completion: returns (#completions, qp). Pays the interrupt cost on
-    the polling rank when polling is disabled."""
-    ring = _completion(qp["recv_ring"], rank, poller, dp)
-    qp = {**qp, "recv_ring": ring,
-          "cq_rcvd": qp["cq_rcvd"] + 1}
-    return qp["cq_sent"], qp
+    """Drain the completion queue on rank ``poller``.
+
+    Returns ``(completions, qp)`` where ``completions`` is the number of
+    deliveries since the last poll (``cq_sent - cq_rcvd``) — real counts,
+    not a stale counter.  Pays the interrupt cost on the polling rank when
+    polling is disabled."""
+    ring = rank_complete(qp["recv_ring"], rank, poller, dp,
+                         tag="verbs/poll_cq")
+    completed = qp["cq_sent"] - qp["cq_rcvd"]
+    qp = {**qp, "recv_ring": ring, "cq_rcvd": qp["cq_sent"]}
+    return completed, qp
 
 
 __all__ = [
     "QPConfig", "TransportError", "UD_MTU", "qp_init",
-    "post_send", "flush_send", "poll_cq", "rank_mediate",
+    "post_send", "flush_send", "poll_cq", "rank_mediate", "rank_complete",
 ]

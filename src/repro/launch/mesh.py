@@ -9,23 +9,22 @@ across pods over DCN, TP kept inside the pod over ICI).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh(n: int | None = None, model: int = 1):
     """CPU-device mesh for measured runs/tests: (data = n/model, model)."""
     devs = jax.devices()
     n = n or len(devs)
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto),
-                         devices=devs[:n])
+    return compat.make_mesh((n // model, model), ("data", "model"),
+                            devices=devs[:n])
 
 
 def mesh_axis_sizes(mesh) -> dict:

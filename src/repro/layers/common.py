@@ -18,10 +18,13 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def constrain(dp, x: jax.Array, names: Sequence, tag: str = "act") -> jax.Array:
+def constrain(dp, x: jax.Array, names: Sequence, tag: str = "act",
+              qos: str = "default") -> jax.Array:
+    """Issue a sharding edge through the dataplane's mediation pipeline.
+    ``qos`` names the op's priority class (QoSPolicy)."""
     if dp is None:
         return x
-    return dp.constrain(x, names, tag=tag)
+    return dp.constrain(x, names, tag=tag, qos=qos)
 
 
 def act_fn(name: str):

@@ -4,13 +4,19 @@ Caches are pytrees with a leading layer axis so the decode step can
 ``lax.scan`` over layers, slicing one layer's cache in and the updated
 slice out.  Sharding is issued through the dataplane by the serve step
 (kv_seq → data/model axes depending on the shape cell, see
-parallel/sharding.py).
+parallel/sharding.py): :func:`kv_cache_constrain` routes the cache's
+sharding edges through the mediation pipeline like any other dataplane
+traffic, so cache placement is visible to (and accountable by) the same
+policies that see the collectives.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# logical axis names of a (layers, batch, kv_seq, kv_heads, head_dim) cache
+KV_CACHE_AXES = (None, "batch", "kv_seq", "kv_heads", "head_dim")
 
 
 def kv_cache_init(layers: int, batch: int, max_len: int, kv_heads: int,
@@ -42,4 +48,19 @@ def cache_validity(max_len: int, filled_len) -> jax.Array:
     return jnp.arange(max_len, dtype=jnp.int32) < filled_len
 
 
-__all__ = ["kv_cache_init", "kv_update", "cache_positions", "cache_validity"]
+def kv_cache_constrain(dp, cache, *, tag: str = "kvcache",
+                       qos: str = "kvcache", tenant: str | None = None):
+    """Issue the KV cache's sharding edges through the dataplane.
+
+    Applies to {"k","v"}-style caches of rank-5 leaves (other recurrent
+    cache layouts pass through untouched).  A no-op without a dataplane."""
+    if dp is None or not isinstance(cache, dict):
+        return cache
+    return {k: (dp.constrain(v, KV_CACHE_AXES, tag=f"{tag}/{k}", qos=qos,
+                             tenant=tenant)
+                if hasattr(v, "ndim") and v.ndim == 5 else v)
+            for k, v in cache.items()}
+
+
+__all__ = ["kv_cache_init", "kv_update", "cache_positions", "cache_validity",
+           "kv_cache_constrain", "KV_CACHE_AXES"]

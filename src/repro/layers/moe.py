@@ -92,12 +92,15 @@ def moe(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "silu",
 
     xg = xf.reshape(g, g_sz, d)
     xg = constrain(dp, xg, ("exp_groups", None, "embed"), tag="moe/tokens")
+    # dispatch/combine edges carry the "moe-dispatch" QoS class: the EP
+    # all-to-alls are latency-critical (every token waits on them), so the
+    # chunk scheduler can prioritize them over bulk traffic.
     dispatch = constrain(dp, dispatch, ("exp_groups", None, "experts", None),
-                         tag="moe/dispatch")
+                         tag="moe/dispatch", qos="moe-dispatch")
     # EP all-to-all edge: (G blocks on data) -> (E experts on model)
     ein = jnp.einsum("gnec,gnd->gecd", dispatch, xg)
     ein = constrain(dp, ein, ("exp_groups", "experts", None, "embed"),
-                    tag="moe/expert_in")
+                    tag="moe/expert_in", qos="moe-dispatch")
 
     h = jnp.einsum("gecd,edf->gecf", ein, params["wi"].astype(x.dtype))
     if "wg" in params:
@@ -114,7 +117,8 @@ def moe(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "silu",
     # combine: EP all-to-all back (E on model) -> (G on data)
     out = jnp.einsum("gnec,gecd->gnd", gmat.astype(x.dtype), eo)
     out = out.reshape(b, s, d)
-    out = constrain(dp, out, ("batch", "seq", "embed"), tag="moe/out")
+    out = constrain(dp, out, ("batch", "seq", "embed"), tag="moe/out",
+                    qos="moe-dispatch")
 
     if "dense" in params:  # arctic dense residual
         from repro.layers.mlp import mlp as dense_mlp

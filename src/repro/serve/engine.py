@@ -1,5 +1,5 @@
 """Serving engine: batched prefill + decode with slot-based continuous
-batching (lite).
+batching (lite) and per-tenant admission control.
 
 Requests enter a queue; the engine packs up to ``max_batch`` active slots,
 prefills new prompts (padded to the slot prompt capacity), then steps all
@@ -8,11 +8,22 @@ slots (EOS or max_new_tokens) are refilled from the queue — the standard
 continuous-batching shape, kept single-process.
 
 All model communication flows through the dataplane; the decode step's KV
-cache sharding comes from parallel/sharding.py decode rules.
+cache sharding comes from parallel/sharding.py decode rules, issued
+through the mediation pipeline (``kv_cache_constrain``).
+
+Multi-tenancy: each :class:`Request` names a tenant.  When the dataplane
+carries a :class:`~repro.core.policies.QoSPolicy` with per-tenant rates,
+the engine runs the *host-side mirror* of the pipeline's token bucket
+(:class:`~repro.core.mediation.HostTokenBucket`) as admission control —
+requests from tenants over their rate are deferred to later batching
+rounds instead of being packed, throttling each tenant's serve rate with
+the same bucket semantics the traced dataplane applies per op.  Per-tenant
+served-token accounting lands in :meth:`Engine.tenant_report`.
 """
 
 from __future__ import annotations
 
+from collections import defaultdict
 from dataclasses import dataclass, field
 
 import jax
@@ -20,6 +31,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.core.mediation import HostTokenBucket
+from repro.core.policies import QoSPolicy
+from repro.layers.kvcache import kv_cache_constrain
+
+# Bound on consecutive all-throttled refill rounds before the engine
+# force-admits the queue head (guarantees progress under any rate config).
+_MAX_STARVED_ROUNDS = 10_000
 
 
 @dataclass
@@ -27,6 +45,7 @@ class Request:
     rid: int
     prompt: np.ndarray               # (prompt_len,) int32
     max_new_tokens: int = 16
+    tenant: str = "default"
     out_tokens: list = field(default_factory=list)
     done: bool = False
 
@@ -46,11 +65,49 @@ class Engine:
         self.scfg = serve
         self.dp = dp
         self.eos_id = eos_id
+        # cache sharding edges are issued inside the traced prefill, so
+        # policy enforcement/telemetry happen once per compiled shape (like
+        # every other dataplane edge), not once per host batching round
         self._prefill = jax.jit(
-            lambda p, b, c: model.prefill(p, b, c, dp=dp))
+            lambda p, b, c: model.prefill(p, b, kv_cache_constrain(dp, c),
+                                          dp=dp))
         self._step = jax.jit(
             lambda p, t, c, pos: model.decode_step(p, t, c, pos, dp=dp))
+        qos = next((p for p in (dp.policies if dp is not None else [])
+                    if isinstance(p, QoSPolicy)), None)
+        self._buckets = HostTokenBucket.from_policy(qos)
+        self.tenant_stats: dict[str, dict[str, float]] = defaultdict(
+            lambda: {"requests": 0, "tokens": 0, "deferrals": 0})
 
+    # ------------------------------------------------------------------
+    # tenant admission (host-side token bucket, serve-level throttling)
+    # ------------------------------------------------------------------
+    def _admit_batch(self, queue: list[Request]) -> tuple[list[Request],
+                                                          list[Request]]:
+        """Pick up to ``max_batch`` requests the buckets admit; the rest
+        stay queued.  Refills until at least one request is admissible
+        (guaranteed progress); a request counts as deferred at most once
+        per batching round, on the round's first refill."""
+        B = self.scfg.max_batch
+        for round_ in range(_MAX_STARVED_ROUNDS):
+            for b in self._buckets.values():
+                b.refill()
+            admitted, deferred = [], []
+            for r in queue:
+                bucket = self._buckets.get(r.tenant)
+                if len(admitted) < B and (bucket is None or bucket.take()):
+                    admitted.append(r)
+                else:
+                    if bucket is not None and len(admitted) < B \
+                            and round_ == 0:
+                        self.tenant_stats[r.tenant]["deferrals"] += 1
+                    deferred.append(r)
+            if admitted:
+                return admitted, deferred
+        # pathological rates (≈0): force progress with the queue head
+        return queue[:1], queue[1:]
+
+    # ------------------------------------------------------------------
     def _pad_prompts(self, reqs: list[Request]) -> np.ndarray:
         cap = max(len(r.prompt) for r in reqs)
         cap = max(cap, 8)
@@ -64,11 +121,9 @@ class Engine:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         queue = list(requests)
         done: list[Request] = []
-        B = self.scfg.max_batch
 
         while queue:
-            batch_reqs = queue[:B]
-            queue = queue[B:]
+            batch_reqs, queue = self._admit_batch(queue)
             toks = self._pad_prompts(batch_reqs)
             b, prompt_len = toks.shape
             cache_len = prompt_len + self.scfg.max_new_tokens + 1
@@ -96,8 +151,15 @@ class Engine:
                     break
             for r in batch_reqs:
                 r.done = True
+                stats = self.tenant_stats[r.tenant]
+                stats["requests"] += 1
+                stats["tokens"] += len(r.out_tokens)
                 done.append(r)
         return done
+
+    def tenant_report(self) -> dict[str, dict[str, float]]:
+        """Per-tenant serve accounting: requests, tokens, deferrals."""
+        return {t: dict(v) for t, v in self.tenant_stats.items()}
 
 
 __all__ = ["Engine", "Request", "sample"]

@@ -52,12 +52,12 @@ def compress_error_feedback(g: jax.Array, err: jax.Array):
 # ---------------------------------------------------------------------------
 
 def sync_grads(dp: Dataplane, grads, axis: str, *, bucket_bytes: int = 1 << 22,
-               compression: str = "none", err_state=None,
-               state: jax.Array | None = None):
+               compression: str = "none", err_state=None, state=None):
     """All-reduce a gradient pytree over mesh axis ``axis`` through the
     dataplane (call inside shard_map over that axis).
 
-    Returns (mean_grads, new_err_state[, counters_state])."""
+    Returns ``(mean_grads, new_err_state, state)`` — the uniform dataplane
+    state convention (``state`` is None when not threaded)."""
     leaves, tdef = jax.tree.flatten(grads)
     err_leaves = (jax.tree.leaves(err_state) if err_state is not None
                   else [jnp.zeros((), jnp.float32)] * len(leaves))
@@ -85,24 +85,18 @@ def sync_grads(dp: Dataplane, grads, axis: str, *, bucket_bytes: int = 1 << 22,
                 q, scale, new_err = compress_error_feedback(
                     g, err_leaves[li] if err_leaves[li].shape == g.shape
                     else jnp.zeros_like(g, jnp.float32))
-                r = dp.psum(q.astype(jnp.int32), axis,
-                            tag=f"grads/bucket{bi}", qos="grads",
-                            state=state)
-                if state is not None:
-                    r, state = r
-                s = dp.psum(scale, axis, tag=f"grads/scale{bi}",
-                            qos="grads-small", state=state)
-                if state is not None:
-                    s, state = s
+                r, state = dp.psum(q.astype(jnp.int32), axis,
+                                   tag=f"grads/bucket{bi}", qos="grads",
+                                   state=state)
+                s, state = dp.psum(scale, axis, tag=f"grads/scale{bi}",
+                                   qos="grads-small", state=state)
                 # mean of dequantized sums (scales averaged is an
                 # approximation; error feedback absorbs the residual)
                 out = (r.astype(jnp.float32) * (s / n)) / n
                 flat_err[li] = new_err
             else:
-                r = dp.psum(g, axis, tag=f"grads/bucket{bi}", qos="grads",
-                            state=state)
-                if state is not None:
-                    r, state = r
+                r, state = dp.psum(g, axis, tag=f"grads/bucket{bi}",
+                                   qos="grads", state=state)
                 out = r / n
                 flat_err[li] = jnp.zeros_like(g, jnp.float32) \
                     if compression == "int8" else jnp.zeros((), jnp.float32)
@@ -110,9 +104,7 @@ def sync_grads(dp: Dataplane, grads, axis: str, *, bucket_bytes: int = 1 << 22,
 
     mean = jax.tree.unflatten(tdef, [flat_out[i] for i in range(len(leaves))])
     new_err = jax.tree.unflatten(tdef, [flat_err[i] for i in range(len(leaves))])
-    if state is not None:
-        return mean, new_err, state
-    return mean, new_err
+    return mean, new_err, state
 
 
 def err_state_init(params, compression: str = "none"):

@@ -18,7 +18,6 @@ state.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -26,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import RunConfig
+from repro.core import compat
 from repro.core.dataplane import Dataplane
 from repro.optim.adamw import adamw_init, adamw_update, warmup_cosine
 from repro.parallel.sharding import batch_specs, param_specs
@@ -135,11 +135,18 @@ def make_train_step(model, run: RunConfig, dp: Dataplane, *,
 
 def make_explicit_dp_step(model, run: RunConfig, dp: Dataplane, *,
                           axis: str = "data",
-                          total_steps: int | None = None):
+                          total_steps: int | None = None,
+                          runtime_accounting: bool = False):
     """DP over ``axis``: per-shard grads + dataplane all-reduce.
 
     The returned function must be called under jit; batch leading dim is
-    sharded over ``axis``, params replicated."""
+    sharded over ``axis``, params replicated.
+
+    With ``runtime_accounting=True`` the step threads the dataplane's
+    per-tenant runtime state (``dp.runtime_init()``) through the gradient
+    sync with the uniform ``(x, state)`` convention: the step becomes
+    ``step(state, batch, rt) -> (state, metrics, rt)``, and QoS/quota act
+    at run time on the measured path."""
     tcfg = run.train
     schedule = warmup_cosine(tcfg, total_steps)
     mesh = dp.mesh
@@ -147,12 +154,12 @@ def make_explicit_dp_step(model, run: RunConfig, dp: Dataplane, *,
     def loss_fn(params, batch):
         return model.loss(params, batch, dp=None, remat=tcfg.remat)
 
-    def local_step(state: TrainState, batch):
+    def local_step(state: TrainState, batch, rt):
         (loss, metrics), grads = _accumulate(loss_fn, state.params, batch,
                                              tcfg.microbatch)
-        grads, new_err = sync_grads(
+        grads, new_err, rt = sync_grads(
             dp, grads, axis, compression=tcfg.grad_compression,
-            err_state=state.err)
+            err_state=state.err, state=rt)
         loss = jax.lax.pmean(loss, axis)
         metrics = jax.tree.map(lambda m: jax.lax.pmean(
             jnp.asarray(m, jnp.float32), axis), metrics)
@@ -160,14 +167,24 @@ def make_explicit_dp_step(model, run: RunConfig, dp: Dataplane, *,
             grads, state.opt, state.params, tcfg, schedule)
         metrics = {**metrics, **stats}
         return TrainState(params=new_params, opt=new_opt,
-                          step=state.step + 1, err=new_err), metrics
+                          step=state.step + 1, err=new_err), metrics, rt
 
     state_specs = TrainState(params=P(), opt=P(), step=P(), err=P())
-    shard = jax.shard_map(
-        local_step, mesh=mesh,
+    if runtime_accounting:
+        shard = compat.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(state_specs, P(axis), P()),
+            out_specs=(state_specs, P(), P()))
+        return jax.jit(shard, donate_argnums=(0,))
+
+    def stateless_step(state: TrainState, batch):
+        new_state, metrics, _ = local_step(state, batch, None)
+        return new_state, metrics
+
+    shard = compat.shard_map(
+        stateless_step, mesh=mesh,
         in_specs=(state_specs, P(axis)),
-        out_specs=(state_specs, P()),
-        check_vma=False)
+        out_specs=(state_specs, P()))
     return jax.jit(shard, donate_argnums=(0,))
 
 

@@ -5,24 +5,21 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax  # noqa: E402
-
 import pytest  # noqa: E402
+
+from repro.core import compat  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh8():
-    return jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((8,), ("data",))
 
 
 @pytest.fixture(scope="session")
 def mesh42():
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((4, 2), ("data", "model"))
 
 
 @pytest.fixture(scope="session")
 def mesh2():
-    return jax.make_mesh((2,), ("rank",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((2,), ("rank",))

@@ -9,7 +9,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import DataplaneConfig
-from repro.core import Dataplane, MRError, PolicyViolation, verbs
+from repro.core import Dataplane, MRError, PolicyViolation, compat, verbs
 from repro.core.chunking import bucket_pytree, chunked_psum, schedule_batch
 from repro.core.policies import QoSPolicy, QuotaPolicy, SecurityPolicy, TelemetryPolicy
 
@@ -17,9 +17,10 @@ RNG = jax.random.PRNGKey(0)
 
 
 def _psum_over(mesh, dp, x):
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P())
+    @partial(compat.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P())
     def f(v):
-        return dp.psum(v.sum(), "data", tag="t/psum")
+        out, _ = dp.psum(v.sum(), "data", tag="t/psum")
+        return out
     return jax.jit(f)(x)
 
 
@@ -40,15 +41,17 @@ def test_bypass_is_invisible_to_the_os(mesh8):
     dp = Dataplane(DataplaneConfig(mode="bypass"), mesh=mesh8)
     _psum_over(mesh8, dp, jnp.ones(16))
     assert dp.telemetry.total_bytes() == 0  # no OS visibility — the problem
+    assert dp.pipeline.stage_names == ()    # the OS is off the data path
 
 
 def test_cord_telemetry_accounts_every_op(mesh8):
     dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh8)
 
-    @partial(jax.shard_map, mesh=mesh8, in_specs=P("data"), out_specs=P("data"))
+    @partial(compat.shard_map, mesh=mesh8, in_specs=P("data"),
+             out_specs=P("data"))
     def f(v):
-        s = dp.psum(v.sum(), "data", tag="a")
-        g = dp.all_gather(v, "data", tag="b")
+        s, _ = dp.psum(v.sum(), "data", tag="a")
+        g, _ = dp.all_gather(v, "data", tag="b")
         return v + s + g.sum()
     jax.jit(f)(jnp.ones(16))
     kinds = dp.telemetry.by_kind()
@@ -72,14 +75,14 @@ def test_security_policy_mr_registration(mesh8):
     buf = jnp.ones(8)
     dp.reg_mr("grads", buf)
 
-    @partial(jax.shard_map, mesh=mesh8, in_specs=P(), out_specs=P())
+    @partial(compat.shard_map, mesh=mesh8, in_specs=P(), out_specs=P())
     def ok(v):
-        return dp.psum(v, "data", mr="grads")
+        return dp.psum(v, "data", mr="grads")[0]
     jax.jit(ok)(buf)  # registered → allowed
 
-    @partial(jax.shard_map, mesh=mesh8, in_specs=P(), out_specs=P())
+    @partial(compat.shard_map, mesh=mesh8, in_specs=P(), out_specs=P())
     def bad(v):
-        return dp.psum(v, "data", mr="grads")
+        return dp.psum(v, "data", mr="grads")[0]
     with pytest.raises(PolicyViolation):
         jax.jit(bad)(jnp.ones(16))  # signature mismatch → refused
 
@@ -99,10 +102,11 @@ def test_chunked_psum_equals_psum(mesh8):
     dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh8)
     x = jax.random.normal(RNG, (64, 4))
 
-    @partial(jax.shard_map, mesh=mesh8, in_specs=P("data"), out_specs=P("data"))
+    @partial(compat.shard_map, mesh=mesh8, in_specs=P("data"),
+             out_specs=P("data"))
     def f(v):
-        whole = dp.psum(v, "data")
-        chunked = chunked_psum(dp, v, "data", num_chunks=4)
+        whole, _ = dp.psum(v, "data")
+        chunked, _ = chunked_psum(dp, v, "data", num_chunks=4)
         return whole - chunked
     np.testing.assert_allclose(jax.jit(f)(x), 0.0, atol=1e-6)
 
@@ -131,13 +135,13 @@ def test_verbs_send_read_write_payload(mesh2):
     cfg = verbs.QPConfig(transport="RC", msg_bytes=64, depth=2)
     payload = jnp.arange(64, dtype=jnp.uint8)
 
-    @partial(jax.shard_map, mesh=mesh2, in_specs=P("rank", None),
+    @partial(compat.shard_map, mesh=mesh2, in_specs=P("rank", None),
              out_specs=P("rank", None))
     def send(buf):
         rank = jax.lax.axis_index("rank")
         qp = verbs.qp_init(cfg)
         qp = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
-        qp = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1, op="send")
+        qp, _ = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1, op="send")
         return qp["recv_ring"][None, 0]
 
     out = jax.jit(send)(jnp.stack([payload, jnp.zeros(64, jnp.uint8)]))

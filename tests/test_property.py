@@ -3,10 +3,15 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import ModelConfig, TrainConfig, apply_overrides
 from repro.core.chunking import bucket_pytree
+from repro.core.mediation import MediationPipeline, MediationStage
 from repro.core.telemetry import OpRecord, Telemetry, counters_bump, counters_init
 from repro.layers.attention import make_mask
 from repro.train.gradsync import dequantize_int8, quantize_int8
@@ -57,6 +62,35 @@ def test_bucket_pytree_is_partition(sizes, bucket_bytes):
         if len(b) > 1:
             total = sum(leaf.size * 4 for _, leaf in b)
             assert total <= bucket_bytes * 2  # bounded (greedy fill)
+
+
+@SETTINGS
+@given(st.lists(st.sampled_from("abcdef"), max_size=8))
+def test_mediation_pipeline_composes_in_declared_order(names):
+    """The pipeline applies stages exactly in declared order, on both the
+    send and the completion side, for any stage multiset."""
+    log = []
+
+    class Probe(MediationStage):
+        def __init__(self, n):
+            self.name = n
+
+        def send(self, x, rec, state, tenant_idx):
+            log.append(("send", self.name))
+            return x, state
+
+        def complete(self, x, rec, state, tenant_idx):
+            log.append(("complete", self.name))
+            return x, state
+
+    pipe = MediationPipeline([Probe(n) for n in names])
+    assert pipe.stage_names == tuple(names)
+    rec = OpRecord(kind="p", tag="p", bytes=1, axes=("data",))
+    x, state = pipe.send(jnp.ones(()), rec, None, 0)
+    assert log == [("send", n) for n in names] and state is None
+    log.clear()
+    pipe.complete(x, rec, None, 0)
+    assert log == [("complete", n) for n in names]
 
 
 @SETTINGS

@@ -80,3 +80,32 @@ def test_serving_end_to_end_greedy_deterministic():
     out2 = [r.out_tokens for r in eng.run(reqs2)]
     assert out1 == out2
     assert all(len(o) == 6 for o in out1)
+
+
+def test_serving_tenant_admission_throttles_hog():
+    """The engine runs the host-side mirror of the dataplane's QoS token
+    bucket as admission control: a rate-limited tenant's requests are
+    deferred across batching rounds, every request still completes."""
+    from repro.configs.base import ServeConfig
+    from repro.core.policies import QoSPolicy, TelemetryPolicy
+    from repro.serve import Engine, Request
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    dp = Dataplane(
+        DataplaneConfig(mode="cord"),
+        tenants=("default", "hog"),
+        policies=[TelemetryPolicy(),
+                  QoSPolicy(rates={"hog": 0.5}, burst=1.0)])
+    eng = Engine(model, params, cfg,
+                 ServeConfig(max_batch=4, max_new_tokens=4), dp=dp,
+                 eos_id=-1)
+    reqs = [Request(rid=i, prompt=np.arange(4) % 100,
+                    tenant="hog" if i % 2 else "default")
+            for i in range(6)]
+    done = eng.run(reqs)
+    assert len(done) == 6 and all(r.done for r in done)
+    report = eng.tenant_report()
+    assert report["hog"]["requests"] == 3
+    assert report["hog"]["deferrals"] > 0       # the bucket pushed it back
+    assert report["default"].get("deferrals", 0) == 0

@@ -155,9 +155,9 @@ def test_elastic_remesh_preserves_values(mesh42):
                     jax.tree.leaves(state2.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # and back onto a smaller mesh
-    small = jax.make_mesh((2, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                          devices=jax.devices()[:2])
+    from repro.core import compat
+    small = compat.make_mesh((2, 1), ("data", "model"),
+                             devices=jax.devices()[:2])
     state3 = remesh(state2, small)
     np.testing.assert_array_equal(
         np.asarray(jax.tree.leaves(state3.params)[0]),
