@@ -1,0 +1,33 @@
+"""Shared host-device bootstrap for benchmark entry points.
+
+The perftest/NPB harnesses need several XLA host-platform devices;
+``ensure_host_devices`` re-execs the entry point with ``XLA_FLAGS`` set
+(or raised) when the current environment requests fewer than needed.
+Keep this module import-light: it must run before jax is imported.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_devices(n: int, module: str) -> None:
+    """Re-exec ``python -m <module> <argv>`` with at least ``n`` XLA host
+    devices configured.  No-op when XLA_FLAGS already requests >= n."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(re.escape(_FLAG) + r"=(\d+)", flags)
+    if m and int(m.group(1)) >= n:
+        return
+    if m:
+        flags = flags.replace(m.group(0), f"{_FLAG}={n}")
+    else:
+        flags = f"{flags} {_FLAG}={n}"
+    os.environ["XLA_FLAGS"] = flags
+    os.execv(sys.executable, [sys.executable, "-m", module] + sys.argv[1:])
+
+
+__all__ = ["ensure_host_devices"]

@@ -11,6 +11,11 @@ mode matrix:
   fig4  — CoRD/bypass throughput ratio + message rate vs msg size.
   fig5  — same harness under the "system A" cost preset (higher, noisier
           mediation costs — the cloud VM of the paper).
+  window — bandwidth vs. sender-window depth (RC + UD) through the real
+          CQ-driven async runtime (verbs.windowed_send), with the
+          runtime's stall/credit/completion/CQ-depth counters per row.
+  credits — flow-control ablation: credit-starved senders stall and
+          resume; delivery stays complete and bit-identical.
 
 Cost scaling (EXPERIMENTS.md §Perftest): the CPU collective baseline is
 ~50× slower than real RDMA, so emulated mediation costs are calibrated as
@@ -67,25 +72,25 @@ def build_pingpong(mesh, dp_client: Dataplane, dp_server: Dataplane,
             x = carry
             if op == "send":
                 # client post (syscall side) → NIC → server completion
-                x = verbs.rank_mediate(x, rank, 0, dp_client)
+                x, _ = verbs.rank_mediate(x, rank, 0, dp_client)
                 x = jax.lax.ppermute(x, "rank", [(0, 1)])
-                x = verbs.rank_complete(x, rank, 1, dp_server)
+                x, _ = verbs.rank_complete(x, rank, 1, dp_server)
                 # reply
-                x = verbs.rank_mediate(x, rank, 1, dp_server)
+                x, _ = verbs.rank_mediate(x, rank, 1, dp_server)
                 x = jax.lax.ppermute(x, "rank", [(1, 0)])
-                x = verbs.rank_complete(x, rank, 0, dp_client)
+                x, _ = verbs.rank_complete(x, rank, 0, dp_client)
             elif op == "write":
                 # one-sided write: only the active (client) side mediates
-                x = verbs.rank_mediate(x, rank, 0, dp_client)
+                x, _ = verbs.rank_mediate(x, rank, 0, dp_client)
                 x = jax.lax.ppermute(x, "rank", [(0, 1)])
                 # perftest write latency: server writes back (its own post)
-                x = verbs.rank_mediate(x, rank, 1, dp_server)
+                x, _ = verbs.rank_mediate(x, rank, 1, dp_server)
                 x = jax.lax.ppermute(x, "rank", [(1, 0)])
-                x = verbs.rank_complete(x, rank, 0, dp_client)
+                x, _ = verbs.rank_complete(x, rank, 0, dp_client)
             else:  # read: client pulls; server CPU never involved
-                x = verbs.rank_mediate(x, rank, 0, dp_client)
+                x, _ = verbs.rank_mediate(x, rank, 0, dp_client)
                 x = jax.lax.ppermute(x, "rank", [(1, 0)])   # data server→client
-                x = verbs.rank_complete(x, rank, 0, dp_client)
+                x, _ = verbs.rank_complete(x, rank, 0, dp_client)
                 x = jax.lax.ppermute(x, "rank", [(0, 1)])   # sync back
             return x, None
 
@@ -191,6 +196,134 @@ def throughput(mesh, dp_c, dp_s, msg_bytes, *, window=64, iters=5,
     t = measure(fn, ring)
     msgs = window * iters
     return msgs * msg_bytes * 8 / t / 1e9, msgs / t
+
+
+# ---------------------------------------------------------------------------
+# CQ-driven windowed throughput (the async verbs runtime)
+# ---------------------------------------------------------------------------
+
+def build_windowed(mesh, dp_client: Dataplane, dp_server: Dataplane,
+                   msg_bytes: int, n_msgs: int, window: int,
+                   transport="RC", op="send", credits: int | None = None):
+    """Compile one windowed transfer through ``verbs.windowed_send``: the
+    real CQ runtime (sender window, credit flow control, per-CQE drains),
+    with runtime counters threaded and psum-aggregated per connection."""
+    cfg = verbs.QPConfig(transport=transport, msg_bytes=msg_bytes,
+                         depth=max(window, 2), max_outstanding=window)
+    credits = n_msgs if credits is None else credits
+
+    def body(msgs, rt):
+        rank = jax.lax.axis_index("rank")
+        qp = verbs.qp_init(cfg)
+        if op == "send":
+            qp, rt = verbs.post_recv(dp_server, cfg, qp, rank, dst=1,
+                                     n=credits, state=rt)
+        out, qp, rt = verbs.windowed_send(dp_client, cfg, qp, msgs[0], rank,
+                                          src=0, dst=1, op=op, state=rt,
+                                          dp_peer=dp_server)
+        rt = verbs.allreduce_state(rt)
+        return (out[None], (qp["win_hwm"], qp["cq_hwm"], qp["cq_sent"]), rt)
+
+    shard = compat.shard_map(body, mesh=mesh,
+                             in_specs=(P("rank", None, None), P()),
+                             out_specs=(P("rank", None, None),
+                                        (P(), P(), P()), P()))
+    return jax.jit(shard), cfg
+
+
+def windowed_throughput(mesh, dp_c, dp_s, msg_bytes, *, window, n_msgs=32,
+                        transport="RC", op="send", credits=None):
+    """Returns (GBit/s, msgs/s, stats) for one CQ-runtime transfer."""
+    fn, _ = build_windowed(mesh, dp_c, dp_s, msg_bytes, n_msgs, window,
+                           transport, op, credits)
+    msgs = jnp.zeros((2, n_msgs, msg_bytes), jnp.uint8)
+    rt0 = dp_c.runtime_init()
+    t = measure(fn, msgs, rt0)
+    _, (win_hwm, cq_hwm, _), rt = jax.block_until_ready(fn(msgs, rt0))
+    rep = dp_c.runtime_report(rt)[dp_c.tenant]
+    stats = {"win_hwm": int(win_hwm), "cq_hwm": int(cq_hwm),
+             "stalls": int(rep["stalls"]), "credits": int(rep["credits"]),
+             "completions": int(rep["completions"]),
+             "cq_depth": int(rep["cq_depth"])}
+    return n_msgs * msg_bytes * 8 / t / 1e9, n_msgs / t, stats
+
+
+def window_sweep(mesh, preset: "CostPreset | None" = None, *, sizes=(4096,),
+                 windows=(1, 2, 4, 8, 16), n_msgs=32, table="window"):
+    """Bandwidth vs. window depth through the CQ-driven path (paper §5
+    deep-queue behaviour), RC and UD, with the runtime's stall/credit/
+    completion/CQ-depth counters attached to every row."""
+    kw = {} if preset is None else dict(syscall_ns=preset.syscall_ns,
+                                        interrupt_us=preset.interrupt_us)
+    rows = []
+    for transport in ("RC", "UD"):
+        ops = ("send", "write") if transport == "RC" else ("send",)
+        for op in ops:
+            for size in sizes:
+                if transport == "UD" and size > verbs.UD_MTU:
+                    continue
+                for w in windows:
+                    dp = _dp("cord", emulate=True, mesh=mesh, **kw)
+                    gbps, rate, stats = windowed_throughput(
+                        mesh, dp, dp, size, window=w, n_msgs=n_msgs,
+                        transport=transport, op=op)
+                    rows.append({"table": table, "transport": transport,
+                                 "op": op, "bytes": size, "window": w,
+                                 "gbps": round(gbps, 3),
+                                 "msgs_per_s": round(rate), **stats})
+    return rows
+
+
+def credit_ablation(mesh, preset: "CostPreset | None" = None, *,
+                    msg_bytes=4096, window=8, n_msgs=32,
+                    credit_levels=(2, 8, 32), table="credits"):
+    """Flow-control ablation: starve the sender of receiver credits and
+    show the stall counter climbing while delivery stays complete."""
+    kw = {} if preset is None else dict(syscall_ns=preset.syscall_ns,
+                                        interrupt_us=preset.interrupt_us)
+    rows = []
+    for credits in credit_levels:
+        dp = _dp("cord", emulate=True, mesh=mesh, **kw)
+        gbps, rate, stats = windowed_throughput(
+            mesh, dp, dp, msg_bytes, window=window, n_msgs=n_msgs,
+            credits=credits)
+        rows.append({"table": table, "bytes": msg_bytes, "window": window,
+                     "rx_credits": credits, "gbps": round(gbps, 3),
+                     "msgs_per_s": round(rate), **stats})
+    return rows
+
+
+def verify_windowed_matches_sync(mesh, mode="cord", msg_bytes=256,
+                                 n_msgs=6, window=2,
+                                 transport="RC") -> None:
+    """Assert the CQ runtime delivers payloads bit-identical to the
+    synchronous post/flush path (the acceptance invariant; also covered
+    in tests/test_verbs_async.py)."""
+    dp = _dp(mode, emulate=True, mesh=mesh)
+    payload = np.arange(n_msgs * msg_bytes, dtype=np.uint8) \
+        .reshape(n_msgs, msg_bytes)
+    msgs = jnp.asarray(np.stack([payload, np.zeros_like(payload)]))
+
+    fn, _ = build_windowed(mesh, dp, dp, msg_bytes, n_msgs, window,
+                           transport)
+    out, _, _ = fn(msgs, dp.runtime_init())
+    windowed = np.asarray(out)[1]
+
+    cfg = verbs.QPConfig(transport=transport, msg_bytes=msg_bytes,
+                         depth=n_msgs)
+
+    def sync(m):
+        rank = jax.lax.axis_index("rank")
+        qp = verbs.qp_init(cfg)
+        for i in range(n_msgs):
+            qp, _ = verbs.post_send(dp, cfg, qp, m[0, i], rank, src=0)
+        qp, _ = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1)
+        return qp["recv_ring"][None]
+
+    ring = jax.jit(compat.shard_map(sync, mesh=mesh,
+                                    in_specs=P("rank", None, None),
+                                    out_specs=P("rank", None, None)))(msgs)
+    np.testing.assert_array_equal(windowed, np.asarray(ring)[1][:n_msgs])
 
 
 # ---------------------------------------------------------------------------
@@ -310,15 +443,46 @@ def run_all(fast: bool = False):
     rows += fig1(mesh, presets["L"], sizes)
     rows += fig3(mesh, presets["L"])
     rows += fig4(mesh, presets["L"], sizes)
+    # CQ-runtime window-depth sweep + credit flow-control ablation
+    wsizes = (4096,) if fast else (4096, 65_536)
+    windows = (1, 4, 16) if fast else (1, 2, 4, 8, 16)
+    rows += window_sweep(mesh, presets["L"], sizes=wsizes, windows=windows)
+    rows += credit_ablation(mesh, presets["L"])
     # fig5 = system A preset
     rows += fig3(mesh, presets["A"], table="fig5_lat")
     rows += fig4(mesh, presets["A"], sizes, table="fig5_bw")
     return rows
 
 
+def dry_run() -> None:
+    """CI smoke for the CQ-driven path: verify windowed delivery is
+    bit-identical to the synchronous flush, then run a minimal RC+UD
+    window sweep and one credit-starved transfer."""
+    import json
+    mesh = make_mesh2()
+    verify_windowed_matches_sync(mesh)
+    print(json.dumps({"table": "dryrun", "windowed_vs_sync": "bit-identical"}))
+    for row in window_sweep(mesh, sizes=(1024,), windows=(1, 4), n_msgs=8,
+                            table="window_dryrun"):
+        print(json.dumps(row))
+    for row in credit_ablation(mesh, msg_bytes=1024, window=4, n_msgs=8,
+                               credit_levels=(2, 8), table="credits_dryrun"):
+        print(json.dumps(row))
+        if row["rx_credits"] < 8:
+            assert row["stalls"] > 0, "credit starvation produced no stalls"
+        assert row["completions"] == 8, "not every message completed"
+    print("perftest dry-run ok")
+
+
 if __name__ == "__main__":
     import json
     import sys
-    fast = "--fast" in sys.argv
-    for row in run_all(fast=fast):
-        print(json.dumps(row))
+
+    from benchmarks._bootstrap import ensure_host_devices
+
+    ensure_host_devices(2, module="benchmarks.perftest")
+    if "--dry-run" in sys.argv:
+        dry_run()
+    else:
+        for row in run_all(fast="--fast" in sys.argv):
+            print(json.dumps(row))

@@ -6,6 +6,8 @@ JSON rows to runs/bench_results.json.
 Sections:
   fig1      — technique-removal latency/throughput (paper Fig. 1)
   fig3/fig4 — CoRD overhead matrix & relative throughput (Figs. 3-4)
+  window    — CQ-runtime bandwidth vs. sender-window depth (RC + UD)
+  credits   — credit flow-control ablation (stall counters)
   fig5      — system-A preset (Fig. 5)
   fig6      — NPB suite bypass/cord/socket (Fig. 6)
   kernels   — Pallas kernel correctness + XLA timings
@@ -21,11 +23,9 @@ import json
 import os
 import sys
 
-if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_force_host_platform_device_count=8")
-    os.execv(sys.executable, [sys.executable, "-m", "benchmarks.run"]
-             + sys.argv[1:])
+from benchmarks._bootstrap import ensure_host_devices
+
+ensure_host_devices(8, module="benchmarks.run")
 
 
 def dry_run() -> None:
@@ -39,6 +39,10 @@ def dry_run() -> None:
     lat = perftest.pingpong_latency_us(mesh2, dp, dp, 1024, iters=4)
     print(json.dumps({"table": "dryrun", "pingpong_us": round(lat, 2),
                       "pipeline": list(dp.pipeline.stage_names)}))
+    gbps, rate, stats = perftest.windowed_throughput(
+        mesh2, dp, dp, 1024, window=4, n_msgs=8)
+    print(json.dumps({"table": "dryrun", "windowed_gbps": round(gbps, 3),
+                      **stats}))
     for row in npb.run_all(benches=("EP",), modes=("bypass", "cord")):
         print(json.dumps(row))
     print("dry-run ok")
@@ -87,6 +91,13 @@ def main() -> None:
         elif tab in ("fig4", "fig5_bw"):
             print(f"{tab}/{r['transport']}/{r['op']}/{r['bytes']}B,,"
                   f"rel_tput={r['rel_throughput']}")
+        elif tab == "window":
+            print(f"window/{r['transport']}/{r['op']}/{r['bytes']}B/"
+                  f"w{r['window']},,gbps={r['gbps']} cq={r['cq_hwm']}")
+        elif tab == "credits":
+            print(f"credits/{r['bytes']}B/w{r['window']}/"
+                  f"c{r['rx_credits']},,gbps={r['gbps']} "
+                  f"stalls={r['stalls']}")
         elif tab == "fig6":
             print(f"fig6/{r['bench']}/{r['mode']},{r['ms'] * 1e3},"
                   f"rel={r['rel_runtime']}")

@@ -31,8 +31,13 @@ CTR_BYTES = 1        # bytes moved through the dataplane
 CTR_DENIED = 2       # ops over a policy limit (quota) observed at run time
 CTR_CHUNKS = 3       # chunks issued by the QoS scheduler
 CTR_THROTTLED = 4    # ops stalled by the QoS token bucket
-NUM_COUNTERS = 5
-COUNTER_NAMES = ("ops", "bytes", "denied", "chunks", "throttled")
+CTR_STALLS = 5       # sender ticks stalled on exhausted rx credits (verbs)
+CTR_CREDITS = 6      # rx credits consumed by two-sided sends (verbs)
+CTR_COMPLETIONS = 7  # CQEs drained from a completion queue (verbs)
+CTR_CQ_DEPTH = 8     # CQ occupancy high-water mark (a peak, not a sum)
+NUM_COUNTERS = 9
+COUNTER_NAMES = ("ops", "bytes", "denied", "chunks", "throttled",
+                 "stalls", "credits", "completions", "cq_depth")
 
 
 @dataclass
@@ -98,16 +103,21 @@ def counters_init() -> jax.Array:
     return jnp.zeros((NUM_COUNTERS,), dtype=jnp.float32)
 
 
-def _counter_row(ops, bytes, denied, chunks, throttled) -> jax.Array:
+def _counter_row(ops, bytes, denied, chunks, throttled, stalls, credits,
+                 completions) -> jax.Array:
+    # CQ depth is a high-water mark, never additive — it has no slot in the
+    # bump row (see tenant_counters_peak) and stays 0 here.
     return jnp.stack([jnp.asarray(v, jnp.float32)
-                      for v in (ops, bytes, denied, chunks, throttled)])
+                      for v in (ops, bytes, denied, chunks, throttled,
+                                stalls, credits, completions, 0)])
 
 
 def counters_bump(ctrs: jax.Array, *, ops=0, bytes=0, denied=0, chunks=0,
-                  throttled=0) -> jax.Array:
+                  throttled=0, stalls=0, credits=0, completions=0) -> jax.Array:
     """Return updated counters. This is the per-op mediation computation in
     cord mode — a handful of scalar adds, the 'syscall body'."""
-    return ctrs + _counter_row(ops, bytes, denied, chunks, throttled)
+    return ctrs + _counter_row(ops, bytes, denied, chunks, throttled,
+                               stalls, credits, completions)
 
 
 def counters_dict(ctrs: np.ndarray) -> dict[str, float]:
@@ -126,11 +136,21 @@ def tenant_counters_init(num_tenants: int) -> jax.Array:
 
 
 def tenant_counters_bump(ctrs: jax.Array, tenant_idx: int, *, ops=0, bytes=0,
-                         denied=0, chunks=0, throttled=0) -> jax.Array:
+                         denied=0, chunks=0, throttled=0, stalls=0, credits=0,
+                         completions=0) -> jax.Array:
     """Bump one tenant's counter row. ``tenant_idx`` is a static index into
     the dataplane's tenant table; the bump values may be traced scalars."""
     return ctrs.at[tenant_idx].add(
-        _counter_row(ops, bytes, denied, chunks, throttled))
+        _counter_row(ops, bytes, denied, chunks, throttled,
+                     stalls, credits, completions))
+
+
+def tenant_counters_peak(ctrs: jax.Array, tenant_idx: int, *,
+                         cq_depth) -> jax.Array:
+    """Fold a completion-queue occupancy sample into one tenant's
+    ``cq_depth`` high-water mark (a max, unlike every additive counter)."""
+    return ctrs.at[tenant_idx, CTR_CQ_DEPTH].max(
+        jnp.asarray(cq_depth, jnp.float32))
 
 
 def tenant_counters_report(ctrs, tenants: tuple[str, ...]) -> dict:
@@ -165,7 +185,9 @@ def normalize_axes(axes) -> tuple[str, ...]:
 __all__ = [
     "OpRecord", "Telemetry", "counters_init", "counters_bump",
     "counters_dict", "tenant_counters_init", "tenant_counters_bump",
-    "tenant_counters_report", "nbytes", "describe", "normalize_axes",
+    "tenant_counters_peak", "tenant_counters_report", "nbytes", "describe",
+    "normalize_axes",
     "CTR_OPS", "CTR_BYTES", "CTR_DENIED", "CTR_CHUNKS", "CTR_THROTTLED",
+    "CTR_STALLS", "CTR_CREDITS", "CTR_COMPLETIONS", "CTR_CQ_DEPTH",
     "NUM_COUNTERS", "COUNTER_NAMES",
 ]

@@ -6,23 +6,43 @@ This is the "narrow waist" (paper §4) the perftest reproduction runs on:
   (the registered memory the NIC reads from / writes to).
 * **post_send / post_recv** enqueue work requests.  In ``cord``/``socket``
   mode each post crosses the mediation layer (the syscall); in ``bypass``
-  it is a bare ring write (the doorbell in user space).
+  it is a bare ring write (the doorbell in user space).  ``post_recv``
+  doubles as the credit grant of the flow-control protocol: every posted
+  receive buffer is one credit the sender may spend.
 * **flush** performs the actual transfer (the NIC DMA): one
   ``ppermute`` of the ring over the ``rank`` axis — zero-copy, the payload
   moves directly from the registered ring memory.
-* **poll_cq** completes operations; with polling disabled the completion
-  path pays the emulated interrupt cost.
+* **completion queue** — a real ring of per-entry status/wr_id records
+  (``cq_status`` / ``cq_wrid``): the NIC pushes CQEs at ``cq_head``,
+  software consumes them at ``cq_tail``.  ``poll_cq`` drains it; with
+  polling disabled the completion path pays the emulated interrupt cost.
+* **windowed_send** is the asynchronous runtime: a ``lax.while_loop``
+  drives a sender window of up to ``max_outstanding`` work requests in
+  flight.  When the window fills the sender drains its CQ (paying the
+  completion-side pipeline cost per CQE); when the receiver's credits run
+  out the sender stalls in traced code (paying the interrupt-wait cost)
+  until the receiver re-posts its consumed buffers.
 
 Mediation is NOT reimplemented here: the per-endpoint issue/completion
 work is the dataplane's :class:`~repro.core.mediation.MediationPipeline`
 (``dp.pipeline``), applied on the active rank only via
 :func:`rank_mediate` / :func:`rank_complete` — the same composable stages
-the collectives and GSPMD constraints run.
+the collectives and GSPMD constraints run.  Both follow the uniform
+``(x, state)`` runtime convention: pass ``state=dp.runtime_init()`` and
+verbs traffic lands in the per-tenant counters ``dp.runtime_report``
+reads (ops, bytes, stalls, credits, completions, cq_depth).
+
+SPMD note: queue counters (heads, tails, credits) are *connection state*
+— both ranks compute them identically, which keeps ``while_loop`` trip
+counts uniform across the mesh.  Payload data and runtime-counter
+*state* diverge per rank (only the active endpoint's pipeline bumps);
+aggregate with :func:`allreduce_state` before reporting.
 
 Transports: ``RC`` (any message size, send/recv + one-sided READ/WRITE)
 and ``UD`` (≤ 4 KiB MTU, send/recv only) — mirroring the paper's matrix.
 One-sided ops mediate only on the *active* side (paper Fig. 3: RDMA read
-with CoRD on the passive server has zero overhead).
+with CoRD on the passive server has zero overhead) and consume no
+receiver credits (they bypass the recv queue entirely).
 """
 
 from __future__ import annotations
@@ -32,10 +52,16 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.core import techniques as tech
 from repro.core import telemetry as tl
 from repro.core.dataplane import Dataplane
 
 UD_MTU = 4096
+
+# Completion-queue entry status codes.
+CQE_EMPTY = 0     # unowned slot
+CQE_SEND = 1      # send/write/read WR completed (sender-side CQE)
+CQE_RECV = 2      # receive completed (delivered into a posted recv buffer)
 
 
 class TransportError(Exception):
@@ -47,6 +73,9 @@ class QPConfig:
     transport: str = "RC"          # RC | UD
     msg_bytes: int = 4096
     depth: int = 16                # ring slots
+    max_outstanding: int = 8       # sender window (WRs in flight)
+    cq_depth: int = 0              # CQ ring entries; 0 = max(depth, window)
+    dtype: str = "uint8"           # slot element type
     axis: str = "rank"
 
     def __post_init__(self):
@@ -55,24 +84,57 @@ class QPConfig:
         if self.transport == "UD" and self.msg_bytes > UD_MTU:
             raise TransportError(
                 f"UD supports messages up to {UD_MTU} B, got {self.msg_bytes}")
+        if self.depth < 1 or self.max_outstanding < 1:
+            raise TransportError(
+                f"depth/max_outstanding must be >= 1, got "
+                f"{self.depth}/{self.max_outstanding}")
+        itemsize = jnp.dtype(self.dtype).itemsize
+        if self.msg_bytes < itemsize or self.msg_bytes % itemsize:
+            raise TransportError(
+                f"msg_bytes={self.msg_bytes} is not a positive multiple of "
+                f"dtype {self.dtype!r} itemsize ({itemsize} B) — ring slots "
+                f"would silently truncate")
+
+    @property
+    def effective_cq_depth(self) -> int:
+        return self.cq_depth or max(self.depth, self.max_outstanding)
 
 
-def qp_init(cfg: QPConfig, dtype=jnp.uint8) -> dict:
-    """Create QP state: send/recv rings + queue counters (a pytree)."""
-    slot = cfg.msg_bytes // jnp.dtype(dtype).itemsize
+def qp_init(cfg: QPConfig, dtype=None) -> dict:
+    """Create QP state: send/recv rings, queue counters, and the CQ ring
+    (per-entry status + wr_id, producer/consumer cursors) — a pytree."""
+    dt = jnp.dtype(dtype if dtype is not None else cfg.dtype)
+    if cfg.msg_bytes % dt.itemsize:
+        raise TransportError(
+            f"msg_bytes={cfg.msg_bytes} not a multiple of dtype {dt.name!r} "
+            f"itemsize ({dt.itemsize} B)")
+    slot = cfg.msg_bytes // dt.itemsize
+    D = cfg.effective_cq_depth
+    i32 = lambda: jnp.zeros((), jnp.int32)
     return {
-        "send_ring": jnp.zeros((cfg.depth, slot), dtype),
-        "recv_ring": jnp.zeros((cfg.depth, slot), dtype),
-        "sq_head": jnp.zeros((), jnp.int32),     # posted sends
-        "cq_sent": jnp.zeros((), jnp.int32),     # completed sends
-        "cq_rcvd": jnp.zeros((), jnp.int32),     # completed (polled) recvs
+        "send_ring": jnp.zeros((cfg.depth, slot), dt),
+        "recv_ring": jnp.zeros((cfg.depth, slot), dt),
+        "sq_head": i32(),        # posted sends
+        "cq_sent": i32(),        # completed (consumed) sends
+        "cq_rcvd": i32(),        # completed (polled) recvs
+        # the completion queue proper
+        "cq_status": jnp.zeros((D,), jnp.int32),
+        "cq_wrid": jnp.full((D,), -1, jnp.int32),
+        "cq_head": i32(),        # CQEs produced (NIC side)
+        "cq_tail": i32(),        # CQEs consumed (software side)
+        "cq_hwm": i32(),         # CQ occupancy high-water mark
+        # credit-based flow control
+        "credits": i32(),        # rx buffers granted via post_recv
+        "rx_owed": i32(),        # delivered recvs awaiting re-post
+        "win_hwm": i32(),        # max observed in-flight window
     }
 
 
 # ---------------------------------------------------------------------------
 # per-rank conditional mediation: client and server may independently run
 # bypass (BP) or CoRD (CD) — the paper's fig. 3 matrix.  Both sides'
-# work is the dataplane's mediation pipeline, gated by lax.cond.
+# work is the dataplane's mediation pipeline, gated by lax.cond, with the
+# uniform (x, state) runtime convention threaded through the cond.
 # ---------------------------------------------------------------------------
 
 def _verbs_rec(dp: Dataplane, x: jax.Array, tag: str) -> tl.OpRecord:
@@ -82,24 +144,132 @@ def _verbs_rec(dp: Dataplane, x: jax.Array, tag: str) -> tl.OpRecord:
                        mode=dp.mode)
 
 
-def rank_mediate(x: jax.Array, rank: jax.Array, active_rank: int,
-                 dp: Dataplane, tag: str = "verbs/post") -> jax.Array:
+def rank_mediate(x: jax.Array, rank: jax.Array, active_rank,
+                 dp: Dataplane, tag: str = "verbs/post", state=None,
+                 tenant: str | None = None):
     """Apply ``dp.pipeline``'s issue-side stages only on ``active_rank``
-    (SPMD-safe; value-only — no runtime state crosses the cond)."""
+    (SPMD-safe).  Returns ``(x, state)``: the active rank's runtime state
+    picks up the pipeline's per-tenant accounting, other ranks pass
+    through untouched."""
     rec = _verbs_rec(dp, x, tag)
+    ti = dp.tenant_index(tenant)
     return jax.lax.cond(rank == active_rank,
-                        lambda v: dp.pipeline.send(v, rec)[0],
-                        lambda v: v, x)
+                        lambda ops: dp.pipeline.send(ops[0], rec, ops[1], ti),
+                        lambda ops: ops, (x, state))
 
 
-def rank_complete(x: jax.Array, rank: jax.Array, active_rank: int,
-                  dp: Dataplane, tag: str = "verbs/completion") -> jax.Array:
+def rank_complete(x: jax.Array, rank: jax.Array, active_rank,
+                  dp: Dataplane, tag: str = "verbs/completion", state=None,
+                  tenant: str | None = None):
     """Apply ``dp.pipeline``'s completion-side stages only on
-    ``active_rank`` (interrupt wait / bounce copy)."""
+    ``active_rank`` (interrupt wait / bounce copy).  Returns
+    ``(x, state)`` — same convention as :func:`rank_mediate`."""
     rec = _verbs_rec(dp, x, tag)
-    return jax.lax.cond(rank == active_rank,
-                        lambda v: dp.pipeline.complete(v, rec)[0],
-                        lambda v: v, x)
+    ti = dp.tenant_index(tenant)
+    return jax.lax.cond(
+        rank == active_rank,
+        lambda ops: dp.pipeline.complete(ops[0], rec, ops[1], ti),
+        lambda ops: ops, (x, state))
+
+
+def _bump(state, tenant_idx: int, mask, **kw):
+    """Masked per-tenant counter bump; no-op when state carries none."""
+    if state is None or "counters" not in state:
+        return state
+    m = jnp.asarray(mask).astype(jnp.float32)
+    ctrs = tl.tenant_counters_bump(state["counters"], tenant_idx,
+                                   **{k: m * v for k, v in kw.items()})
+    return {**state, "counters": ctrs}
+
+
+def _peak(state, tenant_idx: int, mask, depth):
+    if state is None or "counters" not in state:
+        return state
+    m = jnp.asarray(mask).astype(jnp.float32)
+    ctrs = tl.tenant_counters_peak(state["counters"], tenant_idx,
+                                   cq_depth=m * depth)
+    return {**state, "counters": ctrs}
+
+
+def allreduce_state(state, axis: str = "rank"):
+    """Aggregate a runtime-state pytree over the mesh axis so a single
+    report covers both endpoints (each side's pipeline bumps only its own
+    rank's state).  Additive counters are summed; the ``cq_depth``
+    high-water column is a peak, so it takes the max across ranks.  Call
+    as the last step of a shard_map body."""
+    if state is None:
+        return None
+    out = {}
+    for k, v in state.items():
+        summed = jax.tree.map(lambda a: jax.lax.psum(a, axis), v)
+        if k == "counters":
+            peak = jax.lax.pmax(v[..., tl.CTR_CQ_DEPTH], axis)
+            summed = summed.at[..., tl.CTR_CQ_DEPTH].set(peak)
+        out[k] = summed
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CQ ring primitives (uniform connection state — no rank gating)
+# ---------------------------------------------------------------------------
+
+def _cqe_push(qp: dict, cfg: QPConfig, do, status: int, wrid):
+    """Push one CQE when ``do`` (traced bool) holds; track the occupancy
+    high-water mark.  A full ring drops the CQE (a real CQ overrun is
+    fatal; the emulation sheds instead — the legacy counters still
+    advance, so poll counts stay correct)."""
+    D = cfg.effective_cq_depth
+    do = do & (qp["cq_head"] - qp["cq_tail"] < D)
+    slot = jnp.mod(qp["cq_head"], D)
+    st = jnp.where(do, status, qp["cq_status"][slot])
+    wi = jnp.where(do, wrid, qp["cq_wrid"][slot])
+    head = qp["cq_head"] + do.astype(jnp.int32)
+    occ = head - qp["cq_tail"]
+    return {**qp,
+            "cq_status": qp["cq_status"].at[slot].set(st),
+            "cq_wrid": qp["cq_wrid"].at[slot].set(wi),
+            "cq_head": head,
+            "cq_hwm": jnp.maximum(qp["cq_hwm"], occ)}
+
+
+def _cqe_push_n(qp: dict, cfg: QPConfig, n, status: int, wrid0):
+    """Push ``n`` CQEs (traced count) with consecutive wr_ids starting at
+    ``wrid0``, clamped to the ring's free space — excess CQEs are shed
+    rather than overwriting unconsumed entries (see :func:`_cqe_push`)."""
+    D = cfg.effective_cq_depth
+    free = jnp.maximum(D - (qp["cq_head"] - qp["cq_tail"]), 0)
+    n = jnp.clip(jnp.asarray(n, jnp.int32), 0, free)
+    k = jnp.arange(D, dtype=jnp.int32)
+    mask = k < n
+    idx = jnp.mod(qp["cq_head"] + k, D)
+    st = jnp.where(mask, status, qp["cq_status"][idx])
+    wi = jnp.where(mask, wrid0 + k, qp["cq_wrid"][idx])
+    head = qp["cq_head"] + n
+    occ = head - qp["cq_tail"]
+    return {**qp,
+            "cq_status": qp["cq_status"].at[idx].set(st),
+            "cq_wrid": qp["cq_wrid"].at[idx].set(wi),
+            "cq_head": head,
+            "cq_hwm": jnp.maximum(qp["cq_hwm"], occ)}
+
+
+def _cqe_consume(qp: dict, cfg: QPConfig, n):
+    """Consume ``n`` CQEs from the tail (slots return to CQE_EMPTY)."""
+    D = cfg.effective_cq_depth
+    avail = qp["cq_head"] - qp["cq_tail"]
+    n = jnp.clip(jnp.asarray(n, jnp.int32), 0, jnp.minimum(avail, D))
+    k = jnp.arange(D, dtype=jnp.int32)
+    mask = k < n
+    idx = jnp.mod(qp["cq_tail"] + k, D)
+    st = jnp.where(mask, CQE_EMPTY, qp["cq_status"][idx])
+    return {**qp,
+            "cq_status": qp["cq_status"].at[idx].set(st),
+            "cq_tail": qp["cq_tail"] + n}
+
+
+def cq_occupancy(qp: dict) -> jax.Array:
+    """Outstanding (unconsumed) CQEs."""
+    return qp["cq_head"] - qp["cq_tail"]
 
 
 # ---------------------------------------------------------------------------
@@ -107,12 +277,29 @@ def rank_complete(x: jax.Array, rank: jax.Array, active_rank: int,
 # ---------------------------------------------------------------------------
 
 def post_send(dp: Dataplane, cfg: QPConfig, qp: dict, buf: jax.Array,
-              rank: jax.Array, src: int) -> dict:
-    """Enqueue ``buf`` into the send ring on rank ``src`` (the syscall)."""
-    buf = rank_mediate(buf, rank, src, dp, tag="verbs/post_send")
+              rank: jax.Array, src: int, state=None,
+              tenant: str | None = None) -> tuple[dict, object]:
+    """Enqueue ``buf`` into the send ring on rank ``src`` (the syscall).
+    Returns ``(qp, state)``."""
+    buf, state = rank_mediate(buf, rank, src, dp, tag="verbs/post_send",
+                              state=state, tenant=tenant)
     slot = jnp.mod(qp["sq_head"], cfg.depth)
     ring = jax.lax.dynamic_update_index_in_dim(qp["send_ring"], buf, slot, 0)
-    return {**qp, "send_ring": ring, "sq_head": qp["sq_head"] + 1}
+    return {**qp, "send_ring": ring, "sq_head": qp["sq_head"] + 1}, state
+
+
+def post_recv(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
+              dst: int, n: int = 1, state=None,
+              tenant: str | None = None) -> tuple[dict, object]:
+    """Post ``n`` receive buffers on rank ``dst`` — the receiver's syscall
+    and the credit grant of the flow-control protocol.  Returns
+    ``(qp, state)``."""
+    tok = jnp.zeros((), jnp.float32)
+    tok, state = rank_mediate(tok, rank, dst, dp, tag="verbs/post_recv",
+                              state=state, tenant=tenant)
+    ring = tech.tie(qp["recv_ring"], tok)
+    return {**qp, "recv_ring": ring,
+            "credits": qp["credits"] + jnp.int32(n)}, state
 
 
 def flush_send(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
@@ -121,7 +308,10 @@ def flush_send(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
     """The NIC DMA: move the send ring src→dst (or dst→src for READ).
 
     ``op``: "send" (two-sided), "write" / "read" (one-sided; RC only).
-    Returns ``(qp, state)`` — the uniform dataplane state convention."""
+    Send/write completions land in the CQ ring; a READ moves remote
+    memory without completing any posted send (one-sided ops never touch
+    the send queue's completions).  Returns ``(qp, state)`` — the uniform
+    dataplane state convention."""
     if op != "send" and cfg.transport != "RC":
         raise TransportError(f"one-sided {op!r} requires RC transport")
     perm = [(src, dst)] if op != "read" else [(dst, src)]
@@ -133,27 +323,205 @@ def flush_send(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
         new["send_ring"] = r      # reader pulled remote memory
     else:
         new["recv_ring"] = r
-    # every posted send is completed by the DMA
-    new["cq_sent"] = qp["sq_head"]
+        # the DMA completes every posted send — push their CQEs
+        ncomp = qp["sq_head"] - qp["cq_sent"]
+        new = _cqe_push_n(new, cfg, ncomp, CQE_SEND, qp["cq_sent"])
+        new["cq_sent"] = qp["sq_head"]
     return new, state
 
 
 def poll_cq(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
-            poller: int) -> tuple[jax.Array, dict]:
+            poller: int, state=None,
+            tenant: str | None = None) -> tuple[jax.Array, dict, object]:
     """Drain the completion queue on rank ``poller``.
 
-    Returns ``(completions, qp)`` where ``completions`` is the number of
-    deliveries since the last poll (``cq_sent - cq_rcvd``) — real counts,
-    not a stale counter.  Pays the interrupt cost on the polling rank when
-    polling is disabled."""
-    ring = rank_complete(qp["recv_ring"], rank, poller, dp,
-                         tag="verbs/poll_cq")
+    Returns ``(completions, qp, state)`` where ``completions`` is the
+    number of deliveries since the last poll (``cq_sent - cq_rcvd``) —
+    real counts, not a stale counter.  Consumes every outstanding CQE in
+    the ring and bumps the poller's ``completions`` runtime counter.
+    Pays the interrupt cost on the polling rank when polling is
+    disabled."""
+    ring, state = rank_complete(qp["recv_ring"], rank, poller, dp,
+                                tag="verbs/poll_cq", state=state,
+                                tenant=tenant)
     completed = qp["cq_sent"] - qp["cq_rcvd"]
+    state = _bump(state, dp.tenant_index(tenant), rank == poller,
+                  completions=completed)
+    qp = _cqe_consume(qp, cfg, cq_occupancy(qp))
     qp = {**qp, "recv_ring": ring, "cq_rcvd": qp["cq_sent"]}
-    return completed, qp
+    return completed, qp, state
+
+
+# ---------------------------------------------------------------------------
+# the CQ-driven async runtime: sender window + credit flow control
+# ---------------------------------------------------------------------------
+
+def windowed_send(dp: Dataplane, cfg: QPConfig, qp: dict, msgs: jax.Array,
+                  rank: jax.Array, src: int, dst: int, *, op: str = "send",
+                  state=None, tenant: str | None = None,
+                  dp_peer: Dataplane | None = None
+                  ) -> tuple[jax.Array, dict, object]:
+    """Transmit ``msgs`` (n, slot) src→dst through the async CQ runtime.
+
+    A ``lax.while_loop`` drives one WR event per tick:
+
+    * **post** — when the window (``cfg.max_outstanding``) has room and
+      (two-sided only) a receiver credit is available: the payload is
+      written into the send ring (send-side pipeline cost on ``src``),
+      DMA'd, delivered on the receiving rank, and its CQE pushed.
+    * **drain** — when the window is full (or input is exhausted): the
+      sender consumes the oldest CQE, paying the completion-side pipeline
+      cost — lazy polling, exactly perftest's post-then-poll loop.
+    * **stall** — two-sided sends with no credits left: the sender pays
+      the interrupt-wait cost in traced code, after which the receiver
+      re-posts its consumed buffers (credits resume).
+
+    Returns ``(out, qp, state)``: ``out`` is (n, slot) with the delivered
+    payloads on the receiving rank (``dst``, or ``src`` for READ — other
+    ranks hold zeros).  Queue counters are connection state (identical on
+    both ranks — uniform while_loop trip counts); runtime-counter state
+    diverges per rank and should be aggregated with
+    :func:`allreduce_state` before reporting.
+
+    For ``op="send"`` the receiver must have granted credits via
+    :func:`post_recv` first; a zero-credit sender can never resume (the
+    loop's fuel bound then returns undelivered zeros).  One-sided
+    write/read consume no credits.  For ``op="read"`` ``msgs`` is the
+    remote memory (resident on ``dst``) and the reader pulls it."""
+    if op not in ("send", "write", "read"):
+        raise TransportError(f"unknown windowed op {op!r}")
+    if op != "send" and cfg.transport != "RC":
+        raise TransportError(f"one-sided {op!r} requires RC transport")
+    n = int(msgs.shape[0])
+    if n == 0:
+        return jnp.zeros_like(msgs), qp, state
+    W = min(cfg.max_outstanding, cfg.effective_cq_depth)
+    uses_credits = op == "send"
+    dp_peer = dp_peer if dp_peer is not None else dp
+    ti = dp.tenant_index(tenant)
+    perm = [(src, dst)] if op != "read" else [(dst, src)]
+    stall_iters = (tech.iters_for_ns(dp.cfg.interrupt_cost_us * 1e3)
+                   if dp.cfg.emulate_costs else 0)
+    # fuel: every message needs at most post + drain + stall ticks, plus
+    # the tail drain of a full window — a hard bound on loop length.
+    fuel = 3 * n + 2 * W + 8
+    tag = f"verbs/windowed_{op}"
+
+    sq0, cs0 = qp["sq_head"], qp["cq_sent"]
+    out0 = jnp.zeros_like(msgs)
+
+    def cond(carry):
+        t, i, qp, out, state = carry
+        done = (i >= n) & (qp["cq_sent"] - cs0 >= n)
+        return (t < fuel) & ~done
+
+    def body(carry):
+        t, i, qp, out, state = carry
+        in_flight = qp["sq_head"] - qp["cq_sent"]
+        have_credit = (qp["credits"] > 0) if uses_credits \
+            else jnp.bool_(True)
+        can_post = (i < n) & (in_flight < W) & have_credit
+        cq_ready = cq_occupancy(qp) > 0
+        do_drain = ~can_post & cq_ready & ((in_flight >= W) | (i >= n))
+        do_stall = ~can_post & ~do_drain & (i < n) & (in_flight < W)
+        posted = can_post.astype(jnp.int32)
+        on_src = rank == src
+
+        # -- post: the sender's syscall ---------------------------------
+        idx = jnp.minimum(i, n - 1)
+        payload = jax.lax.dynamic_index_in_dim(msgs, idx, 0, keepdims=False)
+        wire = jnp.where(can_post, payload, jnp.zeros_like(payload))
+        wire, state = jax.lax.cond(
+            can_post,
+            lambda ops: rank_mediate(ops[0], rank, src, dp, tag=tag,
+                                     state=ops[1], tenant=tenant),
+            lambda ops: ops, (wire, state))
+        ring_slot = jnp.mod(qp["sq_head"], cfg.depth)
+        send_ring = jax.lax.cond(
+            can_post,
+            lambda r: jax.lax.dynamic_update_index_in_dim(r, wire,
+                                                          ring_slot, 0),
+            lambda r: r, qp["send_ring"])
+        # the NIC reads the registered ring directly (zero copy)
+        wr = jax.lax.dynamic_index_in_dim(send_ring, ring_slot, 0,
+                                          keepdims=False)
+        if op == "read":
+            # reader pulls remote memory: the wire carries dst's msgs[idx]
+            wr = jnp.where(can_post, payload, jnp.zeros_like(payload))
+
+        # -- DMA --------------------------------------------------------
+        rx = jax.lax.ppermute(wr, cfg.axis, perm)
+
+        # -- delivery: land the payload, ack with a CQE -----------------
+        if uses_credits:
+            # receiver-side completion handling (per-message poll or
+            # interrupt on dst) — one-sided ops involve no remote CPU
+            rx, state = jax.lax.cond(
+                can_post,
+                lambda ops: rank_complete(ops[0], rank, dst, dp_peer,
+                                          tag="verbs/rx_complete",
+                                          state=ops[1], tenant=tenant),
+                lambda ops: ops, (rx, state))
+        recv_ring = jax.lax.cond(
+            can_post,
+            lambda r: jax.lax.dynamic_update_index_in_dim(
+                r, rx, jnp.mod(ring_slot, cfg.depth), 0),
+            lambda r: r, qp["recv_ring"])
+        out = jax.lax.cond(
+            can_post,
+            lambda o: jax.lax.dynamic_update_index_in_dim(o, rx, idx, 0),
+            lambda o: o, out)
+        qp = {**qp, "send_ring": send_ring, "recv_ring": recv_ring}
+        qp = _cqe_push(qp, cfg, can_post, CQE_SEND, qp["sq_head"])
+        sq_head = qp["sq_head"] + posted
+        credits = qp["credits"] - (posted if uses_credits else 0)
+        rx_owed = qp["rx_owed"] + (posted if uses_credits else 0)
+        win = sq_head - qp["cq_sent"]
+        qp = {**qp, "sq_head": sq_head, "credits": credits,
+              "rx_owed": rx_owed,
+              "win_hwm": jnp.maximum(qp["win_hwm"], win)}
+
+        # -- drain: lazy CQ poll on the sender --------------------------
+        tok = jnp.float32(1.0)
+        tok, state = jax.lax.cond(
+            do_drain,
+            lambda ops: rank_complete(ops[0], rank, src, dp,
+                                      tag="verbs/cq_drain", state=ops[1],
+                                      tenant=tenant),
+            lambda ops: ops, (tok, state))
+        qp = _cqe_consume(qp, cfg, do_drain.astype(jnp.int32))
+        qp = {**qp, "cq_sent": qp["cq_sent"] + do_drain.astype(jnp.int32)}
+
+        # -- stall: credit exhaustion -----------------------------------
+        if uses_credits:
+            if stall_iters:
+                tok = jax.lax.cond(
+                    do_stall & on_src,
+                    lambda v: tech.delay_chain(v, stall_iters),
+                    lambda v: v, tok)
+            # the stalled sender's wakeup: the receiver polled its recvs
+            # and re-posted every consumed buffer
+            repost = jnp.where(do_stall, qp["rx_owed"], 0)
+            qp = {**qp, "credits": qp["credits"] + repost,
+                  "rx_owed": qp["rx_owed"] - repost}
+        out = tech.tie(out, tok)
+
+        # -- runtime accounting (active side only) ----------------------
+        state = _bump(state, ti, on_src & can_post,
+                      credits=1 if uses_credits else 0)
+        state = _bump(state, ti, on_src & do_drain, completions=1)
+        state = _bump(state, ti, on_src & do_stall, stalls=1)
+        state = _peak(state, ti, on_src, cq_occupancy(qp))
+        return t + 1, i + posted, qp, out, state
+
+    _, _, qp, out, state = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.int32(0), qp, out0, state))
+    return out, qp, state
 
 
 __all__ = [
-    "QPConfig", "TransportError", "UD_MTU", "qp_init",
-    "post_send", "flush_send", "poll_cq", "rank_mediate", "rank_complete",
+    "QPConfig", "TransportError", "UD_MTU",
+    "CQE_EMPTY", "CQE_SEND", "CQE_RECV", "qp_init",
+    "post_send", "post_recv", "flush_send", "poll_cq", "windowed_send",
+    "rank_mediate", "rank_complete", "allreduce_state", "cq_occupancy",
 ]

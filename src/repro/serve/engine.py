@@ -133,10 +133,14 @@ class Engine:
             rng, k = jax.random.split(rng)
             tok = sample(logits[:, -1, :], k, self.scfg.temperature)[:, None]
             active = np.ones(b, bool)
-            for r, t in zip(batch_reqs, np.asarray(tok)[:, 0]):
+            for j, (r, t) in enumerate(zip(batch_reqs, np.asarray(tok)[:, 0])):
                 r.out_tokens.append(int(t))
+                if t == self.eos_id:
+                    active[j] = False
 
             for i in range(self.scfg.max_new_tokens - 1):
+                if not active.any():
+                    break
                 pos = jnp.asarray(prompt_len + i, jnp.int32)
                 logits, cache = self._step(self.params, tok, cache, pos)
                 rng, k = jax.random.split(rng)
@@ -147,8 +151,6 @@ class Engine:
                         r.out_tokens.append(int(arr[j]))
                         if arr[j] == self.eos_id:
                             active[j] = False
-                if not active.any():
-                    break
             for r in batch_reqs:
                 r.done = True
                 stats = self.tenant_stats[r.tenant]

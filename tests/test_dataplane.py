@@ -140,7 +140,7 @@ def test_verbs_send_read_write_payload(mesh2):
     def send(buf):
         rank = jax.lax.axis_index("rank")
         qp = verbs.qp_init(cfg)
-        qp = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
+        qp, _ = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
         qp, _ = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1, op="send")
         return qp["recv_ring"][None, 0]
 

@@ -133,7 +133,7 @@ def test_verbs_payload_identical_across_modes(mesh2):
         def send(buf):
             rank = jax.lax.axis_index("rank")
             qp = verbs.qp_init(cfg)
-            qp = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
+            qp, _ = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
             qp, _ = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1)
             return qp["recv_ring"][None, 0]
 
@@ -255,11 +255,11 @@ def test_poll_cq_returns_real_completion_counts(mesh2):
     def roundtrip(buf):
         rank = jax.lax.axis_index("rank")
         qp = verbs.qp_init(cfg)
-        qp = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
-        qp = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
+        qp, _ = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
+        qp, _ = verbs.post_send(dp, cfg, qp, buf[0], rank, src=0)
         qp, _ = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1)
-        n1, qp = verbs.poll_cq(dp, cfg, qp, rank, poller=1)
-        n2, qp = verbs.poll_cq(dp, cfg, qp, rank, poller=1)
+        n1, qp, _ = verbs.poll_cq(dp, cfg, qp, rank, poller=1)
+        n2, qp, _ = verbs.poll_cq(dp, cfg, qp, rank, poller=1)
         return n1, n2, qp["cq_rcvd"]
 
     n1, n2, rcvd = jax.jit(roundtrip)(
