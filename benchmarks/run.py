@@ -8,6 +8,7 @@ Sections:
   fig3/fig4 — CoRD overhead matrix & relative throughput (Figs. 3-4)
   window    — CQ-runtime bandwidth vs. sender-window depth (RC + UD)
   credits   — credit flow-control ablation (stall counters)
+  serve     — gang vs continuous-slot serving (tok/s, TTFT, compiles)
   fig5      — system-A preset (Fig. 5)
   fig6      — NPB suite bypass/cord/socket (Fig. 6)
   kernels   — Pallas kernel correctness + XLA timings
@@ -63,6 +64,10 @@ def main() -> None:
     from benchmarks import npb
     rows += npb.run_all()
 
+    print("# serve (gang vs continuous slots)")
+    from benchmarks import serve
+    rows += serve.run_all(fast=fast)
+
     print("# kernels")
     from benchmarks import kernels_bench
     rows += kernels_bench.run_all()
@@ -98,6 +103,10 @@ def main() -> None:
             print(f"credits/{r['bytes']}B/w{r['window']}/"
                   f"c{r['rx_credits']},,gbps={r['gbps']} "
                   f"stalls={r['stalls']}")
+        elif tab == "serve":
+            print(f"serve/{r['scheduler']}/q{r['queue_depth']},,"
+                  f"tok_s={r['tok_s']} ttft_ms={r['ttft_ms_mean']} "
+                  f"compiles={r['decode_compiles']}")
         elif tab == "fig6":
             print(f"fig6/{r['bench']}/{r['mode']},{r['ms'] * 1e3},"
                   f"rel={r['rel_runtime']}")

@@ -1,0 +1,132 @@
+"""Serve-path benchmark: gang-scheduled vs persistent-slot continuous
+batching (tokens/s, time-to-first-token, decode-step compile count).
+
+    PYTHONPATH=src python -m benchmarks.serve [--fast] [--dry-run]
+
+The sweep serves a varied-prompt-length request stream through both
+schedulers at several queue depths (multiples of ``max_batch``) and emits
+``serve`` table rows; ``--dry-run`` is the CI smoke — a few bucket-aligned
+requests, asserting the continuous scheduler's temperature-0 outputs match
+gang scheduling and that the fixed-shape decode step compiled exactly
+once.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+MAX_BATCH = 4
+MAX_NEW = 32
+KV_LEN = 56
+_VARIED_LENGTHS = (5, 9, 14, 7, 15, 6, 11, 13)   # buckets 8 / 16
+# Per-request decode budgets: the wide spread is what exposes the gang
+# convoy effect — every early finisher idles its slot until the gang's
+# longest request (MAX_NEW steps) drains, while continuous refills it.
+_VARIED_BUDGETS = (2, MAX_NEW, 3, 5)
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_model_config
+    from repro.models import build_model
+
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(n: int, equal_len: int = 0):
+    import numpy as np
+
+    from repro.serve import Request
+
+    lengths = [equal_len or _VARIED_LENGTHS[i % len(_VARIED_LENGTHS)]
+               for i in range(n)]
+    return [Request(rid=i,
+                    max_new_tokens=(MAX_NEW if equal_len else
+                                    _VARIED_BUDGETS[i % len(_VARIED_BUDGETS)]),
+                    prompt=np.asarray((np.arange(ln) + 3 * i) % 100,
+                                      np.int32))
+            for i, ln in enumerate(lengths)]
+
+
+def _engine(cfg, model, params, scheduler: str):
+    from repro.configs.base import ServeConfig
+    from repro.serve import Engine
+
+    return Engine(model, params, cfg,
+                  ServeConfig(max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
+                              kv_cache_len=KV_LEN, scheduler=scheduler),
+                  eos_id=-1)
+
+
+def _serve(eng, make_reqs, repeats: int = 1):
+    """Serve ``make_reqs()`` ``repeats`` times on a warm engine, reporting
+    the best wall clock (per-request streams are rebuilt each repeat so
+    outputs don't accumulate)."""
+    best, done = float("inf"), []
+    for _ in range(repeats):
+        reqs = make_reqs()
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        best = min(best, time.perf_counter() - t0)
+    toks = sum(len(r.out_tokens) for r in done)
+    ttft = [r.t_first - t0 for r in done if r.t_first is not None]
+    return done, {
+        "tok_s": round(toks / best, 1),
+        "ttft_ms_mean": round(1e3 * sum(ttft) / max(len(ttft), 1), 2),
+        "ttft_ms_max": round(1e3 * max(ttft), 2) if ttft else 0.0,
+        "decode_compiles": eng.decode_compile_count(),
+        "wall_s": round(best, 3),
+    }
+
+
+def run_all(fast: bool = False) -> list[dict]:
+    cfg, model, params = _build()
+    depths = (2, 4) if fast else (2, 4, 8)       # × MAX_BATCH
+    rows = []
+    for scheduler in ("gang", "continuous"):
+        eng = _engine(cfg, model, params, scheduler)
+        eng.run(_requests(2 * MAX_BATCH))        # warm the compile caches
+        for mult in depths:
+            n = mult * MAX_BATCH
+            _, stats = _serve(eng, lambda n=n: _requests(n), repeats=5)
+            row = {"table": "serve", "scheduler": scheduler,
+                   "queue_depth": n, "max_batch": MAX_BATCH,
+                   "max_new_tokens": MAX_NEW, **stats}
+            rows.append(row)
+            print(json.dumps(row))
+    return rows
+
+
+def dry_run() -> None:
+    """CI smoke: bucket-aligned stream through both schedulers must emit
+    identical temperature-0 tokens, with exactly one decode compile on
+    the continuous side."""
+    cfg, model, params = _build()
+    done_c, stats_c = _serve(_engine(cfg, model, params, "continuous"),
+                             lambda: _requests(6, equal_len=8))
+    done_g, stats_g = _serve(_engine(cfg, model, params, "gang"),
+                             lambda: _requests(6, equal_len=8))
+    out_c = {r.rid: r.out_tokens for r in done_c}
+    out_g = {r.rid: r.out_tokens for r in done_g}
+    assert out_c == out_g, "continuous != gang at temperature 0"
+    assert stats_c["decode_compiles"] == 1, stats_c
+    print(json.dumps({"table": "serve_dryrun", "requests": len(out_c),
+                      "continuous": stats_c, "gang": stats_g}))
+    print("serve dry-run ok")
+
+
+def main() -> None:
+    if "--dry-run" in sys.argv:
+        dry_run()
+        return
+    run_all(fast="--fast" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -196,6 +196,11 @@ class DataplaneConfig:
     zero_copy: bool = True
     polling: bool = True
     kernel_bypass: bool = True
+    # Fuse the pipeline's pure-cost stages into one delay chain + one
+    # staged-copy pass per side (bit-identical, smaller per-op HLO).
+    # False keeps one chain/copy per stage (the pre-fusion shape, kept
+    # for ablation and the fusion-equivalence tests).
+    fuse_mediation: bool = True
     # Policy set enforced in cord mode.
     policies: tuple[str, ...] = ("telemetry",)
     # Tenants sharing this dataplane (per-tenant runtime accounting/QoS).
@@ -248,6 +253,18 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0
     kv_cache_len: int = 4096
+    # Slot scheduler: "continuous" = persistent decode slots with
+    # mid-decode WFQ refill (fixed-shape decode step, compiled once);
+    # "gang" = legacy batch-to-completion scheduling (convoy effect,
+    # shape-derived recompiles) — kept as the benchmark baseline.
+    scheduler: str = "continuous"
+    # Host-bucket admission charges len(prompt) tokens per request; rate
+    # and burst from QoSPolicy.rates (defined in ops) scale by this many
+    # tokens per traced-rate unit.
+    admission_token_scale: float = 4.0
+    # Per-tenant cap on concurrently held decode slots (0 = uncapped) —
+    # the hard ceiling on a tenant's decode-step budget per engine step.
+    max_slots_per_tenant: int = 0
 
 
 @dataclass(frozen=True)

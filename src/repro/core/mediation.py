@@ -59,9 +59,17 @@ class MediationStage:
     value-identical — a stage may delay, copy, account or throttle, never
     alter.  ``send_delay_iters`` / ``complete_delay_iters`` report the
     stage's static serial-delay cost so benchmark harnesses can aggregate
-    per-op mediation work without reimplementing the cost model."""
+    per-op mediation work without reimplementing the cost model.
+
+    ``stateful = False`` declares a *pure cost* stage: its entire effect is
+    the static delay iterations and staged-copy passes it reports, so a
+    fused pipeline may sum those across stages and emit ONE delay chain
+    and ONE copy pass per side instead of running the stage hooks.
+    Stateful stages (accounting, throttling, anything a subclass adds)
+    always run their hooks in declared order."""
 
     name = "stage"
+    stateful = True
 
     def send(self, x, rec: tl.OpRecord, state, tenant_idx: int):
         return x, state
@@ -75,6 +83,12 @@ class MediationStage:
     def complete_delay_iters(self, rec: tl.OpRecord) -> int:
         return 0
 
+    def send_copies(self, rec: tl.OpRecord) -> int:
+        return 0
+
+    def complete_copies(self, rec: tl.OpRecord) -> int:
+        return 0
+
     def __repr__(self) -> str:
         return f"<{type(self).__name__} {self.name!r}>"
 
@@ -83,6 +97,7 @@ class SyscallCostStage(MediationStage):
     """The user→kernel crossing paid per op when kernel bypass is off."""
 
     name = "syscall-cost"
+    stateful = False
 
     def __init__(self, syscall_ns: float):
         self.syscall_ns = float(syscall_ns)
@@ -100,6 +115,7 @@ class SocketStackStage(MediationStage):
     degradation)."""
 
     name = "socket-stack"
+    stateful = False
 
     def __init__(self, stack_ns: float, ns_per_byte: float):
         self.stack_ns = float(stack_ns)
@@ -116,6 +132,7 @@ class StagedCopyStage(MediationStage):
     """Bounce-buffer copies on both sides when zero copy is removed."""
 
     name = "staged-copy"
+    stateful = False
 
     def __init__(self, copies: int = 1):
         self.copies = int(copies)
@@ -126,12 +143,19 @@ class StagedCopyStage(MediationStage):
     def complete(self, x, rec, state, tenant_idx):
         return tech.staged_copy(x, copies=self.copies), state
 
+    def send_copies(self, rec):
+        return self.copies
+
+    def complete_copies(self, rec):
+        return self.copies
+
 
 class InterruptWaitStage(MediationStage):
     """Wait-for-event completion: interrupt delivery + wakeup instead of
     busy polling."""
 
     name = "interrupt-wait"
+    stateful = False
 
     def __init__(self, interrupt_us: float):
         self.interrupt_us = float(interrupt_us)
@@ -189,23 +213,51 @@ class CounterBumpStage(MediationStage):
 class MediationPipeline:
     """An ordered composition of mediation stages.
 
-    ``send``/``complete`` apply every stage's respective hook in declared
-    order.  An empty pipeline (bypass mode) is the identity — the OS is
-    off the data path."""
+    ``send``/``complete`` apply the stages in declared order.  An empty
+    pipeline (bypass mode) is the identity — the OS is off the data path.
 
-    def __init__(self, stages=()):
+    With ``fused=True`` (the default) the pure-cost stages are *fused*:
+    their static delay iterations are summed into ONE ``delay_chain`` and
+    their bounce-buffer passes into ONE ``staged_copy`` per side, instead
+    of one chain/copy per stage.  That shrinks the per-op HLO on every
+    dataplane edge (one while-loop + one barrier pair instead of N) while
+    staying bit-identical — every fused stage is value-preserving by
+    contract, and total serial cost is unchanged because delay iterations
+    add linearly.  Stateful stages (token-bucket, counter-bump, custom
+    subclasses) still run their hooks in declared order."""
+
+    def __init__(self, stages=(), fused: bool = True):
         self.stages: tuple[MediationStage, ...] = tuple(stages)
+        self.fused = bool(fused)
 
     @property
     def stage_names(self) -> tuple[str, ...]:
         return tuple(s.name for s in self.stages)
 
+    def _fused_side(self, x, rec, state, tenant_idx, side: str):
+        iters = sum(getattr(s, f"{side}_delay_iters")(rec)
+                    for s in self.stages if not s.stateful)
+        if iters:
+            x = tech.delay_chain(x, iters)
+        copies = sum(getattr(s, f"{side}_copies")(rec)
+                     for s in self.stages if not s.stateful)
+        if copies:
+            x = tech.staged_copy(x, copies=copies)
+        for s in self.stages:
+            if s.stateful:
+                x, state = getattr(s, side)(x, rec, state, tenant_idx)
+        return x, state
+
     def send(self, x, rec: tl.OpRecord, state=None, tenant_idx: int = 0):
+        if self.fused:
+            return self._fused_side(x, rec, state, tenant_idx, "send")
         for s in self.stages:
             x, state = s.send(x, rec, state, tenant_idx)
         return x, state
 
     def complete(self, x, rec: tl.OpRecord, state=None, tenant_idx: int = 0):
+        if self.fused:
+            return self._fused_side(x, rec, state, tenant_idx, "complete")
         for s in self.stages:
             x, state = s.complete(x, rec, state, tenant_idx)
         return x, state
@@ -217,7 +269,8 @@ class MediationPipeline:
         return sum(s.complete_delay_iters(rec) for s in self.stages)
 
     def __repr__(self) -> str:
-        return f"MediationPipeline{self.stage_names}"
+        fused = "" if self.fused else " unfused"
+        return f"MediationPipeline{self.stage_names}{fused}"
 
 
 def build_pipeline(dp) -> MediationPipeline:
@@ -247,7 +300,8 @@ def build_pipeline(dp) -> MediationPipeline:
                       if isinstance(p, QuotaPolicy)), None) \
             if dp.enforce else None
         stages.append(CounterBumpStage(dp.tenants, quota))
-    return MediationPipeline(stages)
+    return MediationPipeline(stages,
+                             fused=getattr(cfg, "fuse_mediation", True))
 
 
 def runtime_state_init(tenants: tuple[str, ...],
@@ -271,7 +325,10 @@ class HostTokenBucket:
 
     The serving engine refills explicitly once per batching round (the
     host-side analogue of per-op refill), keeping admission deterministic
-    and clock-free for tests."""
+    and clock-free for tests.  Serve-side admission charges *prompt
+    tokens* per request — matching the traced bucket's byte-proportional
+    debits — so ``from_policy`` scales rate and burst by ``scale`` tokens
+    per traced-rate unit."""
 
     def __init__(self, rate: float, burst: float):
         self.rate = float(rate)
@@ -281,6 +338,9 @@ class HostTokenBucket:
     def refill(self) -> None:
         self.tokens = min(self.tokens + self.rate, self.burst)
 
+    def can_take(self, n: float = 1.0) -> bool:
+        return self.tokens >= n
+
     def take(self, n: float = 1.0) -> bool:
         if self.tokens >= n:
             self.tokens -= n
@@ -288,10 +348,11 @@ class HostTokenBucket:
         return False
 
     @classmethod
-    def from_policy(cls, qos: QoSPolicy | None) -> dict[str, "HostTokenBucket"]:
+    def from_policy(cls, qos: QoSPolicy | None,
+                    scale: float = 1.0) -> dict[str, "HostTokenBucket"]:
         if qos is None:
             return {}
-        return {t: cls(rate, qos.burst)
+        return {t: cls(rate * scale, qos.burst * scale)
                 for t, rate in qos.rates.items() if rate > 0}
 
 

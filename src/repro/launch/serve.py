@@ -1,9 +1,11 @@
 """Serving launcher: batched requests through the Engine.
 
-``python -m repro.launch.serve --arch gemma3-1b --requests 8``
+``python -m repro.launch.serve --arch gemma3-1b --requests 8
+[--scheduler continuous|gang]``
 """
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -11,7 +13,7 @@ import numpy as np
 from repro.configs import get_model_config
 from repro.configs.base import ServeConfig
 from repro.models import build_model
-from repro.serve import Engine, Request
+from repro.serve import Engine, Request, prompt_bucket
 
 
 def main() -> None:
@@ -19,26 +21,40 @@ def main() -> None:
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=("continuous", "gang"))
+    ap.add_argument("--max-batch", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_model_config(args.arch, smoke=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    # cache sized for the longest prompt bucket (prompts are 6..10 tokens)
+    # plus the requested decode budget
+    kv_len = prompt_bucket(10) + args.max_new_tokens + 1
     eng = Engine(model, params, cfg,
-                 ServeConfig(max_batch=4, max_new_tokens=args.max_new_tokens),
+                 ServeConfig(max_batch=args.max_batch,
+                             max_new_tokens=args.max_new_tokens,
+                             kv_cache_len=max(kv_len, 128),
+                             scheduler=args.scheduler),
                  eos_id=-1)
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6 + i % 5))
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6 + i % 5),
+                    max_new_tokens=args.max_new_tokens)
             for i in range(args.requests)]
-    import time
     t0 = time.perf_counter()
     done = eng.run(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
+    ttft = [r.t_first - t0 for r in done if r.t_first is not None]
     print(f"served {len(done)} requests, {toks} tokens "
-          f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s, {args.scheduler} scheduler, "
+          f"{eng.decode_compile_count()} decode compiles, "
+          f"mean TTFT {1e3*sum(ttft)/max(len(ttft),1):.0f} ms)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
+    for tenant, stats in eng.tenant_report().items():
+        print(f"  tenant {tenant}: {stats}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,17 @@ parallel/sharding.py): :func:`kv_cache_constrain` routes the cache's
 sharding edges through the mediation pipeline like any other dataplane
 traffic, so cache placement is visible to (and accountable by) the same
 policies that see the collectives.
+
+Slot-aware helpers (persistent-slot continuous batching, serve/engine.py):
+the engine preallocates ONE ``(layers, max_batch, max_cache_len, ...)``
+cache whose batch rows are long-lived *slots*.  A request is prefilled
+alone (batch 1, prompt-length-bucketed), its cache written into a free
+slot with :func:`kv_slot_insert`, and the fixed-shape decode step advances
+every slot at its own position (:func:`kv_update_slots`) behind a per-slot
+validity mask (:func:`slot_validity`).  Entries beyond a slot's position
+are never attended, so stale bytes from a previous resident (or prefill
+padding) are harmless — each position is rewritten by the current resident
+before it first becomes valid.
 """
 
 from __future__ import annotations
@@ -39,6 +50,65 @@ def kv_update(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array,
     return ck, cv
 
 
+def kv_update_slots(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array,
+                    v: jax.Array, pos) -> tuple[jax.Array, jax.Array]:
+    """Per-slot cache write: insert (B, s, KVH, hd) new keys/values into a
+    (B, S_max, KVH, hd) cache at *per-slot* positions ``pos`` (B,) — the
+    continuous-batching analogue of :func:`kv_update`, where every batch
+    row is a slot advancing independently."""
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def one(ck, cv, kk, vv, p):
+        return (jax.lax.dynamic_update_slice(ck, kk.astype(ck.dtype),
+                                             (p, 0, 0)),
+                jax.lax.dynamic_update_slice(cv, vv.astype(cv.dtype),
+                                             (p, 0, 0)))
+
+    return jax.vmap(one)(cache_k, cache_v, k, v, pos)
+
+
+def kv_slot_insert(cache: dict, prefilled: dict, slot) -> dict:
+    """Write one prefilled request's cache (leading batch dim 1) into slot
+    ``slot`` of a persistent slot cache.
+
+    ``slot`` may be a traced scalar, so one jitted insert serves every
+    slot.  Positions beyond the prefill capacity keep whatever the slot
+    held before; the per-slot validity mask makes them unreachable until
+    the new resident overwrites them token by token."""
+    slot = jnp.asarray(slot, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+
+    def ins(dst, src):
+        if not (hasattr(dst, "ndim") and dst.ndim == 5):
+            return dst
+        start = (zero, slot, zero, zero, zero)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+    return {name: ins(dst, prefilled[name]) for name, dst in cache.items()}
+
+
+def slot_vectors_init(slots: int) -> dict:
+    """Per-slot bookkeeping vectors: next write position, active flag and
+    tenant index (−1 = free) — the host-mirrored slot state of the
+    continuous-batching engine.  Host-side numpy by design: the engine
+    mutates them in place between decode steps and feeds the position
+    vector to the fixed-shape decode step each tick."""
+    import numpy as np
+    return {
+        "pos": np.zeros((slots,), np.int32),
+        "active": np.zeros((slots,), bool),
+        "tenant": np.full((slots,), -1, np.int32),
+    }
+
+
+def slot_validity(max_len: int, pos) -> jax.Array:
+    """(B, max_len) mask of cache entries visible to each slot decoding at
+    per-slot position ``pos`` (inclusive: the entry written at ``pos``
+    this step is attended)."""
+    return (jnp.arange(max_len, dtype=jnp.int32)[None, :]
+            <= jnp.asarray(pos, jnp.int32)[:, None])
+
+
 def cache_positions(max_len: int) -> jax.Array:
     return jnp.arange(max_len, dtype=jnp.int32)
 
@@ -62,5 +132,6 @@ def kv_cache_constrain(dp, cache, *, tag: str = "kvcache",
             for k, v in cache.items()}
 
 
-__all__ = ["kv_cache_init", "kv_update", "cache_positions", "cache_validity",
-           "kv_cache_constrain", "KV_CACHE_AXES"]
+__all__ = ["kv_cache_init", "kv_update", "kv_update_slots", "kv_slot_insert",
+           "slot_vectors_init", "slot_validity", "cache_positions",
+           "cache_validity", "kv_cache_constrain", "KV_CACHE_AXES"]

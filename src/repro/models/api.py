@@ -32,6 +32,10 @@ class Model:
     init_cache: Callable
     prefill: Callable
     decode_step: Callable
+    # Fixed-shape decode over persistent slots (per-slot positions).  None
+    # for families without a slot-aware decode path; the serving engine
+    # falls back to gang scheduling when absent.
+    decode_step_slots: Callable | None = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -51,6 +55,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 params, cfg, batch, cache, **kw),
             decode_step=lambda params, token, cache, pos, **kw:
                 m.transformer_decode_step(params, cfg, token, cache, pos, **kw),
+            decode_step_slots=lambda params, token, cache, pos, **kw:
+                m.transformer_decode_step_slots(params, cfg, token, cache,
+                                                pos, **kw),
         )
     if fam == "hybrid":
         m = hybrid

@@ -19,10 +19,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.layers.attention import attend, attention_init, output_project, qkv_project
+from repro.layers.attention import (
+    attend,
+    attend_naive,
+    attention_init,
+    output_project,
+    qkv_project,
+)
 from repro.layers.common import constrain, dense_init, dtype_of, rmsnorm, rmsnorm_init, stacked_init
 from repro.layers.embedding import embed, embedding_init
-from repro.layers.kvcache import kv_cache_init, kv_update
+from repro.layers.kvcache import (
+    kv_cache_init,
+    kv_update,
+    kv_update_slots,
+    slot_validity,
+)
 from repro.layers.mlp import mlp, mlp_init
 from repro.layers.moe import moe, moe_init
 from repro.models.losses import ce_metrics, chunked_ce_loss
@@ -114,6 +125,27 @@ def _layer(lp, x, *, cfg, dp, positions, window, theta, mode,
         o = attend(q, k, v, q_pos=positions, k_pos=positions,
                    causal=True, window=window, logit_cap=a.logit_softcap,
                    impl=impl, q_block=q_block, kv_block=kv_block)
+        new_ck, new_cv = cache_k, cache_v
+    elif mode == "decode_slots":
+        # fixed-shape slot decode: q len 1 per slot, per-slot write
+        # positions (B,). The (B, 1, S_max) mask is tiny at q=1, so the
+        # batched-mask naive path is exact and memory-safe here (the
+        # make_mask hoisting hazard only bites the flash scans).
+        cache_k, cache_v = kv_update_slots(cache_k, cache_v, k, v, cache_pos)
+        s_max = cache_k.shape[1]
+        k_pos = jnp.arange(s_max, dtype=jnp.int32)
+        ck = constrain(dp, cache_k,
+                       ("batch", "kv_seq", "kv_heads", "cache_head_dim"),
+                       tag="attn/cache_k")
+        cv = constrain(dp, cache_v,
+                       ("batch", "kv_seq", "kv_heads", "cache_head_dim"),
+                       tag="attn/cache_v")
+        valid = slot_validity(s_max, cache_pos)               # (B, S_max)
+        w = jnp.asarray(window)
+        valid &= jnp.where(w > 0,
+                           cache_pos[:, None] - k_pos[None, :] < w, True)
+        o = attend_naive(q, ck, cv, valid[:, None, :],
+                         logit_cap=a.logit_softcap)
         new_ck, new_cv = cache_k, cache_v
     else:  # decode: q len 1 against the cache
         cache_k, cache_v = kv_update(cache_k, cache_v, k, v, cache_pos)
@@ -223,13 +255,24 @@ def transformer_init_cache(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def transformer_prefill(params, cfg: ModelConfig, batch: dict, cache, *,
-                        dp=None, impl="flash"):
-    """Fill the cache with the prompt; returns (last_hidden_logits, cache)."""
+                        dp=None, impl="flash", last_pos=None):
+    """Fill the cache with the prompt; returns (last_hidden_logits, cache).
+
+    ``last_pos`` (B,) int32 selects the per-request position whose hidden
+    state feeds the logits — the last *real* prompt token when prompts are
+    right-padded to a bucket capacity.  Right padding sits causally after
+    every real token, so bucketing never perturbs the returned logits.
+    Default (None) keeps the legacy behaviour: logits at the final
+    sequence position."""
     # caches sized >= prompt length; positions start at 0
-    x, _aux, cache, _ = transformer_apply(params, cfg, batch, dp=dp,
-                                          cache=cache, impl=impl)
+    x, _aux, cache, prefix = transformer_apply(params, cfg, batch, dp=dp,
+                                               cache=cache, impl=impl)
     from repro.layers.embedding import logits as logits_fn
-    last = x[:, -1:, :]
+    if last_pos is None:
+        last = x[:, -1:, :]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32) + prefix
+        last = x[jnp.arange(x.shape[0]), idx][:, None, :]
     return logits_fn(params["embed"], last, dp=dp), cache
 
 
@@ -259,8 +302,40 @@ def transformer_decode_step(params, cfg: ModelConfig, token, cache, pos, *,
     return logits_fn(params["embed"], x, dp=dp), {"k": caches[0], "v": caches[1]}
 
 
+def transformer_decode_step_slots(params, cfg: ModelConfig, token, cache,
+                                  pos, *, dp=None):
+    """One fixed-shape decode step over persistent slots.
+
+    token: (B, 1) int32 — each slot's last sampled token; pos: (B,) int32
+    per-slot write position.  Every shape is a function of the engine's
+    slot geometry (max_batch, max_cache_len), never of the request mix, so
+    this traces and compiles exactly once per engine.  Free slots still
+    compute — their writes land at their stale position and are replaced
+    on slot refill; the per-slot validity mask keeps stale cache entries
+    unreachable."""
+    dtype = dtype_of(cfg.dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    x = embed(params["embed"], token, dtype, dp=dp)
+    positions = pos[:, None]                       # (B, 1) per-slot RoPE
+    window_arr, theta_arr = layer_flags(cfg)
+
+    def body(x, xs):
+        lp, w, th, ck, cv = xs
+        x, _aux, ck, cv = _layer(lp, x, cfg=cfg, dp=dp, positions=positions,
+                                 window=w, theta=th, mode="decode_slots",
+                                 cache_k=ck, cache_v=cv, cache_pos=pos)
+        return x, (ck, cv)
+
+    xs = (params["layers"], jnp.asarray(window_arr), jnp.asarray(theta_arr),
+          cache["k"], cache["v"])
+    x, caches = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    from repro.layers.embedding import logits as logits_fn
+    return logits_fn(params["embed"], x, dp=dp), {"k": caches[0], "v": caches[1]}
+
+
 __all__ = [
     "transformer_init", "transformer_apply", "transformer_loss",
     "transformer_init_cache", "transformer_prefill",
-    "transformer_decode_step", "layer_flags",
+    "transformer_decode_step", "transformer_decode_step_slots", "layer_flags",
 ]

@@ -1,3 +1,3 @@
-from repro.serve.engine import Engine, Request, sample
+from repro.serve.engine import Engine, Request, WFQScheduler, prompt_bucket, sample
 
-__all__ = ["Engine", "Request", "sample"]
+__all__ = ["Engine", "Request", "WFQScheduler", "prompt_bucket", "sample"]

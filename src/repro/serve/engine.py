@@ -1,29 +1,60 @@
-"""Serving engine: batched prefill + decode with slot-based continuous
-batching (lite) and per-tenant admission control.
+"""Serving engine: persistent-slot continuous batching with a fixed-shape
+decode step, WFQ slot packing, and per-tenant admission control.
 
-Requests enter a queue; the engine packs up to ``max_batch`` active slots,
-prefills new prompts (padded to the slot prompt capacity), then steps all
-active slots together with one jitted decode step per token.  Finished
-slots (EOS or max_new_tokens) are refilled from the queue — the standard
-continuous-batching shape, kept single-process.
+**Slot lifecycle** (``scheduler="continuous"``, the default whenever the
+model family has a slot-aware decode path):
 
-All model communication flows through the dataplane; the decode step's KV
-cache sharding comes from parallel/sharding.py decode rules, issued
-through the mediation pipeline (``kv_cache_constrain``).
+1. The engine preallocates ONE ``(layers, max_batch, kv_cache_len, ...)``
+   KV cache whose batch rows are long-lived *slots*, plus per-slot
+   position / token vectors (layers/kvcache.py slot helpers).
+2. A granted request is prefilled alone (batch 1), right-padded to a
+   power-of-two *prompt bucket* — right padding sits causally after every
+   real token, so bucketing never perturbs logits, and the prefill
+   compile cache stays bounded at O(log max_prompt) entries.
+3. ``kv_slot_insert`` writes the prefilled cache into the free slot; the
+   slot joins the batch at its own position.
+4. One jitted decode step advances ALL slots each tick.  Its shapes are
+   functions of the slot geometry only — ``(max_batch, 1)`` tokens,
+   ``(max_batch,)`` positions, the fixed cache — so it compiles **once
+   per engine** regardless of the request mix (vs. one compile per
+   distinct batch shape under gang scheduling).
+5. A slot that finishes (EOS or token budget) is refilled from the queue
+   *mid-decode* — no convoy effect: co-residents keep decoding while the
+   freed slot takes new work.
 
-Multi-tenancy: each :class:`Request` names a tenant.  When the dataplane
-carries a :class:`~repro.core.policies.QoSPolicy` with per-tenant rates,
-the engine runs the *host-side mirror* of the pipeline's token bucket
-(:class:`~repro.core.mediation.HostTokenBucket`) as admission control —
-requests from tenants over their rate are deferred to later batching
-rounds instead of being packed, throttling each tenant's serve rate with
-the same bucket semantics the traced dataplane applies per op.  Per-tenant
-served-token accounting lands in :meth:`Engine.tenant_report`.
+**WFQ slot packing** is the QoS mechanism: a weighted-fair-queueing
+scheduler (:class:`WFQScheduler`) keeps a virtual time per tenant, with
+weights from :class:`~repro.core.policies.QoSPolicy` ``rates``.  Granting
+a slot advances the tenant's virtual time by the request's decode-step
+cost over its weight, and the tenant with the smallest virtual time wins
+the next free slot — so decode-slot occupancy splits proportionally to
+weights under saturation.  ``ServeConfig.max_slots_per_tenant`` adds a
+hard per-tenant budget on concurrently held slots.  The host-side token
+bucket (:class:`~repro.core.mediation.HostTokenBucket`) still gates
+admission underneath WFQ, charging ``len(prompt)`` tokens per request
+(the host analogue of the traced bucket's byte-proportional debits);
+bucket-starved grants are counted as deferrals.  Occupancy, grants and
+deferrals land in :meth:`Engine.tenant_report` and, in counter-block
+layout, :meth:`Engine.runtime_counters`.
+
+``scheduler="gang"`` keeps the legacy behaviour — admit up to
+``max_batch`` requests, batch-prefill them left-padded, decode the gang
+to completion with shape-derived (recompiling) prefill/decode steps —
+as the benchmark baseline and the fallback for model families without
+``decode_step_slots``.
+
+At temperature 0 both schedulers produce identical output tokens when
+gang batches carry uniform prompt lengths.  With mixed lengths the gang
+path left-pads to the batch max and *attends the pads* (a legacy gang
+property), perturbing its logits; the continuous path is padding-
+invariant by construction (right-padded buckets sit causally after the
+prompt; stale slot bytes are validity-masked).
 """
 
 from __future__ import annotations
 
-from collections import defaultdict
+import time
+from collections import Counter, defaultdict, deque
 from dataclasses import dataclass, field
 
 import jax
@@ -31,29 +62,89 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.core import telemetry as tl
 from repro.core.mediation import HostTokenBucket
 from repro.core.policies import QoSPolicy
-from repro.layers.kvcache import kv_cache_constrain
+from repro.layers.kvcache import (
+    kv_cache_constrain,
+    kv_slot_insert,
+    slot_vectors_init,
+)
 
 # Bound on consecutive all-throttled refill rounds before the engine
 # force-admits the queue head (guarantees progress under any rate config).
 _MAX_STARVED_ROUNDS = 10_000
+_MIN_PROMPT_BUCKET = 8
 
 
-@dataclass
-class Request:
-    rid: int
+@dataclass(eq=False)                 # identity semantics: rid is
+class Request:                       # caller-supplied and prompt is an
+    rid: int                         # ndarray (elementwise ==)
     prompt: np.ndarray               # (prompt_len,) int32
     max_new_tokens: int = 16
     tenant: str = "default"
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    t_first: float | None = None     # perf_counter stamp of the first token
 
 
 def sample(logits: jax.Array, rng, temperature: float):
     if temperature <= 0:
         return logits.argmax(-1).astype(jnp.int32)
     return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+
+
+def prompt_bucket(n: int) -> int:
+    """Power-of-two prompt capacity ≥ max(n, 8): bounds the number of
+    distinct prefill shapes (and thus compiles) at O(log max_prompt)."""
+    b = _MIN_PROMPT_BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+class WFQScheduler:
+    """Weighted fair queueing over decode slots.
+
+    Each tenant carries a *virtual time*; granting a slot advances it by
+    the request's expected decode-step cost divided by the tenant's
+    weight.  The backlogged tenant with the smallest virtual time wins
+    the next free slot, so long-run slot grants — and decode-slot
+    occupancy — split proportionally to weights under saturation.
+
+    A monotone *virtual clock* tracks the smallest virtual time among
+    the tenants backlogged each scheduling round (``note_backlog``); a
+    grant starts no earlier than the clock, so a tenant re-entering
+    after idling resumes at the current service level instead of
+    spending its idle time as hoarded credit.  Unknown tenants get
+    ``default_weight``."""
+
+    def __init__(self, weights: dict[str, float] | None = None,
+                 default_weight: float = 1.0):
+        self.weights = dict(weights or {})
+        self.default_weight = float(default_weight)
+        self.vtime: dict[str, float] = {}
+        self.vclock = 0.0
+
+    def weight(self, tenant: str) -> float:
+        return max(float(self.weights.get(tenant, self.default_weight)),
+                   1e-9)
+
+    def order(self, tenants) -> list[str]:
+        """Tenants in grant-preference order (smallest virtual time
+        first; ties keep the caller's order)."""
+        return sorted(tenants, key=lambda t: self.vtime.get(t, 0.0))
+
+    def note_backlog(self, tenants) -> None:
+        """Advance the virtual clock to the backlogged minimum (call once
+        per scheduling round with every queued or slot-holding tenant)."""
+        vs = [self.vtime.get(t, 0.0) for t in tenants]
+        if vs:
+            self.vclock = max(self.vclock, min(vs))
+
+    def grant(self, tenant: str, cost: float) -> None:
+        v = max(self.vtime.get(tenant, 0.0), self.vclock)
+        self.vtime[tenant] = v + float(cost) / self.weight(tenant)
 
 
 class Engine:
@@ -73,21 +164,64 @@ class Engine:
                                           dp=dp))
         self._step = jax.jit(
             lambda p, t, c, pos: model.decode_step(p, t, c, pos, dp=dp))
+        step_slots = getattr(model, "decode_step_slots", None)
+        self._slot_support = step_slots is not None
+        if self._slot_support:
+            # prefill-to-slot is ONE traced op: batch-1 bucketed prefill
+            # whose cache lands directly in the target slot of the
+            # persistent cache (one dispatch per admitted request, one
+            # compile per prompt bucket)
+            def _prefill_into_slot(p, t, pc, cache, slot, last):
+                logits, pc = model.prefill(p, {"tokens": t},
+                                           kv_cache_constrain(dp, pc),
+                                           dp=dp, last_pos=last)
+                return logits, kv_slot_insert(cache, pc, slot)
+
+            # the persistent cache is donated: XLA updates it in place
+            # instead of copying the full buffer per tick / per insert
+            # (a no-op with a warning on backends without aliasing)
+            self._prefill_slot = jax.jit(_prefill_into_slot,
+                                         donate_argnums=(3,))
+            self._step_slots = jax.jit(
+                lambda p, t, c, pos: step_slots(p, t, c, pos, dp=dp),
+                donate_argnums=(2,))
         qos = next((p for p in (dp.policies if dp is not None else [])
                     if isinstance(p, QoSPolicy)), None)
-        self._buckets = HostTokenBucket.from_policy(qos)
+        self._buckets = HostTokenBucket.from_policy(
+            qos, scale=serve.admission_token_scale)
+        self._wfq = WFQScheduler(qos.rates if qos is not None else {})
         self.tenant_stats: dict[str, dict[str, float]] = defaultdict(
-            lambda: {"requests": 0, "tokens": 0, "deferrals": 0})
+            lambda: {"requests": 0, "tokens": 0, "deferrals": 0,
+                     "wfq_grants": 0, "occupancy_steps": 0})
+        self._tenant_ids: dict[str, int] = {}
+        self._decode_shapes: set[tuple] = set()
+
+    def _tenant_id(self, tenant: str) -> int:
+        """Stable small integer per tenant (for the slot tenant vector)."""
+        return self._tenant_ids.setdefault(tenant, len(self._tenant_ids))
 
     # ------------------------------------------------------------------
     # tenant admission (host-side token bucket, serve-level throttling)
     # ------------------------------------------------------------------
+    @staticmethod
+    def _admission_cost(r: Request, bucket: HostTokenBucket | None) -> float:
+        """Bucket debit for admitting ``r``: its prompt tokens, clamped to
+        the bucket's burst so a prompt longer than the bucket can ever
+        hold still drains a full bucket instead of being permanently
+        inadmissible (the classic token-bucket cost clamp)."""
+        cost = float(len(r.prompt))
+        return min(cost, bucket.burst) if bucket is not None else cost
+
     def _admit_batch(self, queue: list[Request]) -> tuple[list[Request],
                                                           list[Request]]:
-        """Pick up to ``max_batch`` requests the buckets admit; the rest
-        stay queued.  Refills until at least one request is admissible
-        (guaranteed progress); a request counts as deferred at most once
-        per batching round, on the round's first refill."""
+        """Gang admission: pick up to ``max_batch`` requests the buckets
+        admit; the rest stay queued.  Refills until at least one request
+        is admissible (guaranteed progress).  Bucket starvation is
+        observed with ``can_take`` *before* the batch-fullness check, so
+        a starved request behind a full batch is still counted as
+        deferred (once per batching round, on the round's first refill);
+        the bucket is only debited — by ``len(prompt)`` tokens — when the
+        request is actually admitted."""
         B = self.scfg.max_batch
         for round_ in range(_MAX_STARVED_ROUNDS):
             for b in self._buckets.values():
@@ -95,12 +229,16 @@ class Engine:
             admitted, deferred = [], []
             for r in queue:
                 bucket = self._buckets.get(r.tenant)
-                if len(admitted) < B and (bucket is None or bucket.take()):
+                cost = self._admission_cost(r, bucket)
+                if bucket is not None and not bucket.can_take(cost):
+                    if round_ == 0:
+                        self.tenant_stats[r.tenant]["deferrals"] += 1
+                    deferred.append(r)
+                elif len(admitted) < B:
+                    if bucket is not None:
+                        bucket.take(cost)
                     admitted.append(r)
                 else:
-                    if bucket is not None and len(admitted) < B \
-                            and round_ == 0:
-                        self.tenant_stats[r.tenant]["deferrals"] += 1
                     deferred.append(r)
             if admitted:
                 return admitted, deferred
@@ -116,9 +254,209 @@ class Engine:
             toks[i, -len(r.prompt):] = r.prompt      # left-pad
         return toks
 
-    def run(self, requests: list[Request], rng=None) -> list[Request]:
-        """Serve all requests to completion; returns them with outputs."""
+    def _finish(self, r: Request, done: list[Request]) -> None:
+        r.done = True
+        stats = self.tenant_stats[r.tenant]
+        stats["requests"] += 1
+        stats["tokens"] += len(r.out_tokens)
+        done.append(r)
+
+    def _emit(self, r: Request, token: int) -> None:
+        if not r.out_tokens:
+            r.t_first = time.perf_counter()
+        r.out_tokens.append(token)
+
+    # ------------------------------------------------------------------
+    # public entry
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request], rng=None,
+            scheduler: str | None = None) -> list[Request]:
+        """Serve all requests to completion; returns them with outputs.
+
+        ``scheduler`` overrides ``ServeConfig.scheduler`` for this run;
+        "continuous" silently falls back to "gang" when the model family
+        has no slot-aware decode path."""
         rng = rng if rng is not None else jax.random.PRNGKey(0)
+        sched = scheduler or self.scfg.scheduler
+        if sched not in ("continuous", "gang"):
+            raise ValueError(f"unknown scheduler {sched!r}; "
+                             f"expected 'continuous' or 'gang'")
+        if sched == "continuous" and self._slot_support:
+            return self._run_continuous(list(requests), rng)
+        return self._run_gang(list(requests), rng)
+
+    # ------------------------------------------------------------------
+    # continuous: persistent slots, fixed-shape decode, WFQ packing
+    # ------------------------------------------------------------------
+    def _bucket_cap(self, prompt_len: int) -> int:
+        cap = prompt_bucket(prompt_len)
+        need = cap + self.scfg.max_new_tokens + 1
+        if need > self.scfg.kv_cache_len:
+            raise ValueError(
+                f"request needs {need} cache positions (prompt bucket {cap}"
+                f" + max_new_tokens {self.scfg.max_new_tokens} + 1) but "
+                f"kv_cache_len is {self.scfg.kv_cache_len}")
+        return cap
+
+    def _start_request(self, r: Request, slot: int, cache, slots, vecs, tok,
+                       ntok, done, rng):
+        """Prefill one request (bucketed, batch 1), insert its cache into
+        ``slot``, and emit its first token.  Returns (cache, rng)."""
+        cap = self._bucket_cap(len(r.prompt))
+        toks = np.zeros((1, cap), np.int32)
+        toks[0, :len(r.prompt)] = r.prompt           # right-pad
+        pcache = self.model.init_cache(1, cap)
+        last = np.asarray([len(r.prompt) - 1], np.int32)
+        logits, cache = self._prefill_slot(self.params, jnp.asarray(toks),
+                                           pcache, cache, jnp.int32(slot),
+                                           jnp.asarray(last))
+        rng, k = jax.random.split(rng)
+        t = int(np.asarray(sample(logits[:, -1, :], k,
+                                  self.scfg.temperature))[0])
+        self._emit(r, t)
+        limit = min(r.max_new_tokens, self.scfg.max_new_tokens)
+        if t == self.eos_id or limit <= 1:
+            self._finish(r, done)                    # slot stays free
+            return cache, rng
+        slots[slot] = r
+        vecs["pos"][slot] = len(r.prompt)
+        vecs["active"][slot] = True
+        vecs["tenant"][slot] = self._tenant_id(r.tenant)
+        tok[slot, 0] = t
+        ntok[slot] = 1
+        return cache, rng
+
+    def _fill_slots(self, slots, queue, cache, vecs, tok, ntok, done, rng):
+        """WFQ slot packing: hand each free slot to the backlogged tenant
+        with the smallest virtual time whose bucket admits its head
+        request.  Returns (cache, rng, granted_count)."""
+        scfg = self.scfg
+        granted_n = 0
+        if not queue:
+            return cache, rng, granted_n
+        for b in self._buckets.values():
+            b.refill()                   # one refill per scheduling round
+        occupancy = Counter(s.tenant for s in slots if s is not None)
+        self._wfq.note_backlog({r.tenant for r in queue} | set(occupancy))
+        # Bucket starvation is counted per scheduling round for every
+        # backlogged tenant, independent of slot availability — a starved
+        # tenant waiting behind fully occupied slots is still deferred.
+        heads: dict[str, Request] = {}
+        for r in queue:                  # FIFO head per backlogged tenant
+            heads.setdefault(r.tenant, r)
+        deferred_round: set[str] = set()
+        for tenant, r in heads.items():
+            bucket = self._buckets.get(tenant)
+            if bucket is not None and \
+                    not bucket.can_take(self._admission_cost(r, bucket)):
+                self.tenant_stats[tenant]["deferrals"] += 1
+                deferred_round.add(tenant)
+        for slot in range(scfg.max_batch):
+            if slots[slot] is not None or not heads:
+                continue
+            granted = None
+            for tenant in self._wfq.order(heads):
+                r = heads[tenant]
+                if scfg.max_slots_per_tenant and \
+                        occupancy[tenant] >= scfg.max_slots_per_tenant:
+                    continue             # over its slot budget this tick
+                bucket = self._buckets.get(tenant)
+                cost = self._admission_cost(r, bucket)
+                if bucket is not None and not bucket.can_take(cost):
+                    # starved — possibly only mid-round (an earlier grant
+                    # drained the bucket), so count if the round-start
+                    # scan didn't
+                    if tenant not in deferred_round:
+                        self.tenant_stats[tenant]["deferrals"] += 1
+                        deferred_round.add(tenant)
+                    continue
+                if bucket is not None:
+                    bucket.take(cost)
+                granted = r
+                break
+            if granted is None:
+                break                    # nothing admissible this round
+            for qi, q in enumerate(queue):
+                if q is granted:         # remove by identity: rid is not
+                    del queue[qi]        # unique and prompt is an ndarray
+                    break
+            nxt = next((q for q in queue if q.tenant == granted.tenant),
+                       None)
+            if nxt is None:
+                heads.pop(granted.tenant)
+            else:
+                heads[granted.tenant] = nxt
+            self._wfq.grant(granted.tenant,
+                            cost=min(granted.max_new_tokens,
+                                     scfg.max_new_tokens))
+            self.tenant_stats[granted.tenant]["wfq_grants"] += 1
+            occupancy[granted.tenant] += 1
+            granted_n += 1
+            cache, rng = self._start_request(granted, slot, cache, slots,
+                                             vecs, tok, ntok, done, rng)
+            if slots[slot] is None:      # finished on its first token
+                occupancy[granted.tenant] -= 1
+        return cache, rng, granted_n
+
+    def _run_continuous(self, requests: list[Request], rng) -> list[Request]:
+        scfg = self.scfg
+        B = scfg.max_batch
+        for r in requests:
+            self._bucket_cap(len(r.prompt))          # validate up front
+        cache = self.model.init_cache(B, scfg.kv_cache_len)
+        vecs = slot_vectors_init(B)      # per-slot pos/active/tenant
+        self._slot_vecs = vecs           # exposed via slot_report()
+        tok = np.zeros((B, 1), np.int32)
+        ntok = np.zeros(B, np.int32)
+        slots: list[Request | None] = [None] * B
+        queue = deque(requests)
+        done: list[Request] = []
+        starved = 0
+
+        while queue or vecs["active"].any():
+            cache, rng, granted = self._fill_slots(slots, queue, cache, vecs,
+                                                   tok, ntok, done, rng)
+            active = np.nonzero(vecs["active"])[0]
+            if not len(active):
+                if not queue:
+                    break
+                starved = 0 if granted else starved + 1
+                if starved > _MAX_STARVED_ROUNDS:
+                    # pathological rates (≈0): force progress, bypassing
+                    # the bucket, with the queue head
+                    r = queue.popleft()
+                    cache, rng = self._start_request(r, 0, cache, slots,
+                                                     vecs, tok, ntok, done,
+                                                     rng)
+                    starved = 0
+                continue
+            starved = 0
+
+            self._decode_shapes.add(("slots", B, scfg.kv_cache_len))
+            logits, cache = self._step_slots(self.params, jnp.asarray(tok),
+                                             cache, jnp.asarray(vecs["pos"]))
+            rng, k = jax.random.split(rng)
+            nxt = np.asarray(sample(logits[:, -1, :], k, scfg.temperature))
+            for i in active:
+                r = slots[i]
+                t = int(nxt[i])
+                self._emit(r, t)
+                self.tenant_stats[r.tenant]["occupancy_steps"] += 1
+                ntok[i] += 1
+                vecs["pos"][i] += 1
+                tok[i, 0] = t
+                if t == self.eos_id or \
+                        ntok[i] >= min(r.max_new_tokens, scfg.max_new_tokens):
+                    self._finish(r, done)
+                    slots[i] = None                  # freed mid-decode
+                    vecs["active"][i] = False
+                    vecs["tenant"][i] = -1
+        return done
+
+    # ------------------------------------------------------------------
+    # gang (legacy baseline): batch to completion, shape-derived compiles
+    # ------------------------------------------------------------------
+    def _run_gang(self, requests: list[Request], rng) -> list[Request]:
         queue = list(requests)
         done: list[Request] = []
 
@@ -132,15 +470,18 @@ class Engine:
                                           {"tokens": jnp.asarray(toks)}, cache)
             rng, k = jax.random.split(rng)
             tok = sample(logits[:, -1, :], k, self.scfg.temperature)[:, None]
+            limits = [min(r.max_new_tokens, self.scfg.max_new_tokens)
+                      for r in batch_reqs]
             active = np.ones(b, bool)
             for j, (r, t) in enumerate(zip(batch_reqs, np.asarray(tok)[:, 0])):
-                r.out_tokens.append(int(t))
-                if t == self.eos_id:
+                self._emit(r, int(t))
+                if t == self.eos_id or limits[j] <= 1:
                     active[j] = False
 
             for i in range(self.scfg.max_new_tokens - 1):
                 if not active.any():
                     break
+                self._decode_shapes.add(("gang", b, cache_len))
                 pos = jnp.asarray(prompt_len + i, jnp.int32)
                 logits, cache = self._step(self.params, tok, cache, pos)
                 rng, k = jax.random.split(rng)
@@ -148,20 +489,70 @@ class Engine:
                 arr = np.asarray(tok)[:, 0]
                 for j, r in enumerate(batch_reqs):
                     if active[j]:
-                        r.out_tokens.append(int(arr[j]))
-                        if arr[j] == self.eos_id:
+                        self._emit(r, int(arr[j]))
+                        # a slot whose request hits EOS or its token budget
+                        # goes IDLE for the rest of the gang — the convoy
+                        # effect continuous slot refill removes
+                        if arr[j] == self.eos_id or \
+                                len(r.out_tokens) >= limits[j]:
                             active[j] = False
             for r in batch_reqs:
-                r.done = True
-                stats = self.tenant_stats[r.tenant]
-                stats["requests"] += 1
-                stats["tokens"] += len(r.out_tokens)
-                done.append(r)
+                self._finish(r, done)
         return done
 
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
     def tenant_report(self) -> dict[str, dict[str, float]]:
-        """Per-tenant serve accounting: requests, tokens, deferrals."""
+        """Per-tenant serve accounting: requests, tokens, deferrals, WFQ
+        grants and decode-slot occupancy steps."""
         return {t: dict(v) for t, v in self.tenant_stats.items()}
 
+    def slot_report(self) -> list[dict]:
+        """Live per-slot view (position, active, tenant name) from the
+        slot vectors — the serve-side feed for the per-tenant dashboards
+        (ROADMAP): poll during a run to see who holds which slot."""
+        vecs = getattr(self, "_slot_vecs", None)
+        if vecs is None:
+            return []
+        names = {i: t for t, i in self._tenant_ids.items()}
+        return [{"slot": i, "pos": int(vecs["pos"][i]),
+                 "active": bool(vecs["active"][i]),
+                 "tenant": names.get(int(vecs["tenant"][i]))}
+                for i in range(len(vecs["pos"]))]
 
-__all__ = ["Engine", "Request", "sample"]
+    def runtime_counters(self) -> tuple[np.ndarray, tuple[str, ...]]:
+        """Serve accounting in per-tenant counter-block layout (rows match
+        telemetry counter columns): ops = WFQ slot grants, bytes = served
+        tokens, chunks = decode-slot occupancy steps, throttled = bucket
+        deferrals.  Lets serve-side QoS land next to the dataplane's
+        traced per-tenant runtime counters in dashboards."""
+        tenants = tuple(self.tenant_stats)
+        ctrs = np.zeros((len(tenants), tl.NUM_COUNTERS), np.float32)
+        for i, t in enumerate(tenants):
+            s = self.tenant_stats[t]
+            ctrs[i, tl.CTR_OPS] = s["wfq_grants"] or s["requests"]
+            ctrs[i, tl.CTR_BYTES] = s["tokens"]
+            ctrs[i, tl.CTR_CHUNKS] = s["occupancy_steps"]
+            ctrs[i, tl.CTR_THROTTLED] = s["deferrals"]
+        return ctrs, tenants
+
+    def decode_compile_count(self) -> int:
+        """Decode-step compilations so far (jit cache entries across the
+        gang and slot decode steps) — continuous batching holds this at 1
+        per engine; gang scheduling pays one per distinct batch shape.
+        Falls back to the engine's own distinct-decode-shape count if the
+        jit cache stats API is unavailable (same value: one compile per
+        distinct shape signature)."""
+        n = 0
+        for f in (getattr(self, "_step_slots", None), self._step):
+            if f is None:
+                continue
+            try:
+                n += f._cache_size()
+            except Exception:           # jit cache introspection moved
+                return len(self._decode_shapes)
+        return n
+
+
+__all__ = ["Engine", "Request", "WFQScheduler", "sample", "prompt_bucket"]
