@@ -54,14 +54,14 @@ def _requests(n: int, equal_len: int = 0):
             for i, ln in enumerate(lengths)]
 
 
-def _engine(cfg, model, params, scheduler: str):
+def _engine(cfg, model, params, scheduler: str, obs=None):
     from repro.configs.base import ServeConfig
     from repro.serve import Engine
 
     return Engine(model, params, cfg,
                   ServeConfig(max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
                               kv_cache_len=KV_LEN, scheduler=scheduler),
-                  eos_id=-1)
+                  eos_id=-1, obs=obs)
 
 
 def _serve(eng, make_reqs, repeats: int = 1):
@@ -86,11 +86,15 @@ def _serve(eng, make_reqs, repeats: int = 1):
 
 
 def run_all(fast: bool = False) -> list[dict]:
+    from repro.core.obs import CounterTimeline
+
     cfg, model, params = _build()
     depths = (2, 4) if fast else (2, 4, 8)       # × MAX_BATCH
     rows = []
     for scheduler in ("gang", "continuous"):
-        eng = _engine(cfg, model, params, scheduler)
+        # per-tick engine timeline, written next to the bench JSON
+        timeline = CounterTimeline(source=f"bench-serve/{scheduler}")
+        eng = _engine(cfg, model, params, scheduler, obs=timeline)
         eng.run(_requests(2 * MAX_BATCH))        # warm the compile caches
         for mult in depths:
             n = mult * MAX_BATCH
@@ -100,15 +104,24 @@ def run_all(fast: bool = False) -> list[dict]:
                    "max_new_tokens": MAX_NEW, **stats}
             rows.append(row)
             print(json.dumps(row))
+        path = timeline.save(f"runs/serve_{scheduler}_timeline.json")
+        print(json.dumps({"table": "serve", "scheduler": scheduler,
+                          "timeline": path,
+                          "ticks": len(timeline.samples)}))
     return rows
 
 
 def dry_run() -> None:
     """CI smoke: bucket-aligned stream through both schedulers must emit
     identical temperature-0 tokens, with exactly one decode compile on
-    the continuous side."""
+    the continuous side, and the attached engine timeline must round-trip
+    as a well-formed schema-versioned artifact."""
+    from repro.core.obs import CounterTimeline
+
     cfg, model, params = _build()
-    done_c, stats_c = _serve(_engine(cfg, model, params, "continuous"),
+    timeline = CounterTimeline(source="bench-serve/dryrun")
+    done_c, stats_c = _serve(_engine(cfg, model, params, "continuous",
+                                     obs=timeline),
                              lambda: _requests(6, equal_len=8))
     done_g, stats_g = _serve(_engine(cfg, model, params, "gang"),
                              lambda: _requests(6, equal_len=8))
@@ -116,7 +129,11 @@ def dry_run() -> None:
     out_g = {r.rid: r.out_tokens for r in done_g}
     assert out_c == out_g, "continuous != gang at temperature 0"
     assert stats_c["decode_compiles"] == 1, stats_c
+    path = timeline.save("runs/serve_dryrun_timeline.json")
+    doc = CounterTimeline.load(path)             # validates the schema
+    assert doc["samples"], "engine timeline captured no ticks"
     print(json.dumps({"table": "serve_dryrun", "requests": len(out_c),
+                      "timeline": path, "ticks": len(doc["samples"]),
                       "continuous": stats_c, "gang": stats_g}))
     print("serve dry-run ok")
 

@@ -1,6 +1,7 @@
 """CoRD policies in action: telemetry, quotas, memory-region security and
 runtime QoS throttling enforced on a live dataplane — the OS-level control
-the paper regains.
+the paper regains — plus a two-tenant observability timeline of the
+throttled run (docs/observability.md walks through this output).
 
     PYTHONPATH=src python examples/policy_demo.py
 """
@@ -16,7 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import DataplaneConfig
-from repro.core import Dataplane, PolicyViolation, compat
+from repro.core import CounterTimeline, Dataplane, PolicyViolation, compat
 from repro.core.policies import (
     QoSPolicy,
     QuotaPolicy,
@@ -88,14 +89,26 @@ def main():
             g, rt = carry
             s, rt = dp3.psum(g.sum(), "data", tag="noisy/op", state=rt,
                              tenant="noisy")
-            return (g + 0 * s, rt), None
+            v, rt = dp3.psum(g.sum(), "data", tag="victim/op", state=rt,
+                             tenant="victim")
+            return (g + 0 * s + 0 * v, rt), None
         (g, rt), _ = jax.lax.scan(one, (g, rt), None, length=16)
         return g, rt
 
-    _, rt = jax.jit(burst)(grads, dp3.runtime_init())
+    # thread ONE runtime state through several bursts, snapshotting the
+    # per-tenant counter block between jitted calls — the host-side
+    # timeline never appears inside traced code
+    burst_jit = jax.jit(burst)
+    rt = dp3.runtime_init()
+    timeline = CounterTimeline(source="policy-demo")
+    for round_ in range(1, 7):
+        _, rt = jax.block_until_ready(burst_jit(grads, rt))
+        timeline.snapshot(round_, dp3.runtime_report(rt))
     print("\nper-tenant runtime accounting:")
     for tenant, ctrs in dp3.runtime_report(rt).items():
         print(f"  {tenant:8s} {ctrs}")
+    print("\ntwo-tenant timeline (6 burst rounds, noisy throttled):")
+    print(timeline.panel(width=24))
 
 
 if __name__ == "__main__":

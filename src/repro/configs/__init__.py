@@ -40,7 +40,8 @@ _ARCH_MODULES = {
 
 ARCHS = tuple(_ARCH_MODULES)
 
-# long_500k applicability (DESIGN.md §5): run for sub-quadratic archs only.
+# long_500k applicability: run for sub-quadratic archs only
+# (ModelConfig.is_subquadratic).
 LONG_CONTEXT_ARCHS = ("gemma3-4b", "gemma3-1b", "hymba-1.5b", "xlstm-350m")
 
 

@@ -21,7 +21,7 @@ CONFIG = ModelConfig(
         num_experts=128,
         top_k=2,
         dense_residual=True,
-        dense_residual_ff=7168,     # arctic residual dense MLP (assumption, see DESIGN.md)
+        dense_residual_ff=7168,     # arctic residual dense MLP (assumption)
         capacity_factor=1.25,
     ),
     max_seq_len=4_096,

@@ -98,7 +98,8 @@ class ModelConfig:
     def is_subquadratic(self) -> bool:
         """True if decode state does not grow ~ O(seq) for *all* layers.
 
-        Used to decide long_500k applicability (see DESIGN.md §5)."""
+        Used to decide long_500k applicability (see configs/__init__.py
+        LONG_CONTEXT_ARCHS)."""
         if self.family in ("ssm",):
             return True
         if self.family == "hybrid":
@@ -268,6 +269,20 @@ class ServeConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Per-tenant observability timelines (core/obs.py).
+
+    Opt-in and provably free when off: snapshots read host/device arrays
+    only *between* steps, never inside traced code, so traced results are
+    bit-identical with the toggle on or off (tests/test_obs.py)."""
+    timeline: bool = False        # snapshot per-tenant counters each step
+    every: int = 1                # snapshot every N steps / engine ticks
+    out_dir: str = "runs"         # where *_timeline.json artifacts land
+    spark_width: int = 48         # console sparkline panel width
+    panel: bool = True            # print per-tenant panels at end of run
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig = field(default_factory=ModelConfig)
     shape: ShapeConfig = SHAPES["train_4k"]
@@ -275,6 +290,7 @@ class RunConfig:
     dataplane: DataplaneConfig = field(default_factory=DataplaneConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     serve: ServeConfig = field(default_factory=ServeConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
 
 # ---------------------------------------------------------------------------

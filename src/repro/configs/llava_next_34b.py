@@ -1,7 +1,7 @@
 """llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
 
 Anyres tiling; the vision frontend is a STUB — input_specs() provides
-precomputed patch embeddings (see DESIGN.md §5).
+precomputed patch embeddings.
 [hf:llava-hf/llava-v1.6-mistral-7b-hf family; unverified]
 """
 

@@ -9,7 +9,9 @@ perftest reproduction.  Mediation itself is one composable artifact — the
 `MediationPipeline` (core/mediation.py) — that the collectives, the GSPMD
 constraint path and the verbs layer all compile their paths from, with
 per-tenant runtime accounting threaded through shard_map bodies via the
-uniform ``(x, state)`` convention.
+uniform ``(x, state)`` convention.  `CounterTimeline` (core/obs.py)
+streams those per-tenant counter blocks into schema-versioned timeline
+artifacts and console sparkline panels (docs/observability.md).
 """
 
 from repro.core.dataplane import Dataplane, make_dataplane
@@ -20,6 +22,12 @@ from repro.core.mediation import (
     build_pipeline,
 )
 from repro.core.mr import MemoryRegion, MRError, MRRegistry
+from repro.core.obs import (
+    CounterTimeline,
+    sparkline,
+    TIMELINE_SCHEMA,
+    validate_timeline,
+)
 from repro.core.policies import (
     Policy,
     PolicyContext,
@@ -36,6 +44,7 @@ __all__ = [
     "MediationPipeline", "MediationStage", "build_pipeline",
     "HostTokenBucket",
     "MemoryRegion", "MRError", "MRRegistry",
+    "CounterTimeline", "sparkline", "TIMELINE_SCHEMA", "validate_timeline",
     "Policy", "PolicyContext", "PolicyViolation",
     "QoSPolicy", "QuotaPolicy", "SecurityPolicy", "TelemetryPolicy",
     "OpRecord", "Telemetry",

@@ -38,6 +38,13 @@ where no state can be threaded, pass None).
 
 :class:`HostTokenBucket` is the host-side mirror of the traced token
 bucket, used by the serving engine for tenant admission control.
+
+The per-tenant counter blocks the ``counter-bump`` stage maintains are
+the feed for the observability timelines (core/obs.py): snapshot
+``dp.runtime_report(state)`` between steps to stream this pipeline's
+accounting into rate series and panels.  docs/architecture.md maps the
+stages to the paper's techniques; docs/observability.md defines each
+counter.
 """
 
 from __future__ import annotations

@@ -1,0 +1,282 @@
+"""Per-tenant observability timelines — the dataplane's state made
+first-class and inspectable over *time*, not just per step.
+
+The mediation pipeline (core/mediation.py), the verbs CQ runtime
+(core/verbs.py) and the serving engine (serve/engine.py) all account
+traffic into per-tenant counter blocks, but ``dp.runtime_report`` /
+``Engine.tenant_report`` are one flat view per step.  A
+:class:`CounterTimeline` turns those flat views into an append-only
+host-side time series:
+
+* :meth:`CounterTimeline.snapshot` appends one sample — a per-tenant
+  counter dict (``dp.runtime_report(state)``, ``Engine`` counters, or any
+  ``{tenant: {counter: cumulative_value}}``) plus optional run-wide
+  *gauges* (active slots, queue depth).  Snapshots only **read** host /
+  device arrays between steps — never inside traced code — so with the
+  toggle off (or on) traced results are bit-identical
+  (tests/test_obs.py asserts this against a traced train step).
+* :meth:`CounterTimeline.rates` derives per-window series from
+  consecutive samples: ``ops_s`` / ``bytes_s`` / ``chunks_s`` (deltas
+  over wall time), ``throttled_pct`` / ``stalls_pct`` / ``denied_pct``
+  (share of the window's ops), and the ``cq_depth`` high-water level.
+* :meth:`CounterTimeline.save` writes a schema-versioned JSON run
+  artifact (``runs/<name>_timeline.json``, see docs/observability.md for
+  the schema) and :meth:`CounterTimeline.panel` renders per-tenant ASCII
+  sparkline panels for the console.
+
+Everything here is host-side Python + numpy: no jax tracing, no device
+allocation.  Counter *names* come from core/telemetry.py so the timeline
+columns can never drift from the counter-block layout.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+from repro.core import telemetry as tl
+
+# Artifact schema identifier.  Bump the version when the document layout
+# changes; validate_timeline() refuses unknown schemas.
+TIMELINE_SCHEMA = "cord-timeline/v1"
+
+# Derived per-window rate series (docs/observability.md for semantics).
+RATE_FIELDS = ("ops_s", "bytes_s", "chunks_s", "throttled_pct",
+               "stalls_pct", "denied_pct", "cq_depth")
+
+_SPARK_BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values, width: int = 48) -> str:
+    """Render a numeric series as a unicode block sparkline.
+
+    Series longer than ``width`` are bucket-averaged down; flat series
+    render as a mid-height line so "constant" is distinguishable from
+    "empty" (which renders as '')."""
+    vals = [float(v) for v in values]
+    if not vals:
+        return ""
+    if len(vals) > width:
+        # bucket-mean downsample to exactly `width` cells
+        edges = np.linspace(0, len(vals), width + 1)
+        vals = [float(np.mean(vals[int(edges[i]):max(int(edges[i + 1]),
+                                                     int(edges[i]) + 1)]))
+                for i in range(width)]
+    lo, hi = min(vals), max(vals)
+    span = hi - lo
+    if span <= 0 or not math.isfinite(span):
+        # flat series: baseline if it sits at zero, mid-height otherwise
+        return _SPARK_BLOCKS[0 if hi == 0 else 3] * len(vals)
+    idx = [min(int((v - lo) / span * (len(_SPARK_BLOCKS) - 1e-9)),
+               len(_SPARK_BLOCKS) - 1) for v in vals]
+    return "".join(_SPARK_BLOCKS[i] for i in idx)
+
+
+class CounterTimeline:
+    """Append-only per-tenant counter time series with derived rates.
+
+    Samples carry *cumulative* counters (the counter-block convention:
+    every column except ``cq_depth`` is monotone non-decreasing); rates
+    are derived between consecutive samples at report/save time, so
+    snapshotting stays O(tenants × counters) per step with no math on
+    the hot path."""
+
+    def __init__(self, source: str = "run",
+                 counter_names: tuple[str, ...] = tl.COUNTER_NAMES):
+        self.source = source
+        self.counter_names = tuple(counter_names)
+        self.samples: list[dict] = []
+        self._tenants: list[str] = []      # first-seen order
+        self._gauge_names: list[str] = []
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
+    def snapshot(self, step: int, report: dict, *, gauges: dict | None = None,
+                 t: float | None = None) -> None:
+        """Append one sample.
+
+        ``report`` is ``{tenant: {counter: cumulative_value}}`` — exactly
+        what ``dp.runtime_report(state)`` returns; missing counters read
+        as 0.  ``gauges`` are run-wide instantaneous levels (e.g. active
+        decode slots).  ``t`` defaults to ``time.perf_counter()``; pass
+        explicit stamps for deterministic artifacts/tests."""
+        tenants = {}
+        for name, ctrs in report.items():
+            if name not in self._tenants:
+                self._tenants.append(name)
+            tenants[name] = {k: float(ctrs.get(k, 0.0))
+                             for k in self.counter_names}
+        g = {k: float(v) for k, v in (gauges or {}).items()}
+        for k in g:
+            if k not in self._gauge_names:
+                self._gauge_names.append(k)
+        self.samples.append({
+            "step": int(step),
+            "t": float(t if t is not None else time.perf_counter()),
+            "tenants": tenants,
+            "gauges": g,
+        })
+
+    def snapshot_block(self, step: int, ctrs, tenants: tuple[str, ...], *,
+                       gauges: dict | None = None, t: float | None = None
+                       ) -> None:
+        """Counter-block form: a ``(len(tenants), NUM_COUNTERS)`` array in
+        telemetry column order (``tenant_counters_init`` layout)."""
+        self.snapshot(step, tl.tenant_counters_report(ctrs, tenants),
+                      gauges=gauges, t=t)
+
+    # ------------------------------------------------------------------
+    # derived series
+    # ------------------------------------------------------------------
+    @property
+    def tenants(self) -> tuple[str, ...]:
+        return tuple(self._tenants)
+
+    def _value(self, sample: dict, tenant: str, counter: str) -> float:
+        return float(sample["tenants"].get(tenant, {}).get(counter, 0.0))
+
+    def rate_axis(self) -> dict[str, list]:
+        """Window-end coordinates for every rates() series: the step and
+        wall-time stamp of each window's closing sample."""
+        return {"step": [s["step"] for s in self.samples[1:]],
+                "t": [s["t"] for s in self.samples[1:]]}
+
+    def rates(self) -> dict[str, dict[str, list[float]]]:
+        """Per-tenant derived series, one value per window between
+        consecutive samples: ``{tenant: {field: [v, ...]}}``.
+
+        Deltas divide by the window's wall time; a non-positive wall
+        delta (explicit equal stamps, clock weirdness) falls back to the
+        step delta so the series stays finite and deterministic."""
+        out: dict[str, dict[str, list[float]]] = {
+            tn: {f: [] for f in RATE_FIELDS} for tn in self._tenants}
+        for prev, cur in zip(self.samples, self.samples[1:]):
+            dt = cur["t"] - prev["t"]
+            if dt <= 0:
+                dt = float(max(cur["step"] - prev["step"], 1))
+            for tn in self._tenants:
+                d = {c: max(self._value(cur, tn, c)
+                            - self._value(prev, tn, c), 0.0)
+                     for c in self.counter_names}
+                ops = d.get("ops", 0.0)
+                pct = (lambda n: 100.0 * n / ops if ops > 0 else 0.0)
+                r = out[tn]
+                r["ops_s"].append(ops / dt)
+                r["bytes_s"].append(d.get("bytes", 0.0) / dt)
+                r["chunks_s"].append(d.get("chunks", 0.0) / dt)
+                r["throttled_pct"].append(pct(d.get("throttled", 0.0)))
+                r["stalls_pct"].append(pct(d.get("stalls", 0.0)))
+                r["denied_pct"].append(pct(d.get("denied", 0.0)))
+                # cq_depth is a high-water mark, not additive: report the
+                # level at the window's close.
+                r["cq_depth"].append(self._value(cur, tn, "cq_depth"))
+        return out
+
+    def gauge_series(self) -> dict[str, list[float]]:
+        """Run-wide gauges aligned to the sample axis (not windows)."""
+        return {g: [float(s["gauges"].get(g, 0.0)) for s in self.samples]
+                for g in self._gauge_names}
+
+    # ------------------------------------------------------------------
+    # artifact
+    # ------------------------------------------------------------------
+    def to_doc(self) -> dict:
+        return {
+            "schema": TIMELINE_SCHEMA,
+            "source": self.source,
+            "counters": list(self.counter_names),
+            "rate_fields": list(RATE_FIELDS),
+            "tenants": list(self._tenants),
+            "samples": self.samples,
+            "axis": self.rate_axis(),
+            "rates": self.rates(),
+            "gauges": self.gauge_series(),
+        }
+
+    def save(self, path: str) -> str:
+        """Write the schema-versioned JSON artifact; returns ``path``."""
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_doc(), f, indent=1)
+        return path
+
+    @staticmethod
+    def load(path: str) -> dict:
+        """Load and validate an artifact; returns the document dict."""
+        with open(path) as f:
+            doc = json.load(f)
+        validate_timeline(doc)
+        return doc
+
+    # ------------------------------------------------------------------
+    # console panels
+    # ------------------------------------------------------------------
+    def panel(self, width: int = 48,
+              fields: tuple[str, ...] = RATE_FIELDS) -> str:
+        """Per-tenant ASCII sparkline panels (plus run-wide gauges).
+
+        All-zero series other than ``ops_s``/``bytes_s`` are elided so a
+        quiet tenant stays one glanceable block."""
+        lines: list[str] = []
+        rates = self.rates()
+        for tn in self._tenants:
+            lines.append(f"-- tenant {tn} ({self.source}, "
+                         f"{len(self.samples)} samples) ".ljust(width + 18, "-"))
+            for f in fields:
+                series = rates[tn][f]
+                if not series:
+                    continue
+                if f not in ("ops_s", "bytes_s") and not any(series):
+                    continue
+                lines.append(f"  {f:14s} {sparkline(series, width):{width}s}"
+                             f" last {series[-1]:.1f}")
+        gauges = self.gauge_series()
+        if gauges:
+            lines.append(f"-- run gauges ".ljust(width + 18, "-"))
+            for g, series in gauges.items():
+                lines.append(f"  {g:14s} {sparkline(series, width):{width}s}"
+                             f" last {series[-1]:.1f}")
+        return "\n".join(lines)
+
+
+def validate_timeline(doc: dict) -> dict:
+    """Structural check of a timeline artifact; raises ValueError on a
+    malformed document, returns it unchanged otherwise (so call sites can
+    chain).  This is the CI smoke's assertion and the forward-compat
+    gate: unknown schema versions are refused, not misread."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"timeline artifact must be a dict, got {type(doc)}")
+    if doc.get("schema") != TIMELINE_SCHEMA:
+        raise ValueError(f"unknown timeline schema {doc.get('schema')!r} "
+                         f"(expected {TIMELINE_SCHEMA!r})")
+    for key in ("source", "counters", "rate_fields", "tenants", "samples",
+                "axis", "rates", "gauges"):
+        if key not in doc:
+            raise ValueError(f"timeline artifact missing key {key!r}")
+    n_windows = max(len(doc["samples"]) - 1, 0)
+    if len(doc["axis"].get("step", ())) != n_windows:
+        raise ValueError("timeline axis length != sample windows")
+    for s in doc["samples"]:
+        for key in ("step", "t", "tenants", "gauges"):
+            if key not in s:
+                raise ValueError(f"timeline sample missing key {key!r}")
+    for tn in doc["tenants"]:
+        series = doc["rates"].get(tn)
+        if series is None:
+            raise ValueError(f"timeline rates missing tenant {tn!r}")
+        for f in doc["rate_fields"]:
+            if len(series.get(f, ())) != n_windows:
+                raise ValueError(
+                    f"rate series {tn}/{f} length != window count")
+    return doc
+
+
+__all__ = ["CounterTimeline", "sparkline", "validate_timeline",
+           "TIMELINE_SCHEMA", "RATE_FIELDS"]

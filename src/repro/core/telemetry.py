@@ -1,7 +1,7 @@
 """Dataplane telemetry — the observability the paper gains by removing
 kernel bypass (CoRD §1: "facilitate application observability").
 
-Two mechanisms:
+Three mechanisms:
 
 * **Trace-time records** (`Telemetry`): every op issued through the
   Dataplane is recorded with its logical tag, collective kind, byte size and
@@ -9,10 +9,21 @@ Two mechanisms:
   information an OS would collect at the syscall boundary, and it is also
   the source of the roofline collective term (benchmarks/roofline.py).
 
-* **In-graph counters** (`CounterState`): a tiny traced array of per-class
-  counters threaded through measured paths (perftest / NPB / the explicit
-  trainer), so that `cord` mode performs *real* per-op mediation work at run
+* **In-graph counters** (`counters_init`/`counters_bump`): a tiny traced
+  array of per-class counters threaded through measured paths (perftest /
+  NPB), so that `cord` mode performs *real* per-op mediation work at run
   time — the analogue of the user→kernel crossing cost.
+
+* **Per-tenant counter blocks** (`tenant_counters_*`): a
+  ``(num_tenants, NUM_COUNTERS)`` float32 block carried in the runtime
+  state the mediation pipeline, QoS/quota policies, verbs CQ runtime and
+  serving engine all bump — the multi-tenant accounting substrate.  The
+  column order is ``COUNTER_NAMES`` everywhere (``counters_dict`` and
+  ``tenant_counters_report`` share it; tests/test_obs.py pins it), and
+  every column is cumulative except ``cq_depth``, a high-water mark
+  folded in with ``tenant_counters_peak``.  ``CounterTimeline``
+  (core/obs.py) snapshots these blocks into per-tenant timelines;
+  docs/observability.md documents each counter's semantics.
 """
 
 from __future__ import annotations

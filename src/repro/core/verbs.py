@@ -36,7 +36,14 @@ SPMD note: queue counters (heads, tails, credits) are *connection state*
 — both ranks compute them identically, which keeps ``while_loop`` trip
 counts uniform across the mesh.  Payload data and runtime-counter
 *state* diverge per rank (only the active endpoint's pipeline bumps);
-aggregate with :func:`allreduce_state` before reporting.
+aggregate with :func:`allreduce_state` before reporting or before
+snapshotting into a :class:`~repro.core.obs.CounterTimeline`.  An
+aggregated state is a *report*, not a resumable state: feeding it back
+into another mediated transfer would psum the already-summed base again
+(exponential double counting) — start each transfer from a fresh
+``runtime_init()`` and accumulate reports host-side instead, as
+benchmarks/run.py's dry-run timeline does (docs/observability.md defines
+the stall/credit/completion/cq_depth semantics).
 
 Transports: ``RC`` (any message size, send/recv + one-sided READ/WRITE)
 and ``UD`` (≤ 4 KiB MTU, send/recv only) — mirroring the paper's matrix.

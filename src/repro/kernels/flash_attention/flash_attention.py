@@ -1,6 +1,6 @@
 """Pallas TPU flash-attention kernel (forward).
 
-TPU-native adaptation (DESIGN.md §6): the GPU flash algorithm's
+TPU-native adaptation: the GPU flash algorithm's
 shared-memory tiling becomes explicit VMEM BlockSpecs; the online-softmax
 state (m, l, acc) lives in VMEM scratch that persists across the
 innermost ("arbitrary") KV-block grid dimension; MXU-aligned block shapes

@@ -3,7 +3,7 @@
     h_t = exp(dt_t ⊗ A) ⊙ h_{t-1} + (dt_t ⊙ x_t) ⊗ B_t
     y_t = (h_t · C_t)
 
-TPU adaptation (DESIGN.md §6): the recurrence state h (channels × N)
+TPU adaptation: the recurrence state h (channels × N)
 lives in VMEM scratch and persists across the innermost chunk grid
 dimension; channels are blocked to keep the (db, N) state VREG/VMEM
 friendly; the discretization exp(dt·A) is computed in-kernel (never

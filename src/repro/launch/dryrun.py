@@ -164,7 +164,7 @@ def build_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
     if shape.kind == "train":
         # Gradient accumulation sized so the remat-saved activation stack
         # (L, B_local, S, D) stays under ~4.5 GB/device; bf16 master weights
-        # for >100B archs (see DESIGN.md §7 / EXPERIMENTS.md §Dry-run).
+        # for >100B archs.
         data_ways = sizes.get("data", 1) * sizes.get("pod", 1)
         s_total = shape.seq_len + (cfg.num_patches if cfg.family == "vlm" else 0)
         stack_per_seq = (cfg.num_layers + cfg.encoder_layers) * s_total \

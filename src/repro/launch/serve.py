@@ -1,17 +1,25 @@
 """Serving launcher: batched requests through the Engine.
 
 ``python -m repro.launch.serve --arch gemma3-1b --requests 8
-[--scheduler continuous|gang]``
+[--scheduler continuous|gang] [--timeline]``
+
+``--timeline`` attaches a :class:`~repro.core.obs.CounterTimeline` to the
+engine: one per-tick snapshot of the serve counter block (WFQ grants,
+served tokens, slot occupancy, deferrals) plus active-slot / queue-depth
+gauges, written to ``runs/<arch>_serve_timeline.json`` with per-tenant
+sparkline panels on the console (docs/observability.md).
 """
 
 import argparse
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_model_config
-from repro.configs.base import ServeConfig
+from repro.configs.base import ObsConfig, ServeConfig
+from repro.core import CounterTimeline
 from repro.models import build_model
 from repro.serve import Engine, Request, prompt_bucket
 
@@ -24,6 +32,9 @@ def main() -> None:
     ap.add_argument("--scheduler", default="continuous",
                     choices=("continuous", "gang"))
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--timeline", action="store_true",
+                    help="per-tick engine snapshots into "
+                         "runs/<arch>_serve_timeline.json")
     args = ap.parse_args()
 
     cfg = get_model_config(args.arch, smoke=True)
@@ -32,12 +43,15 @@ def main() -> None:
     # cache sized for the longest prompt bucket (prompts are 6..10 tokens)
     # plus the requested decode budget
     kv_len = prompt_bucket(10) + args.max_new_tokens + 1
+    obs = ObsConfig(timeline=args.timeline)
+    timeline = CounterTimeline(source=f"serve/{args.arch}") \
+        if obs.timeline else None
     eng = Engine(model, params, cfg,
                  ServeConfig(max_batch=args.max_batch,
                              max_new_tokens=args.max_new_tokens,
                              kv_cache_len=max(kv_len, 128),
                              scheduler=args.scheduler),
-                 eos_id=-1)
+                 eos_id=-1, obs=timeline, obs_every=obs.every)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6 + i % 5),
                     max_new_tokens=args.max_new_tokens)
@@ -55,6 +69,13 @@ def main() -> None:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
     for tenant, stats in eng.tenant_report().items():
         print(f"  tenant {tenant}: {stats}")
+    if timeline is not None:
+        path = timeline.save(os.path.join(
+            obs.out_dir, f"{args.arch}_serve_timeline.json"))
+        print(f"timeline artifact: {path} "
+              f"({len(timeline.samples)} ticks)")
+        if obs.panel:
+            print(timeline.panel(width=obs.spark_width))
 
 
 if __name__ == "__main__":

@@ -1,19 +1,29 @@
 """Training launcher: ``python -m repro.launch.train --arch gemma3-1b
-[--mode cord] [--steps 100] [key=value overrides...]``
+[--mode cord] [--timeline] [key=value overrides...]``
 
 Runs the explicit-DP trainer on the local CPU mesh (all host devices) with
 the fault-tolerant runtime; production meshes use the same RunConfig with
 make_production_mesh on real hardware.
+
+``--timeline`` switches the step to ``runtime_accounting=True`` (the
+per-tenant runtime-state pytree threaded through the gradient sync) and
+snapshots ``dp.runtime_report`` into a
+:class:`~repro.core.obs.CounterTimeline` after each step — host-side
+reads between steps only, so traced results are bit-identical to a run
+without the flag (tests/test_obs.py).  The run writes the
+schema-versioned artifact ``runs/<arch>_timeline.json`` and prints
+per-tenant sparkline panels (docs/observability.md).
 """
 
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import apply_overrides, get_model_config
-from repro.configs.base import DataplaneConfig, RunConfig, TrainConfig
-from repro.core import Dataplane
+from repro.configs.base import DataplaneConfig, ObsConfig, RunConfig, TrainConfig
+from repro.core import CounterTimeline, Dataplane
 from repro.data import DataConfig, ShardedLoader, SyntheticLM
 from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
@@ -28,6 +38,9 @@ def main() -> None:
                     choices=["bypass", "cord", "socket"])
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--timeline", action="store_true",
+                    help="thread per-tenant runtime accounting through the "
+                         "step and write runs/<arch>_timeline.json")
     ap.add_argument("overrides", nargs="*", default=[])
     args = ap.parse_args()
 
@@ -36,11 +49,13 @@ def main() -> None:
     train = TrainConfig()
     train = apply_overrides(train, [o for o in args.overrides
                                     if not o.startswith("model.")])
-    run = RunConfig(train=train)
+    obs = ObsConfig(timeline=args.timeline)
+    run = RunConfig(train=train, obs=obs)
 
     mesh = make_local_mesh()
     dp = Dataplane(DataplaneConfig(mode=args.mode), mesh=mesh)
-    step = make_explicit_dp_step(model, run, dp, axis="data")
+    step = make_explicit_dp_step(model, run, dp, axis="data",
+                                 runtime_accounting=obs.timeline)
     state = init_state(model, jax.random.PRNGKey(train.seed),
                        compression=train.grad_compression)
     ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
@@ -49,8 +64,21 @@ def main() -> None:
                                 seed=train.seed))
     loader = ShardedLoader(ds)
 
+    timeline = CounterTimeline(source=f"train/{args.arch}") \
+        if obs.timeline else None
+    rt = {"state": dp.runtime_init(), "step": 0} if obs.timeline else None
+
     def wrap(s, b):
-        return step(s, {k: jnp.asarray(v) for k, v in b.items()})
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        if rt is None:
+            return step(s, b)
+        s, metrics, rt["state"] = step(s, b, rt["state"])
+        rt["step"] += 1
+        if timeline is not None and rt["step"] % obs.every == 0:
+            # host-side read of the accumulated counter block, strictly
+            # between steps — the traced computation never sees the obs
+            timeline.snapshot(rt["step"], dp.runtime_report(rt["state"]))
+        return s, metrics
 
     state, report = run_loop(
         wrap, state, loader, steps=train.steps,
@@ -60,6 +88,12 @@ def main() -> None:
     print(f"done: {report.steps_run} steps, "
           f"final loss {report.metrics[-1]['loss']:.4f}")
     print(dp.telemetry.report())
+    if timeline is not None:
+        path = timeline.save(os.path.join(obs.out_dir,
+                                          f"{args.arch}_timeline.json"))
+        print(f"timeline artifact: {path} ({len(timeline.samples)} samples)")
+        if obs.panel:
+            print(timeline.panel(width=obs.spark_width))
 
 
 if __name__ == "__main__":

@@ -35,7 +35,10 @@ admission underneath WFQ, charging ``len(prompt)`` tokens per request
 (the host analogue of the traced bucket's byte-proportional debits);
 bucket-starved grants are counted as deferrals.  Occupancy, grants and
 deferrals land in :meth:`Engine.tenant_report` and, in counter-block
-layout, :meth:`Engine.runtime_counters`.
+layout, :meth:`Engine.runtime_counters`; attach a
+:class:`~repro.core.obs.CounterTimeline` (``Engine(..., obs=...)``) to
+stream that block — plus active-slot / queue-depth gauges — into a
+per-tick timeline artifact and sparkline panels (docs/observability.md).
 
 ``scheduler="gang"`` keeps the legacy behaviour — admit up to
 ``max_batch`` requests, batch-prefill them left-padded, decode the gang
@@ -149,13 +152,20 @@ class WFQScheduler:
 
 class Engine:
     def __init__(self, model, params, cfg: ModelConfig, serve: ServeConfig,
-                 dp=None, eos_id: int = 1):
+                 dp=None, eos_id: int = 1, obs=None, obs_every: int = 1):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.scfg = serve
         self.dp = dp
         self.eos_id = eos_id
+        # optional CounterTimeline (core/obs.py): one snapshot of the
+        # per-tenant counter block + run gauges every ``obs_every``-th
+        # decode tick (ObsConfig.every), taken on the host between jitted
+        # steps — never inside traced code
+        self.obs = obs
+        self.obs_every = max(int(obs_every), 1)
+        self._obs_tick_no = 0
         # cache sharding edges are issued inside the traced prefill, so
         # policy enforcement/telemetry happen once per compiled shape (like
         # every other dataplane edge), not once per host batching round
@@ -244,6 +254,20 @@ class Engine:
                 return admitted, deferred
         # pathological rates (≈0): force progress with the queue head
         return queue[:1], queue[1:]
+
+    def _obs_snapshot(self, *, active: int, queued: int) -> None:
+        """Feed the attached timeline one engine tick: the serve counter
+        block (WFQ grants / tokens / occupancy / deferrals in telemetry
+        column layout) plus slot-level run gauges."""
+        if self.obs is None:
+            return
+        self._obs_tick_no += 1
+        if self._obs_tick_no % self.obs_every:
+            return
+        ctrs, tenants = self.runtime_counters()
+        self.obs.snapshot_block(self._obs_tick_no, ctrs, tenants,
+                                gauges={"active_slots": active,
+                                        "queued": queued})
 
     # ------------------------------------------------------------------
     def _pad_prompts(self, reqs: list[Request]) -> np.ndarray:
@@ -451,6 +475,8 @@ class Engine:
                     slots[i] = None                  # freed mid-decode
                     vecs["active"][i] = False
                     vecs["tenant"][i] = -1
+            self._obs_snapshot(active=int(vecs["active"].sum()),
+                               queued=len(queue))
         return done
 
     # ------------------------------------------------------------------
@@ -496,6 +522,8 @@ class Engine:
                         if arr[j] == self.eos_id or \
                                 len(r.out_tokens) >= limits[j]:
                             active[j] = False
+                self._obs_snapshot(active=int(active.sum()),
+                                   queued=len(queue))
             for r in batch_reqs:
                 self._finish(r, done)
         return done

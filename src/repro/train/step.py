@@ -1,6 +1,7 @@
 """Train-step builders.
 
-Two distribution styles, matching DESIGN.md §4:
+Two distribution styles (docs/architecture.md maps both onto the
+dataplane):
 
 * :func:`make_train_step` — pjit/GSPMD: the step is jitted with
   in/out shardings derived from parallel/sharding.py; all communication

@@ -1,0 +1,265 @@
+"""Per-tenant observability timelines (core/obs.py): snapshot append /
+derived-rate correctness, JSON artifact round-trip, off-toggle
+bit-identity against a traced train step, the counter column-order
+regression, and the serve-engine per-tick feed."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_model_config
+from repro.configs.base import (
+    DataplaneConfig,
+    ObsConfig,
+    RunConfig,
+    ServeConfig,
+    TrainConfig,
+)
+from repro.core import Dataplane
+from repro.core import telemetry as tl
+from repro.core.obs import (
+    RATE_FIELDS,
+    TIMELINE_SCHEMA,
+    CounterTimeline,
+    sparkline,
+    validate_timeline,
+)
+from repro.data import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.serve import Engine, Request
+from repro.train import init_state, make_explicit_dp_step
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# snapshot append + derived rates
+# ---------------------------------------------------------------------------
+
+def test_snapshot_appends_and_unions_tenants():
+    t = CounterTimeline(source="t")
+    t.snapshot(0, {"a": {"ops": 1}}, t=0.0)
+    t.snapshot(1, {"a": {"ops": 2}, "b": {"ops": 5}}, t=1.0)
+    assert len(t.samples) == 2
+    assert t.tenants == ("a", "b")           # first-seen order
+    # a tenant absent from an earlier sample reads as zero there
+    assert t.rates()["b"]["ops_s"] == [5.0]
+
+
+def test_rates_hand_computed():
+    t = CounterTimeline(source="t")
+    t.snapshot(0, {"a": {"ops": 0, "bytes": 0}}, t=0.0)
+    t.snapshot(1, {"a": {"ops": 4, "bytes": 4096, "throttled": 1,
+                         "denied": 2, "stalls": 3, "chunks": 8}}, t=2.0)
+    t.snapshot(2, {"a": {"ops": 8, "bytes": 8192, "throttled": 1,
+                         "denied": 2, "stalls": 3, "chunks": 8}}, t=3.0)
+    r = t.rates()["a"]
+    assert r["ops_s"] == [2.0, 4.0]          # Δops / wall dt
+    assert r["bytes_s"] == [2048.0, 4096.0]
+    assert r["chunks_s"] == [4.0, 0.0]
+    assert r["throttled_pct"] == [25.0, 0.0]  # Δthrottled / Δops
+    assert r["denied_pct"] == [50.0, 0.0]
+    assert r["stalls_pct"] == [75.0, 0.0]
+    axis = t.rate_axis()
+    assert axis["step"] == [1, 2] and axis["t"] == [2.0, 3.0]
+
+
+def test_rates_fall_back_to_step_delta_on_equal_stamps():
+    t = CounterTimeline(source="t")
+    t.snapshot(0, {"a": {"ops": 0}}, t=1.0)
+    t.snapshot(4, {"a": {"ops": 8}}, t=1.0)   # dt == 0 -> steps (4)
+    assert t.rates()["a"]["ops_s"] == [2.0]
+
+
+def test_cq_depth_is_a_level_not_a_rate():
+    t = CounterTimeline(source="t")
+    t.snapshot(0, {"a": {"ops": 0, "cq_depth": 3}}, t=0.0)
+    t.snapshot(1, {"a": {"ops": 1, "cq_depth": 7}}, t=1.0)
+    t.snapshot(2, {"a": {"ops": 2, "cq_depth": 7}}, t=2.0)
+    # the high-water mark is reported at the window close, not differenced
+    assert t.rates()["a"]["cq_depth"] == [7.0, 7.0]
+
+
+def test_gauges_align_to_samples():
+    t = CounterTimeline(source="t")
+    t.snapshot(0, {"a": {"ops": 0}}, t=0.0, gauges={"active_slots": 2})
+    t.snapshot(1, {"a": {"ops": 1}}, t=1.0)
+    assert t.gauge_series() == {"active_slots": [2.0, 0.0]}
+
+
+def test_sparkline_shapes():
+    assert sparkline([], 8) == ""
+    assert sparkline([0, 0, 0], 8) == "▁▁▁"          # flat zero: baseline
+    assert sparkline([5, 5], 8) == "▄▄"              # flat nonzero: mid
+    assert len(sparkline(list(range(100)), 16)) == 16  # downsampled
+    s = sparkline([1, 9], 8)
+    assert s[0] == "▁" and s[-1] == "█"
+
+
+# ---------------------------------------------------------------------------
+# artifact round-trip + validation
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip(tmp_path):
+    t = CounterTimeline(source="rt")
+    t.snapshot(0, {"a": {"ops": 0}}, t=0.0, gauges={"q": 1})
+    t.snapshot(1, {"a": {"ops": 3}, "b": {"bytes": 64}}, t=1.0)
+    path = t.save(str(tmp_path / "x_timeline.json"))
+    doc = CounterTimeline.load(path)
+    assert doc == t.to_doc()
+    assert doc["schema"] == TIMELINE_SCHEMA
+    assert doc["rate_fields"] == list(RATE_FIELDS)
+    assert doc["counters"] == list(tl.COUNTER_NAMES)
+    # the raw file is the same document (no lossy encode/decode)
+    with open(path) as f:
+        assert json.load(f) == doc
+
+
+def test_validate_rejects_malformed():
+    good = CounterTimeline(source="v")
+    good.snapshot(0, {"a": {"ops": 0}}, t=0.0)
+    good.snapshot(1, {"a": {"ops": 1}}, t=1.0)
+    doc = good.to_doc()
+    assert validate_timeline(doc) is doc
+    with pytest.raises(ValueError, match="schema"):
+        validate_timeline({**doc, "schema": "cord-timeline/v999"})
+    with pytest.raises(ValueError, match="missing key"):
+        validate_timeline({k: v for k, v in doc.items() if k != "rates"})
+    bad = json.loads(json.dumps(doc))
+    bad["rates"]["a"]["ops_s"] = []
+    with pytest.raises(ValueError, match="length"):
+        validate_timeline(bad)
+    with pytest.raises(ValueError, match="missing tenant"):
+        validate_timeline({**doc, "tenants": ["ghost"]})
+
+
+# ---------------------------------------------------------------------------
+# counter-block layout regressions
+# ---------------------------------------------------------------------------
+
+def test_snapshot_block_matches_dict_report():
+    ctrs = tl.tenant_counters_init(2)
+    ctrs = tl.tenant_counters_bump(ctrs, 0, ops=2, bytes=128)
+    ctrs = tl.tenant_counters_bump(ctrs, 1, ops=1, throttled=1)
+    a = CounterTimeline(source="blk")
+    a.snapshot_block(0, ctrs, ("x", "y"), t=0.0)
+    b = CounterTimeline(source="blk")
+    b.snapshot(0, tl.tenant_counters_report(ctrs, ("x", "y")), t=0.0)
+    assert a.samples == b.samples
+
+
+def test_tenant_report_column_order_matches_counters_dict():
+    """Regression: the per-tenant report and the flat counters_dict must
+    agree column-for-column with COUNTER_NAMES — a reordered counter
+    constant would silently scramble every timeline."""
+    ctrs = np.arange(2 * tl.NUM_COUNTERS, dtype=np.float32).reshape(
+        2, tl.NUM_COUNTERS)
+    rep = tl.tenant_counters_report(ctrs, ("a", "b"))
+    for i, tenant in enumerate(("a", "b")):
+        assert list(rep[tenant]) == list(tl.COUNTER_NAMES)
+        assert rep[tenant] == tl.counters_dict(ctrs[i])
+    # and the bump row honours the same order
+    row = np.asarray(tl.tenant_counters_bump(
+        tl.tenant_counters_init(1), 0, ops=1, bytes=2, denied=3, chunks=4,
+        throttled=5, stalls=6, credits=7, completions=8))[0]
+    assert tl.counters_dict(row) == {
+        "ops": 1, "bytes": 2, "denied": 3, "chunks": 4, "throttled": 5,
+        "stalls": 6, "credits": 7, "completions": 8, "cq_depth": 0}
+
+
+# ---------------------------------------------------------------------------
+# off-toggle bit-identity on a traced train step
+# ---------------------------------------------------------------------------
+
+def _train(mesh8, *, accounting: bool, timeline: CounterTimeline | None,
+           steps: int = 3):
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    run = RunConfig(train=TrainConfig(steps=steps, learning_rate=1e-3),
+                    obs=ObsConfig(timeline=timeline is not None))
+    dp = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh8)
+    step = make_explicit_dp_step(model, run, dp, axis="data",
+                                 runtime_accounting=accounting)
+    state = init_state(model, RNG)
+    rt = dp.runtime_init() if accounting else None
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                global_batch=8))
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        if accounting:
+            state, m, rt = step(state, b, rt)
+            if timeline is not None:
+                # host-side read strictly BETWEEN steps
+                timeline.snapshot(i + 1, dp.runtime_report(rt))
+        else:
+            state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    return state, losses, rt
+
+
+def test_timeline_off_is_bit_identical_to_seed_step(mesh8):
+    """The acceptance bar: with the obs toggle off the traced train step
+    is the pre-obs program, and with it on, snapshots (device reads
+    between steps) leave params/losses bit-identical — observability is
+    provably free."""
+    base_state, base_losses, _ = _train(mesh8, accounting=False,
+                                        timeline=None)
+    timeline = CounterTimeline(source="test")
+    obs_state, obs_losses, rt = _train(mesh8, accounting=True,
+                                       timeline=timeline)
+    assert base_losses == obs_losses
+    for a, b in zip(jax.tree.leaves(base_state.params),
+                    jax.tree.leaves(obs_state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the timeline actually observed the gradient sync
+    assert len(timeline.samples) == 3
+    ops = timeline.rates()["default"]["ops_s"]
+    assert len(ops) == 2 and all(v > 0 for v in ops)
+    validate_timeline(timeline.to_doc())
+
+
+# ---------------------------------------------------------------------------
+# serve-engine per-tick feed
+# ---------------------------------------------------------------------------
+
+def test_engine_timeline_ticks_and_identity(tmp_path):
+    """An attached timeline snapshots every decode tick (counter block +
+    slot gauges) without perturbing outputs, and saves a valid artifact."""
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    sc = ServeConfig(max_batch=2, max_new_tokens=5, kv_cache_len=64)
+
+    def reqs():
+        return [Request(rid=i, prompt=np.asarray((np.arange(8) + 3 * i) % 100,
+                                                 np.int32),
+                        max_new_tokens=5) for i in range(4)]
+
+    timeline = CounterTimeline(source="test-serve")
+    plain = Engine(model, params, cfg, sc, eos_id=-1)
+    observed = Engine(model, params, cfg, sc, eos_id=-1, obs=timeline)
+    out_p = {r.rid: r.out_tokens for r in plain.run(reqs())}
+    out_o = {r.rid: r.out_tokens for r in observed.run(reqs())}
+    assert out_p == out_o, "attaching obs must not change served tokens"
+    assert timeline.samples, "no engine ticks captured"
+    g = timeline.gauge_series()
+    assert set(g) == {"active_slots", "queued"}
+    assert max(g["active_slots"]) > 0
+    doc = CounterTimeline.load(
+        timeline.save(str(tmp_path / "serve_timeline.json")))
+    # served tokens land in the bytes column of the final sample
+    last = doc["samples"][-1]["tenants"]["default"]
+    assert last["bytes"] == sum(len(o) for o in out_o.values())
+
+    # ObsConfig.every strides the engine ticks: every=3 keeps every
+    # third snapshot (same run → a third of the samples, same identity)
+    strided = CounterTimeline(source="test-serve-every")
+    eng3 = Engine(model, params, cfg, sc, eos_id=-1, obs=strided,
+                  obs_every=3)
+    out_3 = {r.rid: r.out_tokens for r in eng3.run(reqs())}
+    assert out_3 == out_p
+    assert len(strided.samples) == len(timeline.samples) // 3

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Docs checks, run by the CI ``docs`` job:
+
+1. every intra-repo markdown link in README.md / ROADMAP.md / docs/*.md
+   resolves to an existing file (http/mailto/anchor links are skipped,
+   fenced code blocks and inline code spans are ignored);
+2. every fenced ```python block in docs/*.md that contains doctest
+   prompts (``>>>``) runs clean under doctest — blocks within one file
+   share a namespace, so examples can build on each other.
+
+    python tools/check_docs.py          # exits nonzero on any failure
+"""
+
+from __future__ import annotations
+
+import doctest
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def _md_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def _strip_code(text: str) -> str:
+    """Remove fenced blocks and inline code spans so bracket/paren
+    patterns inside code never read as markdown links."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def check_links(files) -> list[str]:
+    errors = []
+    for md in files:
+        for target in LINK_RE.findall(_strip_code(md.read_text())):
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).resolve().exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link -> "
+                              f"{target}")
+    return errors
+
+
+def run_doctests(files) -> tuple[list[str], int]:
+    errors, n_examples = [], 0
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(verbose=False,
+                                   optionflags=doctest.ELLIPSIS)
+    for md in files:
+        blocks = [b for b in FENCE_RE.findall(md.read_text()) if ">>>" in b]
+        if not blocks:
+            continue
+        # one shared namespace per file: later blocks may use earlier names
+        test = parser.get_doctest("\n".join(blocks), {},
+                                  str(md.relative_to(ROOT)), str(md), 0)
+        n_examples += len(test.examples)
+        out: list[str] = []
+        result = runner.run(test, out=out.append)
+        if result.failed:
+            errors.append(f"{md.relative_to(ROOT)}: {result.failed} doctest "
+                          f"failure(s)\n" + "".join(out))
+    return errors, n_examples
+
+
+def main() -> int:
+    files = _md_files()
+    link_errors = check_links(files)
+    doc_errors, n_examples = run_doctests(
+        [f for f in files if f.parent.name == "docs"])
+    for e in link_errors + doc_errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    n_links = sum(len(LINK_RE.findall(_strip_code(f.read_text())))
+                  for f in files)
+    print(f"checked {len(files)} markdown files: {n_links} links, "
+          f"{n_examples} doctest examples; "
+          f"{len(link_errors) + len(doc_errors)} failure(s)")
+    return 1 if link_errors or doc_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
