@@ -231,6 +231,52 @@ def build_windowed(mesh, dp_client: Dataplane, dp_server: Dataplane,
     return jax.jit(shard), cfg
 
 
+def build_migratable(mesh, dp: Dataplane, msg_bytes: int, window: int,
+                     transport="RC", credits: int = 0):
+    """Jitted pieces of a *migratable* windowed connection on ``mesh``:
+    ``init(rt)`` creates the QP (granting ``credits`` receiver credits),
+    ``xfer(msgs, qp, rt)`` moves one batch through ``windowed_send``, and
+    ``quiesce(qp, rt)`` drains it to a migratable snapshot.  The QP
+    pytree is threaded through every shard_map boundary with
+    ``verbs.qp_specs``, so between calls it can be stop-and-copied
+    (``verbs.qp_snapshot``) and restored onto another mesh
+    (``verbs.qp_restore``) — the live-migration flow the elastic smoke
+    and tests/test_elastic_trigger.py drive (docs/elasticity.md)."""
+    cfg = verbs.QPConfig(transport=transport, msg_bytes=msg_bytes,
+                         depth=max(window, 2), max_outstanding=window)
+    qspec = verbs.qp_specs("rank")
+
+    def init_body(rt):
+        rank = jax.lax.axis_index("rank")
+        qp = verbs.qp_init(cfg)
+        if credits:
+            qp, rt = verbs.post_recv(dp, cfg, qp, rank, dst=1, n=credits,
+                                     state=rt)
+        return qp, verbs.allreduce_state(rt)
+
+    def xfer_body(msgs, qp, rt):
+        rank = jax.lax.axis_index("rank")
+        out, qp, rt = verbs.windowed_send(dp, cfg, qp, msgs[0], rank,
+                                          src=0, dst=1, state=rt)
+        return out[None], qp, verbs.allreduce_state(rt)
+
+    def quiesce_body(qp, rt):
+        rank = jax.lax.axis_index("rank")
+        qp, rt = verbs.qp_quiesce(dp, cfg, qp, rank, src=0, state=rt)
+        return qp, verbs.allreduce_state(rt)
+
+    init = jax.jit(compat.shard_map(init_body, mesh=mesh, in_specs=(P(),),
+                                    out_specs=(qspec, P())))
+    xfer = jax.jit(compat.shard_map(
+        xfer_body, mesh=mesh,
+        in_specs=(P("rank", None, None), qspec, P()),
+        out_specs=(P("rank", None, None), qspec, P())))
+    quiesce = jax.jit(compat.shard_map(quiesce_body, mesh=mesh,
+                                       in_specs=(qspec, P()),
+                                       out_specs=(qspec, P())))
+    return {"init": init, "xfer": xfer, "quiesce": quiesce, "cfg": cfg}
+
+
 def windowed_throughput(mesh, dp_c, dp_s, msg_bytes, *, window, n_msgs=32,
                         transport="RC", op="send", credits=None):
     """Returns (GBit/s, msgs/s, stats) for one CQ-runtime transfer."""

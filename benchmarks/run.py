@@ -31,6 +31,18 @@ from benchmarks._bootstrap import ensure_host_devices
 ensure_host_devices(8, module="benchmarks.run")
 
 
+def accumulate_report(totals: dict, report: dict) -> dict:
+    """Fold one per-tenant counter report into host-side cumulative
+    totals — additive columns sum, the ``cq_depth`` high-water mark takes
+    the max.  Used wherever the dry-run smokes rebuild a cumulative
+    timeline from repeated fresh-state transfers."""
+    for tenant, ctrs in report.items():
+        acc = totals.setdefault(tenant, dict.fromkeys(ctrs, 0.0))
+        for k, v in ctrs.items():
+            acc[k] = max(acc[k], v) if k == "cq_depth" else acc[k] + v
+    return totals
+
+
 def dry_run() -> None:
     """CI smoke: build the measured paths and execute a minimal slice of
     each — perftest ping-pong over the verbs layer, one NPB kernel in
@@ -67,10 +79,7 @@ def dry_run() -> None:
     timeline = CounterTimeline(source="bench-dryrun")
     for i in range(1, 5):
         _, _, rt = jax.block_until_ready(fn(msgs, rt0))
-        for tenant, ctrs in dp.runtime_report(rt).items():
-            acc = totals.setdefault(tenant, dict.fromkeys(ctrs, 0.0))
-            for k, v in ctrs.items():
-                acc[k] = max(acc[k], v) if k == "cq_depth" else acc[k] + v
+        accumulate_report(totals, dp.runtime_report(rt))
         timeline.snapshot(i, {t: dict(a) for t, a in totals.items()})
     path = timeline.save("runs/dryrun_timeline.json")
     doc = CounterTimeline.load(path)             # schema validation
@@ -85,9 +94,111 @@ def dry_run() -> None:
                       "samples": len(doc["samples"]),
                       "ops_s_last": round(rates["ops_s"][-1], 1)}))
 
+    elastic_smoke()
+
     for row in npb.run_all(benches=("EP",), modes=("bypass", "cord")):
         print(json.dumps(row))
     print("dry-run ok")
+
+
+def elastic_smoke() -> None:
+    """PR-5 acceptance smoke (docs/elasticity.md): a sustained ``denied``
+    rate trips the ThresholdWatcher exactly once (hysteresis + cooldown
+    hold), a windowed transfer in flight at trigger time survives a live
+    QP migration onto a *different* 2-rank mesh bit-identically, and the
+    saved v2 timeline artifact validates with the remesh event
+    recorded."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks import perftest
+    from repro.configs.base import DataplaneConfig
+    from repro.core import compat, verbs
+    from repro.core.dataplane import Dataplane
+    from repro.core.obs import CounterTimeline, ThresholdWatcher
+    from repro.core.policies import QuotaPolicy, TelemetryPolicy
+
+    n_msgs, msg_bytes, window = 8, 1024, 4
+    mesh_a = perftest.make_mesh2()
+    mesh_b = compat.make_mesh((2,), ("rank",), devices=jax.devices()[2:4])
+
+    def dp_on(mesh):
+        # observe-only quota: each round's runtime bytes blow a 2 KiB
+        # budget, so the denied counter climbs every round — the
+        # sustained trigger signal
+        return Dataplane(
+            DataplaneConfig(mode="cord", emulate_costs=True), mesh=mesh,
+            policies=[TelemetryPolicy(),
+                      QuotaPolicy(hard=False, limits={"default": 2048})])
+
+    dp_a, dp_b = dp_on(mesh_a), dp_on(mesh_b)
+    payload = np.arange(n_msgs * msg_bytes, dtype=np.uint8) \
+        .reshape(n_msgs, msg_bytes)
+    msgs = jnp.asarray(np.stack([payload, np.zeros_like(payload)]))
+    conn_a = perftest.build_migratable(mesh_a, dp_a, msg_bytes, window,
+                                       credits=n_msgs)
+    conn_b = perftest.build_migratable(mesh_b, dp_b, msg_bytes, window)
+
+    # --- watched run: repeated transfers, denied% sustained over the
+    # threshold in EVERY window; hysteresis must fire exactly once ------
+    timeline = CounterTimeline(source="bench-elastic")
+    watcher = ThresholdWatcher({"denied_pct": 40.0}, sustain=2, cooldown=16)
+    totals: dict[str, dict[str, float]] = {}
+    for i in range(1, 7):
+        qp, _ = conn_a["init"](dp_a.runtime_init())
+        _, _, rt = jax.block_until_ready(
+            conn_a["xfer"](msgs, qp, dp_a.runtime_init()))
+        accumulate_report(totals, dp_a.runtime_report(rt))
+        timeline.snapshot(i, {t: dict(a) for t, a in totals.items()},
+                          gauges=watcher.gauges())
+        for ev in watcher.observe(timeline):
+            timeline.record_event(ev["kind"], ev["step"],
+                                  tenant=ev["tenant"], t=ev["t"],
+                                  detail=ev["detail"])
+    assert len(watcher.triggers) == 1, \
+        f"hysteresis broke: {len(watcher.triggers)} triggers, expected 1"
+    trigger_step = watcher.triggers[0]["step"]
+    assert trigger_step == 1 + watcher.sustain, watcher.triggers
+
+    # --- the response: live QP migration of an in-flight transfer ------
+    # baseline: one uninterrupted transfer on mesh A
+    qp, _ = conn_a["init"](dp_a.runtime_init())
+    full_out, qp_full, _ = jax.block_until_ready(
+        conn_a["xfer"](msgs, qp, dp_a.runtime_init()))
+    # migrated: half on mesh A, quiesce → stop-and-copy → restore on
+    # mesh B, the rest there — outstanding credits ride along
+    k = n_msgs // 2
+    qp, _ = conn_a["init"](dp_a.runtime_init())
+    out1, qp, _ = conn_a["xfer"](msgs[:, :k], qp, dp_a.runtime_init())
+    qp, _ = conn_a["quiesce"](qp, dp_a.runtime_init())
+    snap = verbs.qp_snapshot(qp)
+    assert int(snap["cq_head"] - snap["cq_tail"]) == 0, "CQ not quiesced"
+    assert int(snap["credits"]) == n_msgs - k, "credits lost in migration"
+    qp_b = verbs.qp_restore(snap, mesh_b)
+    out2, qp_b, _ = jax.block_until_ready(
+        conn_b["xfer"](msgs[:, k:], qp_b, dp_b.runtime_init()))
+    moved = np.concatenate([np.asarray(out1)[1], np.asarray(out2)[1]])
+    np.testing.assert_array_equal(moved, np.asarray(full_out)[1])
+    snap_b, snap_f = verbs.qp_snapshot(qp_b), verbs.qp_snapshot(qp_full)
+    for key in ("sq_head", "cq_sent", "credits", "rx_owed"):
+        assert int(snap_b[key]) == int(snap_f[key]), \
+            f"{key} diverged across the migration"
+    timeline.record_event(
+        "remesh", trigger_step, tenant="default",
+        detail={"from": "mesh_a", "to": "mesh_b", "migrated_msgs": k})
+
+    # --- the artifact records the whole loop ---------------------------
+    path = timeline.save("runs/elastic_timeline.json")
+    doc = CounterTimeline.load(path)              # schema validation (v2)
+    kinds = [e["kind"] for e in doc["events"]]
+    assert kinds.count("trigger") == 1 and kinds.count("remesh") == 1, kinds
+    print(json.dumps({"table": "dryrun", "elastic_timeline": path,
+                      "trigger_step": trigger_step,
+                      "migrated_bit_identical": True,
+                      "events": kinds}))
 
 
 def main() -> None:

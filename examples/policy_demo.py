@@ -1,12 +1,19 @@
-"""CoRD policies in action: telemetry, quotas, memory-region security and
-runtime QoS throttling enforced on a live dataplane — the OS-level control
-the paper regains — plus a two-tenant observability timeline of the
-throttled run (docs/observability.md walks through this output).
+"""CoRD policies in action, in three acts (docs/elasticity.md walks
+through the third):
+
+1. telemetry, quotas and memory-region security enforced on a live
+   dataplane — the OS-level control the paper regains;
+2. runtime QoS throttling of a noisy tenant, observed through a
+   two-tenant timeline (docs/observability.md walks through the output);
+3. the elastic response: a ThresholdWatcher trips on the noisy tenant's
+   sustained throttle rate and the run remeshes it onto a shrunken
+   2-device mesh slice, after which the victim's throughput recovers.
 
     PYTHONPATH=src python examples/policy_demo.py
 """
 
 import os
+import time
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
@@ -17,13 +24,20 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import DataplaneConfig
-from repro.core import CounterTimeline, Dataplane, PolicyViolation, compat
+from repro.core import (
+    CounterTimeline,
+    Dataplane,
+    PolicyViolation,
+    ThresholdWatcher,
+    compat,
+)
 from repro.core.policies import (
     QoSPolicy,
     QuotaPolicy,
     SecurityPolicy,
     TelemetryPolicy,
 )
+from repro.runtime import shrink_mesh
 
 
 def main():
@@ -76,11 +90,14 @@ def main():
     # runtime QoS: the mediation pipeline's token bucket throttles the
     # "noisy" tenant's op rate inside traced code — per-tenant counters
     # come back in the runtime state.
+    # stall_ns is the emulated cost a throttled op pays IN the traced
+    # program — large enough here that noisy's stalls visibly tax any
+    # tenant sharing a program with it (the act-3 remesh undoes that)
     dp3 = Dataplane(
         DataplaneConfig(mode="cord"), mesh=mesh,
         tenant="victim", tenants=("victim", "noisy"),
         policies=[TelemetryPolicy(),
-                  QoSPolicy(rates={"noisy": 0.25}, burst=2.0, stall_ns=5e4)])
+                  QoSPolicy(rates={"noisy": 0.25}, burst=2.0, stall_ns=5e6)])
 
     @partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
              out_specs=(P("data"), P()))
@@ -109,6 +126,81 @@ def main():
         print(f"  {tenant:8s} {ctrs}")
     print("\ntwo-tenant timeline (6 burst rounds, noisy throttled):")
     print(timeline.panel(width=24))
+
+    # Act 3 — the elastic response (docs/elasticity.md): a watcher trips
+    # on noisy's sustained throttle rate, and the remesh moves noisy onto
+    # a shrunken 2-device slice while victim keeps the full mesh.  The
+    # victim's throughput recovers because its burst program no longer
+    # carries noisy's serial token-bucket stalls inline.
+    watcher = ThresholdWatcher({"throttled_pct": 90.0}, sustain=3,
+                               cooldown=8, tenants=("noisy",))
+    for ev in watcher.observe(timeline):
+        timeline.record_event(ev["kind"], ev["step"], tenant=ev["tenant"],
+                              t=ev["t"], detail=ev["detail"])
+    small = shrink_mesh(mesh, factor=4)          # 8 devices -> 2-device slice
+    timeline.record_event("remesh", step=6, tenant="noisy",
+                          detail={"devices_before": mesh.devices.size,
+                                  "devices_after": small.devices.size})
+    dp_victim = Dataplane(DataplaneConfig(mode="cord"), mesh=mesh,
+                          tenant="victim", policies=[TelemetryPolicy()])
+    dp_noisy = Dataplane(
+        DataplaneConfig(mode="cord"), mesh=small, tenant="noisy",
+        policies=[TelemetryPolicy(),
+                  QoSPolicy(rates={"noisy": 0.25}, burst=2.0, stall_ns=5e6)])
+
+    def burst_on(dp, tenant, n_mesh):
+        @partial(compat.shard_map, mesh=n_mesh, in_specs=(P("data"), P()),
+                 out_specs=(P("data"), P()))
+        def one_tenant(g, rt):
+            def one(carry, _):
+                g, rt = carry
+                v, rt = dp.psum(g.sum(), "data", tag=f"{tenant}/op",
+                                state=rt, tenant=tenant)
+                return (g + 0 * v, rt), None
+            (g, rt), _ = jax.lax.scan(one, (g, rt), None, length=16)
+            return g, rt
+        return jax.jit(one_tenant)
+
+    vj = burst_on(dp_victim, "victim", mesh)
+    nj = burst_on(dp_noisy, "noisy", small)
+    rtv, rtn = dp_victim.runtime_init(), dp_noisy.runtime_init()
+    base = dp3.runtime_report(rt)       # act-2 totals stay cumulative
+    small_grads = jnp.ones((128,))
+    v_wall = v_ops = 0
+    for round_ in range(7, 11):
+        t0 = time.perf_counter()
+        _, rtv = jax.block_until_ready(vj(grads, rtv))
+        if round_ > 7:                  # round 7 is the compile
+            v_wall += time.perf_counter() - t0
+            v_ops += 16
+        _, rtn = jax.block_until_ready(nj(small_grads, rtn))
+        rep_v = dp_victim.runtime_report(rtv)["victim"]
+        rep_n = dp_noisy.runtime_report(rtn)["noisy"]
+        timeline.snapshot(
+            round_,
+            {"victim": {k: base["victim"][k] + rep_v[k] for k in rep_v},
+             "noisy": {k: base["noisy"][k] + rep_n[k] for k in rep_n}},
+            gauges=watcher.gauges())
+        # keep watching: post-remesh windows tick the cooldown down, and
+        # a still-misbehaving tenant can re-trigger once it expires
+        for ev in watcher.observe(timeline):
+            timeline.record_event(ev["kind"], ev["step"],
+                                  tenant=ev["tenant"], t=ev["t"],
+                                  detail=ev["detail"])
+
+    print("\ntimeline events (watcher trigger -> remesh):")
+    for ev in timeline.events:
+        print(f"  round {ev['step']} {ev['kind']:8s} "
+              f"{ev['tenant']}: {ev['detail']}")
+    print("\nthree-act timeline (rounds 7-10 after noisy's remesh):")
+    print(timeline.panel(width=24))
+    # pre-remesh the victim's ops are embedded in the shared program
+    # (its wall clock includes noisy's stalls); post-remesh we time the
+    # victim's burst alone — the wall it actually experiences
+    pre = timeline.rates()["victim"]["ops_s"][1:5]       # windows 2-5
+    print(f"victim ops_s: pre-remesh {sum(pre) / len(pre):.0f} "
+          f"(sharing a program with throttled noisy) -> "
+          f"post-remesh {v_ops / v_wall:.0f} (alone on the full mesh)")
 
 
 if __name__ == "__main__":

@@ -283,6 +283,29 @@ class ObsConfig:
 
 
 @dataclass(frozen=True)
+class ElasticConfig:
+    """Observability-triggered elastic remesh — the closed control loop
+    (docs/elasticity.md): a ThresholdWatcher (core/obs.py) over the
+    timeline's rate series drives runtime/elastic.py remesh, with live
+    QP migration for in-flight verbs connections (core/verbs.py).
+
+    ``thresholds`` are CLI-friendly ``"rate_field=level"`` strings over
+    the derived rate series (``obs.RATE_FIELDS``)."""
+    enabled: bool = False
+    thresholds: tuple[str, ...] = ("denied_pct=50",)
+    sustain: int = 3              # consecutive over-threshold windows to trip
+    cooldown: int = 8             # windows a tripped tenant cannot re-trip
+    shrink_factor: int = 2        # device shrink per remesh (largest axis)
+    min_devices: int = 2          # never shrink below this many devices
+    max_remesh: int = 1           # remeshes per run (0 = unlimited)
+    tenants: tuple[str, ...] = ()  # watched tenants; empty = all
+    # Observe-only byte budget wired by ``launch/train.py --elastic``: a
+    # QuotaPolicy(hard=False) marks runtime traffic over this budget in
+    # the tenant's `denied` counter — the default trigger signal.
+    meter_quota_bytes: int = 0    # 0 = no metering policy added
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig = field(default_factory=ModelConfig)
     shape: ShapeConfig = SHAPES["train_4k"]
@@ -291,6 +314,7 @@ class RunConfig:
     train: TrainConfig = field(default_factory=TrainConfig)
     serve: ServeConfig = field(default_factory=ServeConfig)
     obs: ObsConfig = field(default_factory=ObsConfig)
+    elastic: ElasticConfig = field(default_factory=ElasticConfig)
 
 
 # ---------------------------------------------------------------------------

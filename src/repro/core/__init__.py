@@ -24,6 +24,7 @@ from repro.core.mediation import (
 from repro.core.mr import MemoryRegion, MRError, MRRegistry
 from repro.core.obs import (
     CounterTimeline,
+    ThresholdWatcher,
     sparkline,
     TIMELINE_SCHEMA,
     validate_timeline,
@@ -44,7 +45,8 @@ __all__ = [
     "MediationPipeline", "MediationStage", "build_pipeline",
     "HostTokenBucket",
     "MemoryRegion", "MRError", "MRRegistry",
-    "CounterTimeline", "sparkline", "TIMELINE_SCHEMA", "validate_timeline",
+    "CounterTimeline", "ThresholdWatcher", "sparkline", "TIMELINE_SCHEMA",
+    "validate_timeline",
     "Policy", "PolicyContext", "PolicyViolation",
     "QoSPolicy", "QuotaPolicy", "SecurityPolicy", "TelemetryPolicy",
     "OpRecord", "Telemetry",

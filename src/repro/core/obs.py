@@ -23,6 +23,16 @@ host-side time series:
   artifact (``runs/<name>_timeline.json``, see docs/observability.md for
   the schema) and :meth:`CounterTimeline.panel` renders per-tenant ASCII
   sparkline panels for the console.
+* :meth:`CounterTimeline.record_event` appends control-plane *events*
+  (watcher triggers, elastic remeshes) to the artifact's ``events`` list
+  (schema v2; v1 artifacts without events still load), and the optional
+  ``sink=`` path streams every snapshot/event to a JSONL file as the run
+  progresses, so long runs are not in-memory-only.
+* :class:`ThresholdWatcher` is the trigger half of the elastic control
+  loop (docs/elasticity.md): it watches the per-window rate series
+  against thresholds with hysteresis (sustained-for-N-windows, cooldown)
+  and emits trigger events that ``runtime/elastic.py`` turns into a
+  remesh.
 
 Everything here is host-side Python + numpy: no jax tracing, no device
 allocation.  Counter *names* come from core/telemetry.py so the timeline
@@ -35,14 +45,18 @@ import json
 import math
 import os
 import time
+from typing import Sequence
 
 import numpy as np
 
 from repro.core import telemetry as tl
 
 # Artifact schema identifier.  Bump the version when the document layout
-# changes; validate_timeline() refuses unknown schemas.
-TIMELINE_SCHEMA = "cord-timeline/v1"
+# changes; validate_timeline() refuses unknown schemas but accepts every
+# version listed in TIMELINE_SCHEMAS (v1 = v2 without the events list).
+TIMELINE_SCHEMA_V1 = "cord-timeline/v1"
+TIMELINE_SCHEMA = "cord-timeline/v2"
+TIMELINE_SCHEMAS = (TIMELINE_SCHEMA_V1, TIMELINE_SCHEMA)
 
 # Derived per-window rate series (docs/observability.md for semantics).
 RATE_FIELDS = ("ops_s", "bytes_s", "chunks_s", "throttled_pct",
@@ -86,12 +100,16 @@ class CounterTimeline:
     the hot path."""
 
     def __init__(self, source: str = "run",
-                 counter_names: tuple[str, ...] = tl.COUNTER_NAMES):
+                 counter_names: tuple[str, ...] = tl.COUNTER_NAMES,
+                 sink: str | None = None):
         self.source = source
         self.counter_names = tuple(counter_names)
         self.samples: list[dict] = []
+        self.events: list[dict] = []
         self._tenants: list[str] = []      # first-seen order
         self._gauge_names: list[str] = []
+        self._sink_path = sink
+        self._sink = None
 
     # ------------------------------------------------------------------
     # ingest
@@ -115,12 +133,14 @@ class CounterTimeline:
         for k in g:
             if k not in self._gauge_names:
                 self._gauge_names.append(k)
-        self.samples.append({
+        sample = {
             "step": int(step),
             "t": float(t if t is not None else time.perf_counter()),
             "tenants": tenants,
             "gauges": g,
-        })
+        }
+        self.samples.append(sample)
+        self._sink_write({"sample": sample})
 
     def snapshot_block(self, step: int, ctrs, tenants: tuple[str, ...], *,
                        gauges: dict | None = None, t: float | None = None
@@ -129,6 +149,80 @@ class CounterTimeline:
         telemetry column order (``tenant_counters_init`` layout)."""
         self.snapshot(step, tl.tenant_counters_report(ctrs, tenants),
                       gauges=gauges, t=t)
+
+    def record_event(self, kind: str, step: int, *, tenant: str | None = None,
+                     t: float | None = None, detail: dict | None = None
+                     ) -> dict:
+        """Append a control-plane event (watcher ``trigger``, elastic
+        ``remesh``, ...) to the artifact's ``events`` list (schema v2) and
+        the JSONL sink.  Events carry their own step/time stamps — they
+        happen *between* snapshots, not on the sample axis."""
+        ev = {"kind": str(kind), "step": int(step),
+              "t": float(t if t is not None else time.perf_counter()),
+              "tenant": tenant, "detail": dict(detail or {})}
+        self.events.append(ev)
+        self._sink_write({"event": ev})
+        return ev
+
+    # ------------------------------------------------------------------
+    # streaming JSONL sink
+    # ------------------------------------------------------------------
+    def _sink_write(self, obj: dict) -> None:
+        if self._sink_path is None:
+            return
+        if self._sink is None:
+            d = os.path.dirname(self._sink_path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._sink = open(self._sink_path, "a")
+            # one header line per run's stream: re-running with the same
+            # sink path appends a NEW stream after the old one, and
+            # read_jsonl treats each header as a stream restart — two
+            # runs never merge into one timeline with bogus cross-run
+            # windows (docs/observability.md)
+            self._sink.write(json.dumps(
+                {"schema": TIMELINE_SCHEMA, "source": self.source,
+                 "counters": list(self.counter_names)}) + "\n")
+        self._sink.write(json.dumps(obj) + "\n")
+        self._sink.flush()
+
+    def close(self) -> None:
+        """Flush and close the JSONL sink (no-op without one)."""
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None
+
+    @classmethod
+    def read_jsonl(cls, path: str) -> "CounterTimeline":
+        """Rebuild a timeline from a streamed JSONL sink file.  The line
+        format is: a header line ``{"schema", "source", "counters"}``,
+        then one ``{"sample": {...}}`` or ``{"event": {...}}`` object per
+        line.  A file holding several appended streams (the same sink
+        path reused across runs) yields the LATEST stream — each header
+        line is a stream restart, never a merge."""
+        tl_ = None
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                obj = json.loads(line)
+                if "schema" in obj:
+                    if obj["schema"] not in TIMELINE_SCHEMAS:
+                        raise ValueError(
+                            f"unknown timeline sink schema {obj['schema']!r}")
+                    tl_ = cls(source=obj.get("source", "run"),
+                              counter_names=tuple(obj["counters"]))
+                    continue
+                if tl_ is None:
+                    tl_ = cls()          # headerless stream
+                if "sample" in obj:
+                    s = obj["sample"]
+                    tl_.snapshot(s["step"], s["tenants"],
+                                 gauges=s.get("gauges"), t=s["t"])
+                elif "event" in obj:
+                    tl_.events.append(obj["event"])
+        return tl_ if tl_ is not None else cls()
 
     # ------------------------------------------------------------------
     # derived series
@@ -146,6 +240,46 @@ class CounterTimeline:
         return {"step": [s["step"] for s in self.samples[1:]],
                 "t": [s["t"] for s in self.samples[1:]]}
 
+    def _window(self, prev: dict, cur: dict) -> dict[str, dict[str, float]]:
+        """Derived rates for ONE window between two samples, for every
+        tenant seen so far: ``{tenant: {field: value}}``."""
+        dt = cur["t"] - prev["t"]
+        if dt <= 0:
+            dt = float(max(cur["step"] - prev["step"], 1))
+        out: dict[str, dict[str, float]] = {}
+        for tn in self._tenants:
+            d = {c: max(self._value(cur, tn, c)
+                        - self._value(prev, tn, c), 0.0)
+                 for c in self.counter_names}
+            ops = d.get("ops", 0.0)
+            pct = (lambda n: 100.0 * n / ops if ops > 0 else 0.0)
+            out[tn] = {
+                "ops_s": ops / dt,
+                "bytes_s": d.get("bytes", 0.0) / dt,
+                "chunks_s": d.get("chunks", 0.0) / dt,
+                "throttled_pct": pct(d.get("throttled", 0.0)),
+                "stalls_pct": pct(d.get("stalls", 0.0)),
+                "denied_pct": pct(d.get("denied", 0.0)),
+                # cq_depth is a high-water mark, not additive: report the
+                # level at the window's close.
+                "cq_depth": self._value(cur, tn, "cq_depth"),
+            }
+        return out
+
+    def window_rates(self, i: int = -1) -> dict[str, dict[str, float]]:
+        """Rates for the single window closing at ``samples[i]``
+        (``i >= 1`` or negative; the newest window by default) — what a
+        :class:`ThresholdWatcher` consumes incrementally.  Returns ``{}``
+        while fewer than two samples exist."""
+        n = len(self.samples)
+        if n < 2:
+            return {}
+        if i < 0:
+            i += n
+        if not 1 <= i < n:
+            raise IndexError(f"window index {i} outside [1, {n - 1}]")
+        return self._window(self.samples[i - 1], self.samples[i])
+
     def rates(self) -> dict[str, dict[str, list[float]]]:
         """Per-tenant derived series, one value per window between
         consecutive samples: ``{tenant: {field: [v, ...]}}``.
@@ -156,25 +290,10 @@ class CounterTimeline:
         out: dict[str, dict[str, list[float]]] = {
             tn: {f: [] for f in RATE_FIELDS} for tn in self._tenants}
         for prev, cur in zip(self.samples, self.samples[1:]):
-            dt = cur["t"] - prev["t"]
-            if dt <= 0:
-                dt = float(max(cur["step"] - prev["step"], 1))
+            w = self._window(prev, cur)
             for tn in self._tenants:
-                d = {c: max(self._value(cur, tn, c)
-                            - self._value(prev, tn, c), 0.0)
-                     for c in self.counter_names}
-                ops = d.get("ops", 0.0)
-                pct = (lambda n: 100.0 * n / ops if ops > 0 else 0.0)
-                r = out[tn]
-                r["ops_s"].append(ops / dt)
-                r["bytes_s"].append(d.get("bytes", 0.0) / dt)
-                r["chunks_s"].append(d.get("chunks", 0.0) / dt)
-                r["throttled_pct"].append(pct(d.get("throttled", 0.0)))
-                r["stalls_pct"].append(pct(d.get("stalls", 0.0)))
-                r["denied_pct"].append(pct(d.get("denied", 0.0)))
-                # cq_depth is a high-water mark, not additive: report the
-                # level at the window's close.
-                r["cq_depth"].append(self._value(cur, tn, "cq_depth"))
+                for f in RATE_FIELDS:
+                    out[tn][f].append(w[tn][f])
         return out
 
     def gauge_series(self) -> dict[str, list[float]]:
@@ -193,6 +312,7 @@ class CounterTimeline:
             "rate_fields": list(RATE_FIELDS),
             "tenants": list(self._tenants),
             "samples": self.samples,
+            "events": list(self.events),
             "axis": self.rate_axis(),
             "rates": self.rates(),
             "gauges": self.gauge_series(),
@@ -250,19 +370,29 @@ def validate_timeline(doc: dict) -> dict:
     """Structural check of a timeline artifact; raises ValueError on a
     malformed document, returns it unchanged otherwise (so call sites can
     chain).  This is the CI smoke's assertion and the forward-compat
-    gate: unknown schema versions are refused, not misread."""
+    gate: every known schema version is checked against its own layout
+    (v1 = v2 without the ``events`` list), unknown versions are refused,
+    not misread, and every series is length-checked against the sample
+    axis — a truncated ``rates``/``gauges``/``axis`` series is rejected
+    even on a v1 document."""
     if not isinstance(doc, dict):
         raise ValueError(f"timeline artifact must be a dict, got {type(doc)}")
-    if doc.get("schema") != TIMELINE_SCHEMA:
-        raise ValueError(f"unknown timeline schema {doc.get('schema')!r} "
-                         f"(expected {TIMELINE_SCHEMA!r})")
-    for key in ("source", "counters", "rate_fields", "tenants", "samples",
-                "axis", "rates", "gauges"):
+    schema = doc.get("schema")
+    if schema not in TIMELINE_SCHEMAS:
+        raise ValueError(f"unknown timeline schema {schema!r} "
+                         f"(expected one of {TIMELINE_SCHEMAS})")
+    required = ["source", "counters", "rate_fields", "tenants", "samples",
+                "axis", "rates", "gauges"]
+    if schema == TIMELINE_SCHEMA:
+        required.append("events")
+    for key in required:
         if key not in doc:
             raise ValueError(f"timeline artifact missing key {key!r}")
-    n_windows = max(len(doc["samples"]) - 1, 0)
-    if len(doc["axis"].get("step", ())) != n_windows:
-        raise ValueError("timeline axis length != sample windows")
+    n_samples = len(doc["samples"])
+    n_windows = max(n_samples - 1, 0)
+    for ax in ("step", "t"):
+        if len(doc["axis"].get(ax, ())) != n_windows:
+            raise ValueError(f"timeline axis {ax!r} length != sample windows")
     for s in doc["samples"]:
         for key in ("step", "t", "tenants", "gauges"):
             if key not in s:
@@ -275,8 +405,112 @@ def validate_timeline(doc: dict) -> dict:
             if len(series.get(f, ())) != n_windows:
                 raise ValueError(
                     f"rate series {tn}/{f} length != window count")
+    for g, series in doc["gauges"].items():
+        if len(series) != n_samples:
+            raise ValueError(f"gauge series {g!r} length != sample count")
+    for ev in doc.get("events", ()):
+        for key in ("kind", "step"):
+            if key not in ev:
+                raise ValueError(f"timeline event missing key {key!r}")
     return doc
 
 
-__all__ = ["CounterTimeline", "sparkline", "validate_timeline",
-           "TIMELINE_SCHEMA", "RATE_FIELDS"]
+class ThresholdWatcher:
+    """Hysteresis threshold watcher over a timeline's rate series — the
+    trigger half of the elastic control loop (docs/elasticity.md).
+
+    ``thresholds`` maps :data:`RATE_FIELDS` names to trigger levels.  A
+    tenant *trips* when any watched field sits at/over its level for
+    ``sustain`` consecutive windows; tripping emits one trigger event,
+    resets the tenant's streak and starts a ``cooldown`` of that many
+    windows during which the tenant cannot accumulate a new streak.  One
+    transient over-threshold window (or one quiet window inside a streak)
+    therefore never triggers, and a persistently bad tenant triggers once
+    per cooldown period, not once per window.
+
+    :meth:`observe` is incremental — each call consumes only the windows
+    appended since the last call, so it can run after every snapshot at
+    O(new windows) cost.  The watcher is pure host-side bookkeeping: it
+    never touches traced code."""
+
+    def __init__(self, thresholds: dict[str, float], *, sustain: int = 3,
+                 cooldown: int = 8, tenants: Sequence[str] | None = None):
+        unknown = set(thresholds) - set(RATE_FIELDS)
+        if unknown:
+            raise ValueError(f"unknown rate fields {sorted(unknown)} "
+                             f"(known: {RATE_FIELDS})")
+        if not thresholds:
+            raise ValueError("ThresholdWatcher needs at least one threshold")
+        if sustain < 1 or cooldown < 0:
+            raise ValueError(f"need sustain >= 1 and cooldown >= 0, got "
+                             f"{sustain}/{cooldown}")
+        self.thresholds = {k: float(v) for k, v in thresholds.items()}
+        self.sustain = int(sustain)
+        self.cooldown = int(cooldown)
+        self.tenants = tuple(tenants) if tenants else None
+        self.triggers: list[dict] = []     # every trigger ever emitted
+        self._streak: dict[str, int] = {}
+        self._cool: dict[str, int] = {}
+        self._seen = 0                     # windows consumed so far
+
+    @classmethod
+    def from_config(cls, cfg) -> "ThresholdWatcher":
+        """Build from an :class:`~repro.configs.base.ElasticConfig`,
+        whose ``thresholds`` are CLI-friendly ``"rate_field=level"``
+        strings."""
+        th: dict[str, float] = {}
+        for spec in cfg.thresholds:
+            name, sep, level = spec.partition("=")
+            if not sep:
+                raise ValueError(
+                    f"threshold spec must be 'rate_field=level', got {spec!r}")
+            th[name.strip()] = float(level)
+        return cls(th, sustain=cfg.sustain, cooldown=cfg.cooldown,
+                   tenants=cfg.tenants or None)
+
+    def observe(self, timeline: CounterTimeline) -> list[dict]:
+        """Consume every not-yet-seen window of ``timeline``; returns the
+        trigger events fired by those windows (often empty).  Event dicts
+        match :meth:`CounterTimeline.record_event`'s shape so callers can
+        log them straight into the artifact."""
+        fired: list[dict] = []
+        n_windows = max(len(timeline.samples) - 1, 0)
+        while self._seen < n_windows:
+            i = self._seen + 1            # sample index closing this window
+            window = timeline.window_rates(i)
+            close = timeline.samples[i]
+            for tn, fields in window.items():
+                if self.tenants is not None and tn not in self.tenants:
+                    continue
+                if self._cool.get(tn, 0) > 0:
+                    self._cool[tn] -= 1
+                    self._streak[tn] = 0
+                    continue
+                over = {f: fields.get(f, 0.0)
+                        for f, lim in self.thresholds.items()
+                        if fields.get(f, 0.0) >= lim}
+                self._streak[tn] = self._streak.get(tn, 0) + 1 if over else 0
+                if over and self._streak[tn] >= self.sustain:
+                    ev = {"kind": "trigger", "step": int(close["step"]),
+                          "t": float(close["t"]), "tenant": tn,
+                          "detail": {"over": over,
+                                     "sustained": self._streak[tn]}}
+                    fired.append(ev)
+                    self.triggers.append(ev)
+                    self._streak[tn] = 0
+                    self._cool[tn] = self.cooldown
+            self._seen += 1
+        return fired
+
+    def gauges(self) -> dict[str, float]:
+        """Run-wide watcher gauges to ride along in snapshots
+        (docs/observability.md): the largest over-threshold streak and
+        the largest remaining cooldown across watched tenants, as of the
+        windows observed so far."""
+        return {"watch_streak": float(max(self._streak.values(), default=0)),
+                "watch_cooldown": float(max(self._cool.values(), default=0))}
+
+
+__all__ = ["CounterTimeline", "ThresholdWatcher", "sparkline",
+           "validate_timeline", "TIMELINE_SCHEMA", "TIMELINE_SCHEMA_V1",
+           "TIMELINE_SCHEMAS", "RATE_FIELDS"]

@@ -22,6 +22,13 @@ This is the "narrow waist" (paper §4) the perftest reproduction runs on:
   completion-side pipeline cost per CQE); when the receiver's credits run
   out the sender stalls in traced code (paying the interrupt-wait cost)
   until the receiver re-posts its consumed buffers.
+* **live migration** — because the QP is a pytree and every WR crosses
+  the mediation layer, a connection can be stopped at a clean point and
+  moved MigrOS-style: ``qp_quiesce`` drains the sender window to an
+  empty CQ, ``qp_snapshot`` stop-and-copies the QP/CQ/credit state to
+  host memory, and ``qp_restore`` device_puts it onto a (new) mesh's
+  shardings (``qp_specs``), after which ``windowed_send`` resumes with
+  counters and outstanding credits intact (docs/elasticity.md).
 
 Mediation is NOT reimplemented here: the per-endpoint issue/completion
 work is the dataplane's :class:`~repro.core.mediation.MediationPipeline`
@@ -58,6 +65,8 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import techniques as tech
 from repro.core import telemetry as tl
@@ -526,9 +535,100 @@ def windowed_send(dp: Dataplane, cfg: QPConfig, qp: dict, msgs: jax.Array,
     return out, qp, state
 
 
+# ---------------------------------------------------------------------------
+# live QP migration (MigrOS-style): quiesce → stop-and-copy → restore.
+# The OS-control payoff of staying on the dataplane (docs/elasticity.md):
+# because every WR crosses the mediation layer, the kernel can stop a
+# connection at a clean point, copy its state, and resume it elsewhere —
+# exactly what kernel bypass gives up.
+# ---------------------------------------------------------------------------
+
+# Payload rings diverge per rank; every other QP leaf is uniform
+# connection state (see the SPMD note in the module docstring).
+_QP_RING_KEYS = ("send_ring", "recv_ring")
+_QP_UNIFORM_KEYS = ("sq_head", "cq_sent", "cq_rcvd", "cq_status", "cq_wrid",
+                    "cq_head", "cq_tail", "cq_hwm", "credits", "rx_owed",
+                    "win_hwm")
+
+
+def qp_specs(axis: str = "rank") -> dict:
+    """shard_map PartitionSpecs for a QP pytree: payload rings are
+    sharded over ``axis`` (they diverge per rank), queue cursors, the CQ
+    ring and the credit counters are uniform connection state and stay
+    unsharded.  Use as in/out specs when threading a QP through a
+    shard_map boundary, so the pytree can be snapshotted between calls
+    and migrated across meshes."""
+    specs = {k: P() for k in _QP_UNIFORM_KEYS}
+    specs.update({k: P(axis, None) for k in _QP_RING_KEYS})
+    return specs
+
+
+def qp_quiesce(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
+               src: int, state=None, tenant: str | None = None
+               ) -> tuple[dict, object]:
+    """Drain the connection to a migratable snapshot (MigrOS's stop
+    phase).  A bounded ``while_loop`` consumes the CQ one entry per tick,
+    paying the completion-side pipeline cost per CQE on ``src`` exactly
+    like ``windowed_send``'s lazy drains, then acknowledges every
+    completed WR (``cq_sent``/``cq_rcvd`` catch up to ``sq_head``).
+
+    On return the CQ is empty and the sender window is closed; credits,
+    ``rx_owed`` and every cumulative counter are untouched, so a
+    windowed transfer split around a quiesce → :func:`qp_snapshot` →
+    :func:`qp_restore` sequence completes bit-identically to an
+    uninterrupted one (tests/test_elastic_trigger.py).  Returns
+    ``(qp, state)`` — the uniform dataplane convention."""
+    ti = dp.tenant_index(tenant)
+
+    def cond(carry):
+        qp, _, _ = carry
+        return cq_occupancy(qp) > 0
+
+    def body(carry):
+        qp, state, tok = carry
+        tok, state = rank_complete(tok, rank, src, dp, tag="verbs/quiesce",
+                                   state=state, tenant=tenant)
+        state = _bump(state, ti, rank == src, completions=1)
+        qp = _cqe_consume(qp, cfg, 1)
+        return qp, state, tok
+
+    qp, state, tok = jax.lax.while_loop(
+        cond, body, (qp, state, jnp.float32(1.0)))
+    qp = {**qp,
+          "send_ring": tech.tie(qp["send_ring"], tok),
+          "cq_sent": qp["sq_head"],
+          "cq_rcvd": qp["sq_head"]}
+    return qp, state
+
+
+def qp_snapshot(qp: dict) -> dict:
+    """Stop-and-copy: fetch a (quiesced) QP pytree into host memory as
+    plain numpy — checkpointable, and the input :func:`qp_restore`
+    expects.  Call on the global (post-shard_map) pytree, strictly
+    between traced calls."""
+    return {k: np.asarray(jax.device_get(v)) for k, v in qp.items()}
+
+
+def qp_restore(qp_host: dict, mesh, *, axis: str = "rank") -> dict:
+    """MigrOS restore: ``device_put`` a QP snapshot onto ``mesh``'s
+    shardings (:func:`qp_specs` — rings sharded over ``axis``, connection
+    state replicated) so a windowed transfer resumes where it stopped —
+    queue cursors, outstanding credits and owed re-posts intact — on the
+    new mesh."""
+    specs = qp_specs(axis)
+    missing = set(specs) - set(qp_host)
+    if missing:
+        raise TransportError(
+            f"QP snapshot missing keys {sorted(missing)} — not a "
+            f"qp_init/qp_snapshot pytree")
+    return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+            for k, v in qp_host.items()}
+
+
 __all__ = [
     "QPConfig", "TransportError", "UD_MTU",
     "CQE_EMPTY", "CQE_SEND", "CQE_RECV", "qp_init",
     "post_send", "post_recv", "flush_send", "poll_cq", "windowed_send",
+    "qp_specs", "qp_quiesce", "qp_snapshot", "qp_restore",
     "rank_mediate", "rank_complete", "allreduce_state", "cq_occupancy",
 ]

@@ -1,5 +1,10 @@
-from repro.runtime.elastic import remesh, state_shardings
+from repro.runtime.elastic import (
+    ElasticController,
+    remesh,
+    shrink_mesh,
+    state_shardings,
+)
 from repro.runtime.fault import FaultInjector, RunReport, SimulatedFailure, run_loop
 
 __all__ = ["run_loop", "FaultInjector", "SimulatedFailure", "RunReport",
-           "remesh", "state_shardings"]
+           "remesh", "state_shardings", "shrink_mesh", "ElasticController"]

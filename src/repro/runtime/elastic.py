@@ -1,17 +1,37 @@
-"""Elastic scaling: re-shard a training state onto a different mesh.
+"""Elastic scaling: re-shard a training state onto a different mesh, and
+the closed control loop that decides *when* (docs/elasticity.md).
 
 Checkpoints are mesh-agnostic (full arrays + manifest), and sharding specs
 are *logical* (parallel/sharding.py), so growing or shrinking the mesh is:
 restore → derive specs for the new mesh → device_put.  ``remesh`` does the
 same for live states (device-loss recovery without a disk round-trip when
 the state still fits).
+
+The OS-control story on top (CoRD keeps the OS on the dataplane, so the
+OS keeps control over live workloads — what kernel bypass gives up):
+
+* :func:`shrink_mesh` carves a smaller slice out of a mesh (same axis
+  names, fewer devices) — the elastic response's target.
+* :class:`ElasticController` closes the loop: a
+  :class:`~repro.core.obs.ThresholdWatcher` over a
+  :class:`~repro.core.obs.CounterTimeline`'s rate series (``denied_pct``,
+  ``throttled_pct``, ``stalls_pct``) trips on sustained over-threshold
+  windows, and the controller migrates the state onto a shrunken slice
+  with :func:`remesh` mid-run, recording ``trigger``/``remesh`` events
+  into the timeline artifact.  In-flight verbs connections survive the
+  move via live QP migration (``qp_quiesce``/``qp_snapshot``/
+  ``qp_restore`` in core/verbs.py).
 """
 
 from __future__ import annotations
 
+import math
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import compat
+from repro.core.obs import CounterTimeline, ThresholdWatcher
 from repro.parallel.sharding import param_specs
 
 
@@ -44,4 +64,91 @@ def remesh(state, new_mesh: Mesh, *, fsdp: bool = False):
     return jax.tree.unflatten(tdef, moved)
 
 
-__all__ = ["state_shardings", "remesh"]
+def shrink_mesh(mesh: Mesh, factor: int = 2, *,
+                min_devices: int = 1) -> Mesh | None:
+    """A shrunken slice of ``mesh``: same axis names, the leading
+    ``1/factor`` of the devices, taken off the largest axis.  Returns
+    ``None`` when no smaller mesh exists (the largest axis cannot absorb
+    the factor, or the result would fall under ``min_devices``) — the
+    caller keeps the current mesh."""
+    shape = list(mesh.devices.shape)
+    axis = max(range(len(shape)), key=lambda i: shape[i])
+    if factor < 2 or shape[axis] < factor:
+        return None
+    new_shape = list(shape)
+    new_shape[axis] = shape[axis] // factor
+    n = math.prod(new_shape)
+    if n < max(min_devices, 1):
+        return None
+    devices = list(mesh.devices.reshape(-1)[:n])
+    return compat.make_mesh(new_shape, mesh.axis_names, devices=devices)
+
+
+class ElasticController:
+    """The closed OS-control loop: timeline rates → threshold watcher →
+    remesh onto a shrunken mesh slice (docs/elasticity.md).
+
+    Built from an :class:`~repro.configs.base.ElasticConfig`; call
+    :meth:`drive` after each timeline snapshot.  It consumes any new
+    windows through the watcher (logging ``trigger`` events into the
+    timeline); when a tenant trips and the remesh budget
+    (``cfg.max_remesh``) allows, it shrinks the current mesh by
+    ``cfg.shrink_factor``, migrates ``state`` onto it with :func:`remesh`
+    and records a ``remesh`` event.  The caller rebuilds anything
+    compiled against the old mesh (the Dataplane, the jitted step) when
+    ``drive`` reports a move — see ``launch/train.py --elastic``."""
+
+    def __init__(self, cfg, timeline: CounterTimeline, mesh: Mesh, *,
+                 fsdp: bool = False):
+        self.cfg = cfg
+        self.timeline = timeline
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.watcher = ThresholdWatcher.from_config(cfg)
+        self.remeshes = 0
+
+    def _skip(self, events, step: int, reason: str) -> None:
+        """A trigger the controller cannot answer is recorded, not
+        swallowed: the artifact (and the end-of-run event print) explains
+        why the advertised remesh never happened — e.g. a single-device
+        local run with nowhere to shrink to."""
+        self.timeline.record_event("remesh-skipped", step,
+                                   tenant=events[-1]["tenant"],
+                                   detail={"reason": reason})
+
+    def drive(self, state, step: int):
+        """Returns ``(state, moved)``; when ``moved`` the state now lives
+        on the shrunken ``self.mesh``.  A trigger that cannot be answered
+        (remesh budget spent, no smaller mesh) records a
+        ``remesh-skipped`` event instead of silently doing nothing."""
+        events = self.watcher.observe(self.timeline)
+        for ev in events:
+            self.timeline.record_event(ev["kind"], ev["step"],
+                                       tenant=ev["tenant"], t=ev["t"],
+                                       detail=ev["detail"])
+        if not events:
+            return state, False
+        if self.cfg.max_remesh and self.remeshes >= self.cfg.max_remesh:
+            self._skip(events, step, "max_remesh budget exhausted")
+            return state, False
+        new_mesh = shrink_mesh(self.mesh, self.cfg.shrink_factor,
+                               min_devices=self.cfg.min_devices)
+        if new_mesh is None:
+            self._skip(events, step,
+                       f"no smaller mesh: shape "
+                       f"{tuple(self.mesh.devices.shape)} cannot shrink by "
+                       f"{self.cfg.shrink_factor} above min_devices="
+                       f"{self.cfg.min_devices}")
+            return state, False
+        state = remesh(state, new_mesh, fsdp=self.fsdp)
+        old_n, self.mesh = self.mesh.devices.size, new_mesh
+        self.remeshes += 1
+        self.timeline.record_event(
+            "remesh", step, tenant=events[-1]["tenant"],
+            detail={"devices_before": int(old_n),
+                    "devices_after": int(new_mesh.devices.size),
+                    "mesh_shape": list(new_mesh.devices.shape)})
+        return state, True
+
+
+__all__ = ["state_shardings", "remesh", "shrink_mesh", "ElasticController"]

@@ -1,0 +1,498 @@
+"""The elastic control loop (docs/elasticity.md): ThresholdWatcher
+hysteresis/cooldown math, live QP migration (quiesce drains to a clean
+CQ, the QP pytree round-trips through a remesh with counters preserved,
+surviving transfers are bit-identical), v1/v2 timeline artifact
+compatibility, the streaming JSONL sink, and the end-to-end
+ElasticController remesh of a live TrainState."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_model_config
+from repro.configs.base import (
+    DataplaneConfig,
+    ElasticConfig,
+    RunConfig,
+    apply_overrides,
+)
+from repro.core import Dataplane, compat, verbs
+from repro.core.obs import (
+    RATE_FIELDS,
+    TIMELINE_SCHEMA,
+    TIMELINE_SCHEMA_V1,
+    CounterTimeline,
+    ThresholdWatcher,
+    validate_timeline,
+)
+from repro.models import build_model
+from repro.runtime import ElasticController, shrink_mesh
+from repro.train import init_state
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _ramp(denied_pct_per_window, ops_per_window=4.0):
+    """Timeline whose windows show the given denied_pct series."""
+    t = CounterTimeline(source="ramp")
+    ops = den = 0.0
+    t.snapshot(0, {"noisy": {"ops": 0, "denied": 0}}, t=0.0)
+    for i, pct in enumerate(denied_pct_per_window, start=1):
+        ops += ops_per_window
+        den += ops_per_window * pct / 100.0
+        t.snapshot(i, {"noisy": {"ops": ops, "denied": den}}, t=float(i))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# watcher hysteresis / cooldown
+# ---------------------------------------------------------------------------
+
+def test_watcher_requires_sustained_windows():
+    # alternating spikes never build a streak of 2
+    t = _ramp([80, 0, 80, 0, 80, 0, 80])
+    w = ThresholdWatcher({"denied_pct": 50.0}, sustain=2, cooldown=4)
+    assert w.observe(t) == []
+    # and a single transient spike never fires even with sustain=1 streaks
+    # elsewhere in the series
+    t2 = _ramp([0, 0, 80, 0, 0])
+    w2 = ThresholdWatcher({"denied_pct": 50.0}, sustain=2, cooldown=0)
+    assert w2.observe(t2) == []
+
+
+def test_watcher_fires_once_then_cooldown_holds():
+    t = _ramp([80] * 6)
+    w = ThresholdWatcher({"denied_pct": 50.0}, sustain=3, cooldown=10)
+    evs = w.observe(t)
+    assert len(evs) == 1
+    ev = evs[0]
+    # trips at the window that completes the streak (window 3, step 3)
+    assert ev["step"] == 3 and ev["tenant"] == "noisy"
+    assert ev["kind"] == "trigger"
+    assert ev["detail"]["over"] == {"denied_pct": pytest.approx(80.0)}
+    assert ev["detail"]["sustained"] == 3
+    # later windows extend the run but fall inside the cooldown
+    t.snapshot(7, {"noisy": {"ops": 28, "denied": 28 * 0.8}}, t=7.0)
+    assert w.observe(t) == []
+    assert len(w.triggers) == 1
+
+
+def test_watcher_rearms_after_cooldown():
+    # sustain=2, cooldown=1: trigger at w2; w3 cools; w4-5 rebuild the
+    # streak -> trigger at w5; w6 cools; w7-8 -> trigger at w8
+    t = _ramp([80] * 8)
+    w = ThresholdWatcher({"denied_pct": 50.0}, sustain=2, cooldown=1)
+    assert [e["step"] for e in w.observe(t)] == [2, 5, 8]
+
+
+def test_watcher_incremental_equals_batch():
+    pcts = [80, 80, 0, 80, 80, 80, 80]
+    batch = ThresholdWatcher({"denied_pct": 50.0}, sustain=2, cooldown=2)
+    batch_evs = batch.observe(_ramp(pcts))
+
+    inc = ThresholdWatcher({"denied_pct": 50.0}, sustain=2, cooldown=2)
+    t = CounterTimeline(source="ramp")
+    t.snapshot(0, {"noisy": {"ops": 0, "denied": 0}}, t=0.0)
+    inc_evs, ops, den = [], 0.0, 0.0
+    for i, pct in enumerate(pcts, start=1):
+        ops, den = ops + 4, den + 4 * pct / 100.0
+        t.snapshot(i, {"noisy": {"ops": ops, "denied": den}}, t=float(i))
+        inc_evs += inc.observe(t)
+    assert [e["step"] for e in inc_evs] == [e["step"] for e in batch_evs]
+
+
+def test_watcher_tenant_filter_and_multi_field():
+    t = CounterTimeline(source="two")
+    t.snapshot(0, {"a": {"ops": 0, "denied": 0},
+                   "b": {"ops": 0, "throttled": 0}}, t=0.0)
+    for i in range(1, 4):
+        t.snapshot(i, {"a": {"ops": 4.0 * i, "denied": 4.0 * i},
+                       "b": {"ops": 4.0 * i, "throttled": 4.0 * i}},
+                   t=float(i))
+    # both fields watched, but only tenant b is in scope
+    w = ThresholdWatcher({"denied_pct": 50.0, "throttled_pct": 50.0},
+                         sustain=2, cooldown=4, tenants=("b",))
+    evs = w.observe(t)
+    assert [(e["tenant"], e["step"]) for e in evs] == [("b", 2)]
+    assert evs[0]["detail"]["over"] == {"throttled_pct": 100.0}
+
+
+def test_watcher_gauges_track_streak_and_cooldown():
+    w = ThresholdWatcher({"denied_pct": 50.0}, sustain=3, cooldown=5)
+    assert w.gauges() == {"watch_streak": 0.0, "watch_cooldown": 0.0}
+    w.observe(_ramp([80, 80]))
+    assert w.gauges() == {"watch_streak": 2.0, "watch_cooldown": 0.0}
+    w.observe(_ramp([80, 80, 80]))          # completes the streak: trigger
+    assert w.gauges() == {"watch_streak": 0.0, "watch_cooldown": 5.0}
+
+
+def test_watcher_validation_and_from_config():
+    with pytest.raises(ValueError, match="unknown rate fields"):
+        ThresholdWatcher({"nope": 1.0})
+    with pytest.raises(ValueError, match="at least one"):
+        ThresholdWatcher({})
+    with pytest.raises(ValueError, match="sustain"):
+        ThresholdWatcher({"denied_pct": 1.0}, sustain=0)
+    cfg = ElasticConfig(thresholds=("denied_pct=50", "stalls_pct=75.5"),
+                        sustain=4, cooldown=9, tenants=("x",))
+    w = ThresholdWatcher.from_config(cfg)
+    assert w.thresholds == {"denied_pct": 50.0, "stalls_pct": 75.5}
+    assert (w.sustain, w.cooldown, w.tenants) == (4, 9, ("x",))
+    with pytest.raises(ValueError, match="rate_field=level"):
+        ThresholdWatcher.from_config(ElasticConfig(thresholds=("denied",)))
+    # and the config is reachable through RunConfig CLI overrides
+    run = apply_overrides(RunConfig(), ["elastic.sustain=7"])
+    assert run.elastic.sustain == 7
+
+
+def test_window_rates_single_window():
+    t = _ramp([80, 40])
+    assert t.window_rates(1)["noisy"]["denied_pct"] == pytest.approx(80.0)
+    assert t.window_rates(-1)["noisy"]["denied_pct"] == pytest.approx(40.0)
+    assert t.window_rates() == t.window_rates(2)
+    with pytest.raises(IndexError):
+        t.window_rates(0)
+    assert CounterTimeline(source="e").window_rates() == {}
+
+
+# ---------------------------------------------------------------------------
+# v1/v2 artifact compatibility + validation regressions
+# ---------------------------------------------------------------------------
+
+def test_v2_events_roundtrip(tmp_path):
+    t = _ramp([80, 80])
+    t.record_event("trigger", 2, tenant="noisy", t=2.0,
+                   detail={"over": {"denied_pct": 80.0}})
+    t.record_event("remesh", 2, tenant="noisy", t=2.1,
+                   detail={"devices_after": 4})
+    path = t.save(str(tmp_path / "v2_timeline.json"))
+    doc = CounterTimeline.load(path)
+    assert doc["schema"] == TIMELINE_SCHEMA == "cord-timeline/v2"
+    assert [e["kind"] for e in doc["events"]] == ["trigger", "remesh"]
+    assert doc["events"][1]["detail"] == {"devices_after": 4}
+
+
+def test_v1_artifact_still_loads(tmp_path):
+    """The compatibility rule: v1 (no events list) is accepted and
+    checked against the v1 layout; a v2 doc *missing* events is not."""
+    doc = _ramp([80, 80]).to_doc()
+    v1 = {k: v for k, v in doc.items() if k != "events"}
+    v1["schema"] = TIMELINE_SCHEMA_V1
+    path = tmp_path / "old_timeline.json"
+    path.write_text(json.dumps(v1))
+    loaded = CounterTimeline.load(str(path))
+    assert loaded["schema"] == "cord-timeline/v1"
+    # v2 without events is malformed
+    with pytest.raises(ValueError, match="events"):
+        validate_timeline({k: v for k, v in doc.items() if k != "events"})
+    # unknown versions stay refused
+    with pytest.raises(ValueError, match="schema"):
+        validate_timeline({**doc, "schema": "cord-timeline/v3"})
+    # events must carry kind + step
+    with pytest.raises(ValueError, match="event missing key"):
+        validate_timeline({**doc, "events": [{"kind": "remesh"}]})
+
+
+def test_validate_rejects_series_length_mismatch_on_v1():
+    """Regression (PR 5 bugfix): a v1 artifact whose series lengths
+    disagree with the sample axis used to pass validation as long as the
+    schema string matched; now every series is length-checked."""
+    doc = _ramp([80, 80]).to_doc()
+    doc["gauges"] = {"active_slots": [1.0]}      # 3 samples -> needs 3
+    v1 = {k: v for k, v in doc.items() if k != "events"}
+    v1["schema"] = TIMELINE_SCHEMA_V1
+    with pytest.raises(ValueError, match="gauge series"):
+        validate_timeline(v1)
+    # the wall-time axis is checked too (only `step` was before)
+    doc2 = _ramp([80, 80]).to_doc()
+    doc2["axis"]["t"] = doc2["axis"]["t"][:-1]
+    v1b = {k: v for k, v in doc2.items() if k != "events"}
+    v1b["schema"] = TIMELINE_SCHEMA_V1
+    with pytest.raises(ValueError, match="axis 't'"):
+        validate_timeline(v1b)
+
+
+# ---------------------------------------------------------------------------
+# streaming JSONL sink
+# ---------------------------------------------------------------------------
+
+def test_jsonl_sink_streams_and_rebuilds(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    t = CounterTimeline(source="sink-test", sink=path)
+    t.snapshot(1, {"a": {"ops": 4, "bytes": 64}}, t=1.0,
+               gauges={"watch_streak": 1})
+    t.record_event("trigger", 1, tenant="a", t=1.5, detail={"x": 1})
+    t.snapshot(2, {"a": {"ops": 8, "bytes": 128}}, t=2.0,
+               gauges={"watch_streak": 2})
+    t.close()
+
+    lines = [json.loads(line) for line in open(path)]
+    assert lines[0]["schema"] == TIMELINE_SCHEMA       # header
+    assert [next(iter(o)) for o in lines[1:]] == \
+        ["sample", "event", "sample"]                  # arrival order
+
+    back = CounterTimeline.read_jsonl(path)
+    assert back.source == "sink-test"
+    assert back.samples == t.samples
+    assert back.events == t.events
+    assert back.to_doc() == t.to_doc()
+
+    # a rerun over the same path appends a NEW stream (its own header);
+    # read_jsonl yields the latest stream, never a cross-run merge whose
+    # boundary window would corrupt the rate series
+    t2 = CounterTimeline(source="sink-rerun", sink=path)
+    t2.snapshot(1, {"a": {"ops": 2}}, t=0.5)
+    t2.close()
+    lines = [json.loads(line) for line in open(path)]
+    assert sum("schema" in o for o in lines) == 2
+    latest = CounterTimeline.read_jsonl(path)
+    assert latest.source == "sink-rerun"
+    assert [s["step"] for s in latest.samples] == [1]
+    assert latest.events == []
+
+
+# ---------------------------------------------------------------------------
+# live QP migration: quiesce → snapshot → restore
+# ---------------------------------------------------------------------------
+
+N_MSGS, MSG_BYTES, WINDOW = 6, 128, 2
+
+
+def _dp(mesh):
+    return Dataplane(DataplaneConfig(mode="cord", emulate_costs=True),
+                     mesh=mesh)
+
+
+def _conn(mesh, dp, *, credits=0):
+    """init/xfer/quiesce jits threading the QP pytree through qp_specs —
+    the migratable-connection shape benchmarks/perftest.py also builds."""
+    cfg = verbs.QPConfig(msg_bytes=MSG_BYTES, depth=max(WINDOW, 2),
+                         max_outstanding=WINDOW)
+    qspec = verbs.qp_specs("rank")
+
+    def init_body(rt):
+        rank = jax.lax.axis_index("rank")
+        qp = verbs.qp_init(cfg)
+        if credits:
+            qp, rt = verbs.post_recv(dp, cfg, qp, rank, dst=1, n=credits,
+                                     state=rt)
+        return qp, verbs.allreduce_state(rt)
+
+    def xfer_body(msgs, qp, rt):
+        rank = jax.lax.axis_index("rank")
+        out, qp, rt = verbs.windowed_send(dp, cfg, qp, msgs[0], rank,
+                                          src=0, dst=1, state=rt)
+        return out[None], qp, verbs.allreduce_state(rt)
+
+    def quiesce_body(qp, rt):
+        rank = jax.lax.axis_index("rank")
+        qp, rt = verbs.qp_quiesce(dp, cfg, qp, rank, src=0, state=rt)
+        return qp, verbs.allreduce_state(rt)
+
+    sm = compat.shard_map
+    return {
+        "cfg": cfg,
+        "init": jax.jit(sm(init_body, mesh=mesh, in_specs=(P(),),
+                           out_specs=(qspec, P()))),
+        "xfer": jax.jit(sm(xfer_body, mesh=mesh,
+                           in_specs=(P("rank", None, None), qspec, P()),
+                           out_specs=(P("rank", None, None), qspec, P()))),
+        "quiesce": jax.jit(sm(quiesce_body, mesh=mesh, in_specs=(qspec, P()),
+                              out_specs=(qspec, P()))),
+    }
+
+
+def _msgs():
+    payload = np.arange(N_MSGS * MSG_BYTES, dtype=np.uint8) \
+        .reshape(N_MSGS, MSG_BYTES)
+    return jnp.asarray(np.stack([payload, np.zeros_like(payload)])), payload
+
+
+@pytest.fixture(scope="module")
+def mesh_pair():
+    devs = jax.devices()
+    return (compat.make_mesh((2,), ("rank",), devices=devs[:2]),
+            compat.make_mesh((2,), ("rank",), devices=devs[2:4]))
+
+
+def test_qp_specs_cover_qp_init_layout():
+    cfg = verbs.QPConfig(msg_bytes=MSG_BYTES)
+    assert set(verbs.qp_specs()) == set(verbs.qp_init(cfg))
+
+
+def test_quiesce_drains_to_empty_cq(mesh_pair):
+    """Sync posts + flush (no poll) leave CQEs outstanding; quiesce must
+    consume them all, close the window, and account the drains in the
+    poller's completions counter."""
+    mesh, _ = mesh_pair
+    dp = _dp(mesh)
+    cfg = verbs.QPConfig(msg_bytes=MSG_BYTES, depth=N_MSGS)
+    qspec = verbs.qp_specs("rank")
+
+    def fill_body(msgs, rt):
+        rank = jax.lax.axis_index("rank")
+        qp = verbs.qp_init(cfg)
+        for i in range(N_MSGS):
+            qp, rt = verbs.post_send(dp, cfg, qp, msgs[0, i], rank, src=0,
+                                     state=rt)
+        qp, rt = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1, state=rt)
+        return qp, verbs.allreduce_state(rt)
+
+    def quiesce_body(qp, rt):
+        rank = jax.lax.axis_index("rank")
+        qp, rt = verbs.qp_quiesce(dp, cfg, qp, rank, src=0, state=rt)
+        return qp, verbs.allreduce_state(rt)
+
+    sm = compat.shard_map
+    fill = jax.jit(sm(fill_body, mesh=mesh,
+                      in_specs=(P("rank", None, None), P()),
+                      out_specs=(qspec, P())))
+    quiesce = jax.jit(sm(quiesce_body, mesh=mesh, in_specs=(qspec, P()),
+                         out_specs=(qspec, P())))
+
+    msgs, _ = _msgs()
+    qp, _ = fill(msgs, dp.runtime_init())
+    assert int(qp["cq_head"] - qp["cq_tail"]) == N_MSGS  # outstanding CQEs
+    qp, rt = quiesce(qp, dp.runtime_init())
+    snap = verbs.qp_snapshot(qp)
+    assert int(snap["cq_head"] - snap["cq_tail"]) == 0
+    assert int(snap["cq_sent"]) == int(snap["sq_head"]) == N_MSGS
+    assert int(snap["cq_rcvd"]) == N_MSGS
+    rep = dp.runtime_report(rt)[dp.tenant]
+    assert rep["completions"] == N_MSGS
+    # quiescing a clean QP is a no-op with no further completions
+    qp2, rt2 = quiesce(qp, dp.runtime_init())
+    assert dp.runtime_report(rt2)[dp.tenant]["completions"] == 0
+    assert int(qp2["cq_head"] - qp2["cq_tail"]) == 0
+
+
+def test_migrated_transfer_is_bit_identical(mesh_pair):
+    """The acceptance invariant: a windowed transfer split around a
+    quiesce → snapshot → restore onto a DIFFERENT mesh delivers the same
+    bytes and ends with the same QP counters as an uninterrupted one,
+    and credits granted before the move are spent after it."""
+    mesh_a, mesh_b = mesh_pair
+    conn_a = _conn(mesh_a, _dp(mesh_a), credits=N_MSGS)
+    conn_b = _conn(mesh_b, _dp(mesh_b))
+    msgs, payload = _msgs()
+    dp_a, dp_b = _dp(mesh_a), _dp(mesh_b)
+
+    qp, _ = conn_a["init"](dp_a.runtime_init())
+    full_out, qp_full, _ = conn_a["xfer"](msgs, qp, dp_a.runtime_init())
+
+    k = N_MSGS // 2
+    qp, _ = conn_a["init"](dp_a.runtime_init())
+    out1, qp, _ = conn_a["xfer"](msgs[:, :k], qp, dp_a.runtime_init())
+    qp, _ = conn_a["quiesce"](qp, dp_a.runtime_init())
+    snap = verbs.qp_snapshot(qp)
+    assert int(snap["cq_head"] - snap["cq_tail"]) == 0
+    assert int(snap["credits"]) == N_MSGS - k    # unspent credits survive
+    assert int(snap["sq_head"]) == k
+    qp_b = verbs.qp_restore(snap, mesh_b)
+    out2, qp_b, _ = conn_b["xfer"](msgs[:, k:], qp_b, dp_b.runtime_init())
+
+    moved = np.concatenate([np.asarray(out1)[1], np.asarray(out2)[1]])
+    np.testing.assert_array_equal(moved, np.asarray(full_out)[1])
+    np.testing.assert_array_equal(moved, payload)
+    snap_b, snap_f = verbs.qp_snapshot(qp_b), verbs.qp_snapshot(qp_full)
+    for key in ("sq_head", "cq_sent", "credits", "rx_owed"):
+        assert int(snap_b[key]) == int(snap_f[key]), key
+
+
+def test_qp_snapshot_restore_preserves_every_leaf(mesh_pair):
+    mesh_a, mesh_b = mesh_pair
+    conn = _conn(mesh_a, _dp(mesh_a), credits=N_MSGS)
+    msgs, _ = _msgs()
+    dp = _dp(mesh_a)
+    qp, _ = conn["init"](dp.runtime_init())
+    _, qp, _ = conn["xfer"](msgs[:, :3], qp, dp.runtime_init())
+    qp, _ = conn["quiesce"](qp, dp.runtime_init())
+    snap = verbs.qp_snapshot(qp)
+    restored = verbs.qp_restore(snap, mesh_b)
+    for key, val in snap.items():
+        np.testing.assert_array_equal(np.asarray(restored[key]), val,
+                                      err_msg=key)
+    with pytest.raises(verbs.TransportError, match="missing keys"):
+        verbs.qp_restore({"send_ring": snap["send_ring"]}, mesh_b)
+
+
+# ---------------------------------------------------------------------------
+# shrink_mesh + end-to-end controller remesh
+# ---------------------------------------------------------------------------
+
+def test_shrink_mesh_shapes(mesh8, mesh42):
+    small = shrink_mesh(mesh8, 2)
+    assert small.devices.shape == (4,) and small.axis_names == ("data",)
+    assert list(small.devices.reshape(-1)) == \
+        list(mesh8.devices.reshape(-1)[:4])
+    # largest axis absorbs the shrink
+    assert shrink_mesh(mesh42, 2).devices.shape == (2, 2)
+    # refuses to go below min_devices / below the factor
+    assert shrink_mesh(mesh8, 2, min_devices=8) is None
+    two = shrink_mesh(mesh8, 4)
+    assert two.devices.shape == (2,)
+    assert shrink_mesh(two, 4) is None
+    assert shrink_mesh(mesh8, 1) is None
+
+
+def test_controller_remeshes_live_train_state(mesh42):
+    """Sustained over-threshold windows drive exactly one remesh of a
+    live TrainState onto the shrunken slice (max_remesh budget), with
+    trigger+remesh events recorded and parameter values preserved."""
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    state = init_state(build_model(cfg), RNG)
+    before = [np.asarray(x) for x in jax.tree.leaves(state.params)]
+
+    timeline = CounterTimeline(source="ctl")
+    ecfg = ElasticConfig(enabled=True, thresholds=("denied_pct=50",),
+                         sustain=2, cooldown=4, shrink_factor=2,
+                         min_devices=2, max_remesh=1)
+    ctl = ElasticController(ecfg, timeline, mesh42)
+
+    timeline.snapshot(0, {"default": {"ops": 0, "denied": 0}}, t=0.0)
+    state, moved = ctl.drive(state, 0)
+    assert not moved                        # no windows yet
+    for i in range(1, 4):
+        timeline.snapshot(i, {"default": {"ops": 4.0 * i, "denied": 4.0 * i}},
+                          t=float(i))
+    state, moved = ctl.drive(state, 3)
+    assert moved and ctl.remeshes == 1
+    assert ctl.mesh.devices.shape == (2, 2)
+    kinds = [e["kind"] for e in timeline.events]
+    assert kinds == ["trigger", "remesh"]
+    assert timeline.events[1]["detail"]["devices_after"] == 4
+    # migration preserved every parameter bit
+    after = [np.asarray(x) for x in jax.tree.leaves(state.params)]
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+    # the remesh budget caps further moves even under sustained pressure,
+    # and the unanswerable trigger is recorded, not swallowed
+    for i in range(4, 12):
+        timeline.snapshot(i, {"default": {"ops": 4.0 * i, "denied": 4.0 * i}},
+                          t=float(i))
+    state, moved = ctl.drive(state, 11)
+    assert not moved and ctl.remeshes == 1
+    assert timeline.events[-1]["kind"] == "remesh-skipped"
+    assert "max_remesh" in timeline.events[-1]["detail"]["reason"]
+
+
+def test_controller_records_skip_when_mesh_cannot_shrink():
+    """A trigger on a mesh with nowhere to shrink to (e.g. the default
+    single-device local run) must leave an explanatory event."""
+    devs = jax.devices()
+    tiny = compat.make_mesh((1,), ("data",), devices=devs[:1])
+    timeline = CounterTimeline(source="tiny")
+    ecfg = ElasticConfig(enabled=True, thresholds=("denied_pct=50",),
+                         sustain=1, cooldown=0, min_devices=1)
+    ctl = ElasticController(ecfg, timeline, tiny)
+    timeline.snapshot(0, {"default": {"ops": 0, "denied": 0}}, t=0.0)
+    timeline.snapshot(1, {"default": {"ops": 4, "denied": 4}}, t=1.0)
+    state, moved = ctl.drive({"x": 1}, 1)
+    assert not moved and ctl.remeshes == 0
+    assert [e["kind"] for e in timeline.events] == \
+        ["trigger", "remesh-skipped"]
+    assert "no smaller mesh" in timeline.events[-1]["detail"]["reason"]
