@@ -74,8 +74,44 @@ def bench_ssm():
     return rows
 
 
+def bench_bounce():
+    """Dataplane bounce-buffer sweep: Pallas double-buffered copy kernel
+    vs the XLA ``staged_copy`` emulation, across payload sizes and copy
+    counts.  On CPU the Pallas path runs in interpret mode, so its time
+    is a correctness artifact; the XLA bandwidth is compared against the
+    HBM roofline to show how much headroom the emulation leaves (the
+    motivation for the real kernel on TPU)."""
+    import numpy as np
+
+    from benchmarks.roofline import HBM_BW
+    from repro.core.techniques import staged_copy
+    from repro.kernels.dataplane import bounce_copy
+
+    rows = []
+    for elems in (1 << 14, 1 << 17):
+        for copies in (1, 2):
+            x = jax.random.normal(jax.random.PRNGKey(2), (elems,),
+                                  jnp.float32)
+            xla = jax.jit(lambda v: staged_copy(v, copies=copies))
+            pal = jax.jit(lambda v: bounce_copy(v, copies=copies))
+            err = float(np.abs(np.asarray(pal(x)) -
+                               np.asarray(xla(x))).max())
+            xla_us = _t(xla, x)
+            # each copy moves the payload in and out of the bounce buffer
+            moved = 2 * copies * x.size * x.dtype.itemsize
+            gbps = moved / (xla_us * 1e-6) / 1e9
+            rows.append({"table": "kernels",
+                         "name": f"bounce_{elems * 4 // 1024}KiB_c{copies}",
+                         "pallas_vs_ref_err": err,
+                         "xla_ref_us": round(xla_us, 1),
+                         "pallas_interpret_us": round(_t(pal, x), 1),
+                         "xla_gbps": round(gbps, 2),
+                         "hbm_roofline_frac": round(gbps * 1e9 / HBM_BW, 4)})
+    return rows
+
+
 def run_all():
-    return bench_flash() + bench_ssm()
+    return bench_flash() + bench_ssm() + bench_bounce()
 
 
 if __name__ == "__main__":

@@ -95,6 +95,7 @@ def dry_run() -> None:
                       "ops_s_last": round(rates["ops_s"][-1], 1)}))
 
     elastic_smoke()
+    bounce_smoke()
 
     for row in npb.run_all(benches=("EP",), modes=("bypass", "cord")):
         print(json.dumps(row))
@@ -199,6 +200,37 @@ def elastic_smoke() -> None:
                       "trigger_step": trigger_step,
                       "migrated_bit_identical": True,
                       "events": kinds}))
+
+
+def bounce_smoke() -> None:
+    """PR-6 acceptance smoke (docs/kernels.md): the Pallas dataplane
+    kernels are bit-identical to the XLA emulation they replace — the
+    double-buffered ``bounce_copy`` against ``staged_copy`` on a ragged
+    payload (exercising the padded-tail DMA path), and ``mediated_cost``
+    must leave the payload untouched while its per-chunk SMEM counters
+    account at least the requested delay iterations."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.techniques import staged_copy
+    from repro.kernels.dataplane import (COST_COPIES, COST_ITERS,
+                                         bounce_copy, mediated_cost)
+
+    x = jax.random.normal(jax.random.PRNGKey(6), (3, 1237), jnp.float32)
+    for copies in (1, 3):
+        np.testing.assert_array_equal(
+            np.asarray(bounce_copy(x, copies=copies, chunk_elems=1024)),
+            np.asarray(staged_copy(x, copies=copies)))
+    out, ctrs = mediated_cost(x, delay_iters=500, copies=2,
+                              chunk_elems=1024)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    ctrs = np.asarray(ctrs)
+    assert int(ctrs[:, COST_ITERS].sum()) >= 500, ctrs
+    assert (ctrs[:, COST_COPIES] == 2).all(), ctrs
+    print(json.dumps({"table": "dryrun", "bounce_bit_identical": True,
+                      "cost_chunks": int(ctrs.shape[0]),
+                      "cost_iters": int(ctrs[:, COST_ITERS].sum())}))
 
 
 def main() -> None:

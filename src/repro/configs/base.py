@@ -202,6 +202,12 @@ class DataplaneConfig:
     # False keeps one chain/copy per stage (the pre-fusion shape, kept
     # for ablation and the fusion-equivalence tests).
     fuse_mediation: bool = True
+    # Pallas dataplane kernels (kernels/dataplane): "auto" runs the real
+    # bounce-copy / in-kernel-cost kernels on TPU and the XLA emulation
+    # elsewhere; "on" forces the kernels everywhere (interpret mode
+    # off-TPU — the bit-equivalence test path); "off" keeps the XLA
+    # emulation.  Value-identical in all three settings.
+    pallas_dataplane: str = "auto"
     # Policy set enforced in cord mode.
     policies: tuple[str, ...] = ("telemetry",)
     # Tenants sharing this dataplane (per-tenant runtime accounting/QoS).

@@ -27,11 +27,34 @@ from repro.core.policies import QoSPolicy
 
 
 def split_chunks(x: jax.Array, num_chunks: int, axis: int = 0) -> list[jax.Array]:
+    """Split ``x`` into ``num_chunks`` equal chunks along ``axis``.
+
+    Uneven extents are padded with zeros on the tail chunk rather than
+    collapsing to one chunk, so chunk-granular scheduling (QoS
+    preemption, rate limiting) still applies to odd-sized collectives.
+    Callers slice the concatenated result back to the original extent
+    (``chunked_psum`` does)."""
     n = x.shape[axis]
     num_chunks = max(1, min(num_chunks, n))
-    if n % num_chunks:
-        num_chunks = 1  # fall back: uneven splits are not worth padding here
+    rem = n % num_chunks
+    if rem:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, num_chunks - rem)
+        x = jnp.pad(x, widths)
     return list(jnp.split(x, num_chunks, axis=axis))
+
+
+def _preempt_bucket(dp, state, tenant: str | None):
+    """The QoS bucket governing ``tenant`` on ``dp``, if chunk-granular
+    preemption can run: policies enforced, runtime state threaded with
+    the bucket's slice present, and the tenant actually rate-limited."""
+    if state is None or not getattr(dp, "enforce", False):
+        return None
+    name = tenant or dp.tenant
+    for p in dp.policies:
+        if isinstance(p, QoSPolicy) and p.governs(name) and p.name in state:
+            return p
+    return None
 
 
 def chunked_psum(
@@ -45,6 +68,7 @@ def chunked_psum(
     state=None,
     tenant: str | None = None,
     interleave: Callable[[int], None] | None = None,
+    preempt: bool = True,
 ):
     """psum ``x`` in ``num_chunks`` sequentially-issued chunks.
 
@@ -52,21 +76,44 @@ def chunked_psum(
     re-merge them into one collective — preserving both the scheduling
     semantics and the overlap opportunity.  Returns ``(out, state)`` —
     the uniform dataplane state convention; with runtime state threaded,
-    the issuing tenant's ``chunks`` counter accounts every chunk."""
+    the issuing tenant's ``chunks`` counter accounts every chunk.
+
+    **Wire preemption** (``preempt=True``): when the issuing tenant is
+    governed by an enforced QoS token bucket, every chunk consults the
+    bucket *before it is issued* (``QoSPolicy.on_chunk_runtime``).  A
+    chunk arriving on a dry bucket is deferred — it stalls on the
+    token deficit, yielding the ICI to other tenants' traffic mid-op,
+    and the deferral lands in the tenant's ``throttled`` counter.  The
+    chunk ops are issued ``precharged`` so the pipeline's token-bucket
+    stage does not debit them a second time; totals match the
+    stage-charged path exactly, and values are bit-identical to the
+    unconstrained collective."""
+    n = x.shape[0]
     chunks = split_chunks(x, num_chunks, axis=0)
+    bucket = _preempt_bucket(dp, state, tenant) if preempt else None
+    tname = tenant or dp.tenant
+    ti = dp.tenant_index(tenant)
     outs = []
     for i, c in enumerate(chunks):
         if interleave is not None:
             interleave(i)
         if len(chunks) > 1:
             (c,) = jax.lax.optimization_barrier((c,))
+        if bucket is not None:
+            rec = tl.OpRecord(kind="all_reduce", tag=f"{tag}/chunk{i}",
+                              bytes=tl.nbytes(c),
+                              axes=tl.normalize_axes(axis),
+                              mode=dp.cfg.mode, qos=qos, precharged=True)
+            c, state = bucket.on_chunk_runtime(c, state, rec, tname, ti)
         r, state = dp.psum(c, axis, tag=f"{tag}/chunk{i}", qos=qos,
-                           state=state, tenant=tenant)
+                           state=state, tenant=tenant,
+                           precharged=bucket is not None)
         outs.append(r)
     out = jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
+    if out.shape[0] != n:     # drop the tail chunk's padding rows
+        out = jax.lax.slice_in_dim(out, 0, n, axis=0)
     if state is not None and "counters" in state and len(chunks) > 1:
-        ctrs = tl.tenant_counters_bump(state["counters"],
-                                       dp.tenant_index(tenant),
+        ctrs = tl.tenant_counters_bump(state["counters"], ti,
                                        chunks=len(chunks))
         state = {**state, "counters": ctrs}
     return out, state

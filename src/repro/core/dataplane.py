@@ -187,20 +187,23 @@ class Dataplane:
 
     def _record(self, kind: str, tag: str, x, axes, qos: str = "default",
                 mr: str | None = None, count: int = 1,
-                tenant: str | None = None) -> tl.OpRecord:
+                tenant: str | None = None,
+                precharged: bool = False) -> tl.OpRecord:
         shape, dtype = tl.describe(x)
         rec = tl.OpRecord(kind=kind, tag=tag, bytes=tl.nbytes(x),
                           axes=tl.normalize_axes(axes),
                           shape=shape, dtype=dtype, mode=self.cfg.mode,
-                          qos=qos, count=count)
+                          qos=qos, count=count, precharged=precharged)
         self._policy_pass(rec, x, mr, tenant or self.tenant)
         return rec
 
     def _mediate(self, collective, kind: str, x, axis, tag: str, *,
-                 mr: str | None, state, qos: str, tenant: str | None):
+                 mr: str | None, state, qos: str, tenant: str | None,
+                 precharged: bool = False):
         """One dataplane op: record → pipeline.send → collective →
         pipeline.complete.  All five explicit collectives are this."""
-        rec = self._record(kind, tag, x, axis, qos, mr, tenant=tenant)
+        rec = self._record(kind, tag, x, axis, qos, mr, tenant=tenant,
+                           precharged=precharged)
         ti = self.tenant_index(tenant)
         x, state = self.pipeline.send(x, rec, state, ti)
         out = collective(x)
@@ -264,10 +267,14 @@ class Dataplane:
     # Explicit collectives (inside shard_map) — uniform (out, state)
     # ------------------------------------------------------------------
     def psum(self, x, axis, tag: str = "psum", mr: str | None = None,
-             state=None, qos: str = "default", tenant: str | None = None):
+             state=None, qos: str = "default", tenant: str | None = None,
+             precharged: bool = False):
+        """``precharged=True`` marks an op whose QoS tokens were already
+        debited at chunk granularity by the issuer (chunked_psum's
+        preemption path) — the token-bucket stage skips it."""
         return self._mediate(lambda v: jax.lax.psum(v, axis), "all_reduce",
                              x, axis, tag, mr=mr, state=state, qos=qos,
-                             tenant=tenant)
+                             tenant=tenant, precharged=precharged)
 
     def all_gather(self, x, axis, tag: str = "all_gather", *, gather_axis: int = 0,
                    tiled: bool = False, mr: str | None = None,

@@ -136,19 +136,31 @@ class SocketStackStage(MediationStage):
 
 
 class StagedCopyStage(MediationStage):
-    """Bounce-buffer copies on both sides when zero copy is removed."""
+    """Bounce-buffer copies on both sides when zero copy is removed.
+
+    With ``pallas=True`` the copies are the real Pallas bounce-buffer
+    kernel (``kernels/dataplane``): double-buffered DMA through a VMEM
+    scratch slot instead of the XLA roll/barrier emulation.  Output is
+    bit-identical either way."""
 
     name = "staged-copy"
     stateful = False
 
-    def __init__(self, copies: int = 1):
+    def __init__(self, copies: int = 1, pallas: bool = False):
         self.copies = int(copies)
+        self.pallas = bool(pallas)
+
+    def _copy(self, x):
+        if self.pallas:
+            from repro.kernels import dataplane as dk
+            return dk.bounce_copy(x, copies=self.copies)
+        return tech.staged_copy(x, copies=self.copies)
 
     def send(self, x, rec, state, tenant_idx):
-        return tech.staged_copy(x, copies=self.copies), state
+        return self._copy(x), state
 
     def complete(self, x, rec, state, tenant_idx):
-        return tech.staged_copy(x, copies=self.copies), state
+        return self._copy(x), state
 
     def send_copies(self, rec):
         return self.copies
@@ -185,6 +197,11 @@ class TokenBucketStage(MediationStage):
         self.tenants = tenants
 
     def send(self, x, rec, state, tenant_idx):
+        if rec.precharged:
+            # chunk-granular preemption (core/chunking.py) already
+            # debited this op's tokens chunk by chunk — charging the
+            # assembled op again would double-bill the tenant.
+            return x, state
         return self.policy.on_op_runtime(x, state, rec,
                                          self.tenants[tenant_idx], tenant_idx)
 
@@ -231,11 +248,19 @@ class MediationPipeline:
     staying bit-identical — every fused stage is value-preserving by
     contract, and total serial cost is unchanged because delay iterations
     add linearly.  Stateful stages (token-bucket, counter-bump, custom
-    subclasses) still run their hooks in declared order."""
+    subclasses) still run their hooks in declared order.
 
-    def __init__(self, stages=(), fused: bool = True):
+    With ``pallas=True`` a fused pure-cost side is ONE Pallas kernel
+    launch (``mediated_cost`` in kernels/dataplane): the summed delay
+    iterations burn on the scalar core between a chunk's DMA copy-in
+    and copy-out, and the summed bounce passes are real double-buffered
+    VMEM copies — measured-mode mediation cost becomes a hardware
+    measurement instead of an XLA emulation, still bit-identical."""
+
+    def __init__(self, stages=(), fused: bool = True, pallas: bool = False):
         self.stages: tuple[MediationStage, ...] = tuple(stages)
         self.fused = bool(fused)
+        self.pallas = bool(pallas)
 
     @property
     def stage_names(self) -> tuple[str, ...]:
@@ -244,12 +269,16 @@ class MediationPipeline:
     def _fused_side(self, x, rec, state, tenant_idx, side: str):
         iters = sum(getattr(s, f"{side}_delay_iters")(rec)
                     for s in self.stages if not s.stateful)
-        if iters:
-            x = tech.delay_chain(x, iters)
         copies = sum(getattr(s, f"{side}_copies")(rec)
                      for s in self.stages if not s.stateful)
-        if copies:
-            x = tech.staged_copy(x, copies=copies)
+        if self.pallas and (iters or copies):
+            from repro.kernels import dataplane as dk
+            x, _ = dk.mediated_cost(x, dk.rescale_iters(iters), copies)
+        else:
+            if iters:
+                x = tech.delay_chain(x, iters)
+            if copies:
+                x = tech.staged_copy(x, copies=copies)
         for s in self.stages:
             if s.stateful:
                 x, state = getattr(s, side)(x, rec, state, tenant_idx)
@@ -285,7 +314,9 @@ def build_pipeline(dp) -> MediationPipeline:
 
     ``dp`` duck-types a Dataplane: cfg, mode, kernel_bypass, zero_copy,
     polling, enforce, policies, tenants."""
+    from repro.kernels.dataplane import use_pallas_dataplane
     cfg = dp.cfg
+    pallas = use_pallas_dataplane(getattr(cfg, "pallas_dataplane", "auto"))
     stages: list[MediationStage] = []
     mediated = not dp.kernel_bypass        # the OS sees this traffic
     if mediated and cfg.emulate_costs:
@@ -294,7 +325,7 @@ def build_pipeline(dp) -> MediationPipeline:
             stages.append(SocketStackStage(cfg.socket_stack_ns,
                                            cfg.socket_ns_per_byte))
     if not dp.zero_copy:
-        stages.append(StagedCopyStage())
+        stages.append(StagedCopyStage(pallas=pallas))
     if not dp.polling and cfg.emulate_costs:
         stages.append(InterruptWaitStage(cfg.interrupt_cost_us))
     if dp.enforce:
@@ -308,7 +339,8 @@ def build_pipeline(dp) -> MediationPipeline:
             if dp.enforce else None
         stages.append(CounterBumpStage(dp.tenants, quota))
     return MediationPipeline(stages,
-                             fused=getattr(cfg, "fuse_mediation", True))
+                             fused=getattr(cfg, "fuse_mediation", True),
+                             pallas=pallas)
 
 
 def runtime_state_init(tenants: tuple[str, ...],

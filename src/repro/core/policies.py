@@ -223,6 +223,26 @@ class QoSPolicy(Policy):
             state = {**state, "counters": ctrs}
         return x, state
 
+    def on_chunk_runtime(self, x, state, rec, tenant, tenant_idx):
+        """Chunk-granular bucket consultation — the wire-preemption hook
+        (core/chunking.py).
+
+        A large collective split into chunks consults the bucket once
+        per *chunk* instead of once per op: each chunk costs one token,
+        and a chunk arriving on a dry bucket is a **deferral** — it
+        stalls on the deficit (yielding the ICI to other tenants for
+        the stall window) and lands in the tenant's ``throttled``
+        counter before the chunk is issued.  Token semantics are
+        identical to :meth:`on_op_runtime`, so an N-chunk collective is
+        charged exactly what N pipeline-charged ops would be; the
+        issuing chunks are marked ``precharged`` so the token-bucket
+        stage does not double-bill them."""
+        return self.on_op_runtime(x, state, rec, tenant, tenant_idx)
+
+    def governs(self, tenant: str) -> bool:
+        """True if this policy rate-limits ``tenant``."""
+        return bool(self.rates.get(tenant))
+
 
 def default_policies() -> list[Policy]:
     return [TelemetryPolicy()]

@@ -20,7 +20,6 @@ process and converts requested nanoseconds into iterations.
 
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
@@ -82,9 +81,21 @@ def delay_chain_dyn(x: jax.Array, iters: jax.Array) -> jax.Array:
     return tie(x, delay_scalar(jnp.maximum(jnp.asarray(iters, jnp.int32), 0)))
 
 
-@functools.cache
+_CALIBRATION: dict[tuple[str, int], float] = {}   # (backend, iters) -> ns/iter
+
+
 def calibrate(probe_iters: int = 200_000) -> float:
-    """Measure ns per delay_chain iteration on this host."""
+    """Measure ns per delay_chain iteration on this host.
+
+    Memoized per process, keyed on the active JAX backend: repeated
+    measured-mode setup (every ``Dataplane`` with ``emulate_costs``
+    calls this eagerly) reuses the cached slope, and a backend switch
+    within one process (``JAX_PLATFORMS`` juggling in tests) re-probes
+    instead of reusing a stale slope."""
+    key = (jax.default_backend(), probe_iters)
+    hit = _CALIBRATION.get(key)
+    if hit is not None:
+        return hit
     f = jax.jit(lambda x: delay_chain(x, probe_iters))
     x = jnp.zeros((), jnp.float32)
     f(x).block_until_ready()              # compile
@@ -93,10 +104,14 @@ def calibrate(probe_iters: int = 200_000) -> float:
         t0 = time.perf_counter()
         f(x).block_until_ready()
         best = min(best, time.perf_counter() - t0)
-    return best * 1e9 / probe_iters
+    ns = best * 1e9 / probe_iters
+    _CALIBRATION[key] = ns
+    return ns
 
 
 def iters_for_ns(ns: float) -> int:
+    """Requested emulated cost (ns) -> delay iterations, off the cached
+    calibration slope (probe runs at most once per backend)."""
     if ns <= 0:
         return 0
     return max(1, int(ns / calibrate()))

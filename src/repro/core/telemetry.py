@@ -62,6 +62,10 @@ class OpRecord:
     mode: str = "cord"
     qos: str = "default"
     count: int = 1
+    # QoS tokens for this op were already debited at a finer granularity
+    # (chunk-level preemption, core/chunking.py) — the token-bucket
+    # stage must not charge it again.
+    precharged: bool = False
 
 
 @dataclass

@@ -1,0 +1,34 @@
+"""Pallas TPU dataplane kernels — the mediation data-movement
+primitives as real hardware kernels (docs/kernels.md).
+
+* ``bounce.py`` — double-buffered bounce-buffer copy + in-kernel cost
+  accounting kernel (one shared kernel body, two entry points).
+* ``ops.py`` — backend selection (``pallas_dataplane`` auto/on/off)
+  and in-kernel delay calibration.
+
+The XLA oracles these kernels are validated against live in
+``core/techniques.py`` (``staged_copy`` / ``delay_chain``); the
+interpret-mode bit-equivalence tests are
+``tests/test_dataplane_kernels.py``.
+"""
+
+from repro.kernels.dataplane.bounce import (
+    COST_COPIES,
+    COST_ITERS,
+    DEFAULT_CHUNK_ELEMS,
+    NUM_COST_COLS,
+    bounce_copy,
+    mediated_cost,
+)
+from repro.kernels.dataplane.ops import (
+    kernel_calibrate,
+    kernel_iters_for_ns,
+    rescale_iters,
+    use_pallas_dataplane,
+)
+
+__all__ = [
+    "bounce_copy", "mediated_cost", "use_pallas_dataplane",
+    "kernel_calibrate", "kernel_iters_for_ns", "rescale_iters",
+    "DEFAULT_CHUNK_ELEMS", "COST_ITERS", "COST_COPIES", "NUM_COST_COLS",
+]

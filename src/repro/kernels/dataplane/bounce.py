@@ -1,0 +1,237 @@
+"""Pallas TPU dataplane kernels: the mediation data-movement primitives.
+
+The mediation pipeline's ``staged-copy`` stage and fused delay chain were
+XLA-level emulations (``core/techniques.py``): real data movement and
+real serial work, but shaped by what XLA happens to emit.  This module
+implements the same primitives as explicit Pallas TPU kernels, so
+measured-mode mediation cost is a *hardware measurement* — the DMA
+engine moves the payload through a VMEM bounce buffer, and the delay is
+a serial scalar chain executing on the core between the copy-in and the
+copy-out, exactly where the emulated user→kernel crossing sits.
+
+One kernel body serves both entry points:
+
+* :func:`bounce_copy` — the zero-copy-removed bounce-buffer copy.  The
+  payload is chunked; chunk DMAs HBM→VMEM are **double-buffered** over
+  two scratch slots so the copy-in of chunk *i+1* overlaps the copy-out
+  of chunk *i* (the overlapped copy-in/copy-out slots of a real bounce
+  buffer).  Extra ``copies`` bounce the chunk VMEM→VMEM through a third
+  slot — one round trip per extra pass, matching ``staged_copy``'s
+  pass count.
+* :func:`mediated_cost` — the fused-mediation cost kernel: the same
+  copy path plus a calibrated serial delay burned *inside the kernel*
+  between a chunk's copy-in and copy-out, with per-chunk cost counters
+  (iters burned, copy passes) emitted as SMEM scalar outputs.  One
+  launch covers a fused pipeline side's delay chain + staged copies.
+
+Both are **bit-identical** to the emulations they replace: the payload
+is only ever moved, never computed on — availability is delayed by
+routing the chunk head through a select on the delay token (the same
+``tie`` trick as ``core/techniques.py``, in-kernel).
+
+``interpret=True`` (selected automatically off-TPU, pattern per
+``kernels/flash_attention``) runs the kernel body — including the DMAs
+and semaphores — in the Pallas interpreter for validation on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default chunk size through the VMEM bounce buffer, in elements.  At
+# 4 B/elem this is a 32 KiB chunk — small enough that three slots fit
+# comfortably in VMEM, large enough to amortize DMA issue overhead.
+DEFAULT_CHUNK_ELEMS = 8192
+
+# Columns of the per-chunk SMEM cost-counter output.
+COST_ITERS = 0    # delay iterations burned for this chunk
+COST_COPIES = 1   # bounce passes this chunk made through VMEM
+NUM_COST_COLS = 2
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _burn(iters: int, seed):
+    """The serial dependent fma chain from ``techniques.delay_scalar``,
+    executed on the scalar core inside the kernel."""
+    return jax.lax.fori_loop(0, iters,
+                             lambda j, v: v * 1.0000001 + 1e-9, seed)
+
+
+def _tie_slot(scratch, slot, tok):
+    """Route the chunk head through a select on the delay token — the
+    in-kernel mirror of ``techniques.tie``: O(1), bit-identical, and the
+    copy-out cannot be reordered before the burn."""
+    head = scratch[slot, 0]
+    scratch[slot, 0] = jnp.where(tok == tok, head, head + 1)
+
+
+def _bounce_kernel(x_hbm, o_hbm, ctr_ref, *, chunk: int, n_full: int,
+                   tail: int, copies: int, iters_per_chunk: int):
+    """Double-buffered bounce-buffer copy with in-kernel cost accounting.
+
+    scratch slots 0/1 double-buffer the HBM↔VMEM chunk DMAs; slot 2 is
+    the extra-pass bounce target.  ``ctr_ref`` is the (n_chunks, 2) SMEM
+    per-chunk cost output."""
+
+    def body(scratch, in_sem, out_sem, pass_sem):
+        def dma_in(slot, i):
+            return pltpu.make_async_copy(
+                x_hbm.at[pl.ds(i * chunk, chunk)], scratch.at[slot, :chunk],
+                in_sem.at[slot])
+
+        def dma_out(slot, i):
+            return pltpu.make_async_copy(
+                scratch.at[slot, :chunk], o_hbm.at[pl.ds(i * chunk, chunk)],
+                out_sem.at[slot])
+
+        def extra_passes(slot, width):
+            # each extra copy is one full round trip through the bounce
+            # slot: VMEM slot -> slot 2 -> slot, two real data movements
+            # per pass, like the roll/roll-back pair in staged_copy.
+            for _ in range(copies - 1):
+                d = pltpu.make_async_copy(scratch.at[slot, :width],
+                                          scratch.at[2, :width], pass_sem)
+                d.start()
+                d.wait()
+                d = pltpu.make_async_copy(scratch.at[2, :width],
+                                          scratch.at[slot, :width], pass_sem)
+                d.start()
+                d.wait()
+
+        if n_full:
+            dma_in(0, 0).start()
+
+            def loop(i, _):
+                slot = i % 2
+
+                @pl.when(i + 1 < n_full)
+                def _prefetch():
+                    dma_in((i + 1) % 2, i + 1).start()
+
+                dma_in(slot, i).wait()
+                extra_passes(slot, chunk)
+                tok = _burn(iters_per_chunk, jnp.float32(1.0))
+                live = (tok == tok).astype(jnp.int32)
+                _tie_slot(scratch, slot, tok)
+                ctr_ref[i, COST_ITERS] = iters_per_chunk * live
+                ctr_ref[i, COST_COPIES] = copies
+                out = dma_out(slot, i)
+                out.start()
+                out.wait()
+                return 0
+
+            jax.lax.fori_loop(0, n_full, loop, 0)
+
+        if tail:
+            # the ragged tail chunk rides through slot 0 after the
+            # double-buffered full chunks have drained
+            d = pltpu.make_async_copy(
+                x_hbm.at[pl.ds(n_full * chunk, tail)],
+                scratch.at[0, :tail], in_sem.at[0])
+            d.start()
+            d.wait()
+            extra_passes(0, tail)
+            tok = _burn(iters_per_chunk, jnp.float32(1.0))
+            live = (tok == tok).astype(jnp.int32)
+            _tie_slot(scratch, 0, tok)
+            ctr_ref[n_full, COST_ITERS] = iters_per_chunk * live
+            ctr_ref[n_full, COST_COPIES] = copies
+            d = pltpu.make_async_copy(
+                scratch.at[0, :tail],
+                o_hbm.at[pl.ds(n_full * chunk, tail)], out_sem.at[0])
+            d.start()
+            d.wait()
+
+    pl.run_scoped(
+        body,
+        scratch=pltpu.VMEM((3, chunk), x_hbm.dtype),
+        in_sem=pltpu.SemaphoreType.DMA((2,)),
+        out_sem=pltpu.SemaphoreType.DMA((2,)),
+        pass_sem=pltpu.SemaphoreType.DMA(()),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("copies", "delay_iters", "chunk_elems", "interpret"))
+def _bounce_fwd(flat, *, copies: int, delay_iters: int, chunk_elems: int,
+                interpret: bool):
+    """Launch the bounce kernel over a flat payload.  Returns
+    ``(out, counters)`` with counters ``(n_chunks, 2)`` int32 from SMEM."""
+    n = flat.shape[0]
+    chunk = max(1, min(chunk_elems, n))
+    n_full, tail = divmod(n, chunk)
+    n_chunks = n_full + (1 if tail else 0)
+    # total delay split evenly across chunks, rounded up: the kernel
+    # burns at least the requested iterations (counters report actuals).
+    iters_per_chunk = -(-delay_iters // n_chunks) if delay_iters > 0 else 0
+    kernel = functools.partial(
+        _bounce_kernel, chunk=chunk, n_full=n_full, tail=tail,
+        copies=copies, iters_per_chunk=iters_per_chunk)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=(pl.BlockSpec(memory_space=pltpu.ANY),
+                   pl.BlockSpec(memory_space=pltpu.SMEM)),
+        out_shape=(jax.ShapeDtypeStruct((n,), flat.dtype),
+                   jax.ShapeDtypeStruct((n_chunks, NUM_COST_COLS),
+                                        jnp.int32)),
+        interpret=interpret,
+    )(flat)
+
+
+def _launch(x, *, copies: int, delay_iters: int, chunk_elems: int,
+            interpret: bool | None):
+    if interpret is None:
+        interpret = not _is_tpu()
+    flat = x.reshape(-1)
+    out, ctrs = _bounce_fwd(flat, copies=int(copies),
+                            delay_iters=int(delay_iters),
+                            chunk_elems=int(chunk_elems),
+                            interpret=bool(interpret))
+    return out.reshape(x.shape), ctrs
+
+
+def bounce_copy(x: jax.Array, copies: int = 1, *,
+                chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+                interpret: bool | None = None) -> jax.Array:
+    """``copies`` real bounce-buffer passes of ``x`` through VMEM.
+
+    Drop-in for ``techniques.staged_copy``: bit-identical output, but
+    the copies are explicit double-buffered DMA transfers instead of an
+    XLA roll/barrier emulation.  ``copies <= 0`` is the identity."""
+    if copies <= 0 or x.size == 0:
+        return x
+    out, _ = _launch(x, copies=copies, delay_iters=0,
+                     chunk_elems=chunk_elems, interpret=interpret)
+    return out
+
+
+def mediated_cost(x: jax.Array, delay_iters: int, copies: int = 0, *,
+                  chunk_elems: int = DEFAULT_CHUNK_ELEMS,
+                  interpret: bool | None = None):
+    """One kernel launch covering a fused mediation side's cost: burn
+    ``delay_iters`` of serial work in-kernel and make ``copies`` bounce
+    passes, returning ``(out, counters)``.
+
+    ``out`` is bit-identical to ``x`` (``delay_chain`` tie semantics:
+    availability is delayed, values never touched).  ``counters`` is the
+    per-chunk ``(n_chunks, 2)`` int32 SMEM cost output — column
+    ``COST_ITERS`` sums to at least ``delay_iters`` (even split, rounded
+    up), column ``COST_COPIES`` is the pass count per chunk."""
+    if (delay_iters <= 0 and copies <= 0) or x.size == 0:
+        return x, jnp.zeros((1, NUM_COST_COLS), jnp.int32)
+    return _launch(x, copies=copies, delay_iters=delay_iters,
+                   chunk_elems=chunk_elems, interpret=interpret)
+
+
+__all__ = ["bounce_copy", "mediated_cost", "DEFAULT_CHUNK_ELEMS",
+           "COST_ITERS", "COST_COPIES", "NUM_COST_COLS"]

@@ -1,0 +1,100 @@
+"""Backend selection + calibration for the Pallas dataplane kernels.
+
+The mediation pipeline asks this module two questions:
+
+* :func:`use_pallas_dataplane` — should this dataplane run the real
+  Pallas kernels?  ``"auto"`` (the default) says yes only on TPU, where
+  the kernels are hardware measurements; off-TPU the XLA emulations are
+  both faster and what the interpret-mode tests validate against.
+  ``"on"`` forces the kernels everywhere (interpret mode off-TPU — the
+  bit-equivalence test path); ``"off"`` keeps the XLA emulation.
+
+* :func:`kernel_iters_for_ns` — how many *in-kernel* delay iterations
+  equal a requested wall-clock cost.  The scalar-core fma chain inside
+  a Pallas kernel does not retire at the same rate as the XLA
+  ``delay_chain`` loop, so reusing ``techniques.calibrate()``'s slope
+  would silently rescale every emulated cost when the kernels switch
+  on.  :func:`kernel_calibrate` measures the in-kernel slope once per
+  process per backend (same memoization discipline as
+  ``techniques.calibrate``); off-TPU it falls back to the XLA slope so
+  interpret-mode runs keep iteration counts comparable with the
+  emulation they are checked against.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import techniques as tech
+from repro.kernels.dataplane.bounce import bounce_copy, mediated_cost
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas_dataplane(setting: str | bool) -> bool:
+    """Resolve a ``DataplaneConfig.pallas_dataplane`` setting to a bool."""
+    if isinstance(setting, bool):
+        return setting
+    if setting == "auto":
+        return _is_tpu()
+    if setting in ("on", "true", "1"):
+        return True
+    if setting in ("off", "false", "0"):
+        return False
+    raise ValueError(
+        f"pallas_dataplane must be auto/on/off, got {setting!r}")
+
+
+_KERNEL_CALIBRATION: dict[str, float] = {}   # backend -> ns per iter
+
+
+def kernel_calibrate(probe_iters: int = 200_000) -> float:
+    """ns per in-kernel delay iteration on this backend (memoized).
+
+    Only measured on TPU, where the kernel path is live; elsewhere the
+    XLA slope is reused (interpret-mode kernels are correctness
+    artifacts, not timing sources)."""
+    backend = jax.default_backend()
+    hit = _KERNEL_CALIBRATION.get(backend)
+    if hit is not None:
+        return hit
+    if not _is_tpu():
+        ns = tech.calibrate()
+    else:
+        x = jnp.zeros((256,), jnp.float32)
+        f = jax.jit(lambda v: mediated_cost(v, probe_iters)[0])
+        f(x).block_until_ready()          # compile
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            f(x).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        ns = best * 1e9 / probe_iters
+    _KERNEL_CALIBRATION[backend] = ns
+    return ns
+
+
+def kernel_iters_for_ns(ns: float) -> int:
+    """Requested emulated cost (ns) -> in-kernel delay iterations."""
+    if ns <= 0:
+        return 0
+    return max(1, int(ns / kernel_calibrate()))
+
+
+def rescale_iters(xla_iters: int) -> int:
+    """Convert a stage's XLA-calibrated iteration count to the in-kernel
+    count burning the same wall-clock time.  Identity off-TPU (both
+    slopes read the same calibration)."""
+    if xla_iters <= 0:
+        return 0
+    ratio = tech.calibrate() / kernel_calibrate()
+    return max(1, int(round(xla_iters * ratio)))
+
+
+__all__ = ["bounce_copy", "mediated_cost", "use_pallas_dataplane",
+           "kernel_calibrate", "kernel_iters_for_ns", "rescale_iters"]
