@@ -16,6 +16,11 @@ mode matrix:
           runtime's stall/credit/completion/CQ-depth counters per row.
   credits — flow-control ablation: credit-starved senders stall and
           resume; delivery stays complete and bit-identical.
+  churn  — connection churn: rounds of shared-CQ/SRQ connection tables
+          (verbs.conn_send) created, driven under injected wire loss,
+          live-migrated mid-transfer onto a second mesh and torn down —
+          ≥100 QPs total, every transfer bit-identical to lossless
+          (docs/transport.md).
 
 Cost scaling (EXPERIMENTS.md §Perftest): the CPU collective baseline is
 ~50× slower than real RDMA, so emulated mediation costs are calibrated as
@@ -204,10 +209,13 @@ def throughput(mesh, dp_c, dp_s, msg_bytes, *, window=64, iters=5,
 
 def build_windowed(mesh, dp_client: Dataplane, dp_server: Dataplane,
                    msg_bytes: int, n_msgs: int, window: int,
-                   transport="RC", op="send", credits: int | None = None):
+                   transport="RC", op="send", credits: int | None = None,
+                   fault=None):
     """Compile one windowed transfer through ``verbs.windowed_send``: the
     real CQ runtime (sender window, credit flow control, per-CQE drains),
-    with runtime counters threaded and psum-aggregated per connection."""
+    with runtime counters threaded and psum-aggregated per connection.
+    ``fault`` (a :class:`~repro.runtime.fault.WireFault`) injects wire
+    loss and arms the go-back-N retransmission machine."""
     cfg = verbs.QPConfig(transport=transport, msg_bytes=msg_bytes,
                          depth=max(window, 2), max_outstanding=window)
     credits = n_msgs if credits is None else credits
@@ -220,7 +228,7 @@ def build_windowed(mesh, dp_client: Dataplane, dp_server: Dataplane,
                                      n=credits, state=rt)
         out, qp, rt = verbs.windowed_send(dp_client, cfg, qp, msgs[0], rank,
                                           src=0, dst=1, op=op, state=rt,
-                                          dp_peer=dp_server)
+                                          dp_peer=dp_server, fault=fault)
         rt = verbs.allreduce_state(rt)
         return (out[None], (qp["win_hwm"], qp["cq_hwm"], qp["cq_sent"]), rt)
 
@@ -275,6 +283,119 @@ def build_migratable(mesh, dp: Dataplane, msg_bytes: int, window: int,
                                        in_specs=(qspec, P()),
                                        out_specs=(qspec, P())))
     return {"init": init, "xfer": xfer, "quiesce": quiesce, "cfg": cfg}
+
+
+def build_conn_parts(mesh, dp: Dataplane, cfg, num_qps: int, *,
+                     tenants=None, fault=None, credits: int = 0):
+    """Jitted pieces of a migratable *connection table* (the
+    :func:`build_migratable` analogue for the shared-CQ/SRQ transport):
+    ``init(rt)`` builds the table (granting ``credits`` SRQ buffers),
+    ``xfer(msgs, conn, rt)`` drives one ``verbs.conn_send`` batch —
+    optionally through an injected :class:`WireFault` — and
+    ``quiesce(conn, rt)`` drains the shared CQ to a migratable snapshot
+    with per-QP retransmission state preserved (docs/transport.md)."""
+    cspec = verbs.conn_specs()
+
+    def init_body(rt):
+        rank = jax.lax.axis_index("rank")
+        conn = verbs.conn_init(cfg, num_qps)
+        if credits:
+            conn, rt = verbs.srq_post(dp, cfg, conn, rank, dst=1,
+                                      n=credits, state=rt)
+        return conn, verbs.allreduce_state(rt)
+
+    def xfer_body(msgs, conn, rt):
+        rank = jax.lax.axis_index("rank")
+        out, conn, rt = verbs.conn_send(dp, cfg, conn, msgs[0], rank,
+                                        src=0, dst=1, state=rt,
+                                        tenants=tenants, fault=fault)
+        return out[None], conn, verbs.allreduce_state(rt)
+
+    def quiesce_body(conn, rt):
+        rank = jax.lax.axis_index("rank")
+        conn, rt = verbs.conn_quiesce(dp, cfg, conn, rank, src=0,
+                                      state=rt, tenants=tenants)
+        return conn, verbs.allreduce_state(rt)
+
+    init = jax.jit(compat.shard_map(init_body, mesh=mesh, in_specs=(P(),),
+                                    out_specs=(cspec, P())))
+    xfer = jax.jit(compat.shard_map(
+        xfer_body, mesh=mesh,
+        in_specs=(P("rank", None, None, None), cspec, P()),
+        out_specs=(P("rank", None, None, None), cspec, P())))
+    quiesce = jax.jit(compat.shard_map(quiesce_body, mesh=mesh,
+                                       in_specs=(cspec, P()),
+                                       out_specs=(cspec, P())))
+    return {"init": init, "xfer": xfer, "quiesce": quiesce}
+
+
+def connection_churn(mesh_a, mesh_b=None, preset: "CostPreset | None" = None,
+                     *, rounds=13, qps=8, n_msgs=4, msg_bytes=256, window=4,
+                     drop_rate=0.1, corrupt_rate=0.05, emulate=True,
+                     table="churn"):
+    """Connection-churn sweep: ``rounds`` × ``qps`` connection tables
+    (≥100 QPs at the defaults) are created, driven under injected wire
+    loss, live-migrated *mid-transfer* onto a second mesh (quiesce →
+    stop-and-copy → restore), completed there and torn down.  Every
+    round asserts the combined delivery is bit-identical to the lossless
+    payload — injected loss is non-terminal — and reports the table's
+    retransmit/timeout/SRQ-grant counters.  Shapes are constant across
+    rounds, so the compiled init/xfer/quiesce executables are reused."""
+    from repro.runtime.fault import WireFault
+
+    if mesh_b is None:
+        devs = jax.devices()
+        mesh_b = compat.make_mesh((2,), ("rank",), devices=devs[2:4]) \
+            if len(devs) >= 4 else mesh_a
+    kw = {} if preset is None else dict(syscall_ns=preset.syscall_ns,
+                                        interrupt_us=preset.interrupt_us)
+    dp_a = _dp("cord", emulate=emulate, mesh=mesh_a, **kw)
+    dp_b = _dp("cord", emulate=emulate, mesh=mesh_b, **kw)
+    cfg = verbs.QPConfig(msg_bytes=msg_bytes, depth=max(window, 2),
+                         max_outstanding=window)
+    fault = WireFault(drop_rate=drop_rate, corrupt_rate=corrupt_rate, seed=9)
+    pa = build_conn_parts(mesh_a, dp_a, cfg, qps, fault=fault,
+                          credits=qps * n_msgs * 2)
+    pb = build_conn_parts(mesh_b, dp_b, cfg, qps, fault=fault)
+    k = n_msgs // 2
+    rows, churned = [], 0
+    retrans = timeouts = grants = 0
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        rng = np.random.default_rng(1000 + rnd)
+        payload = rng.integers(0, 256, (qps, n_msgs, msg_bytes),
+                               dtype=np.uint8)
+        msgs = jnp.asarray(np.stack([payload, np.zeros_like(payload)]))
+        conn, _ = pa["init"](dp_a.runtime_init())
+        out1, conn, _ = pa["xfer"](msgs[:, :, :k], conn,
+                                   dp_a.runtime_init())
+        conn, _ = pa["quiesce"](conn, dp_a.runtime_init())
+        snap = verbs.conn_snapshot(conn)
+        assert int(snap["cq_head"] - snap["cq_tail"]) == 0, \
+            "shared CQ not quiesced"
+        conn_b = verbs.conn_restore(snap, mesh_b)
+        out2, conn_b, rt = jax.block_until_ready(
+            pb["xfer"](msgs[:, :, k:], conn_b, dp_b.runtime_init()))
+        moved = np.concatenate([np.asarray(out1)[1], np.asarray(out2)[1]],
+                               axis=1)
+        np.testing.assert_array_equal(
+            moved, payload,
+            err_msg=f"churn round {rnd}: lossy transfer not bit-identical")
+        final = verbs.conn_snapshot(conn_b)
+        retrans += int(final["retransmits"].sum())
+        timeouts += int(final["timeouts"].sum())
+        grants += int(final["srq_grants"].sum())
+        churned += qps
+        del conn, conn_b, snap, final                 # teardown
+    dt = time.perf_counter() - t0
+    rows.append({"table": table, "rounds": rounds, "qps_per_round": qps,
+                 "qps_churned": churned, "bytes": msg_bytes,
+                 "msgs_per_qp": n_msgs, "drop_rate": drop_rate,
+                 "corrupt_rate": corrupt_rate, "bit_identical": True,
+                 "retransmits": retrans, "timeouts": timeouts,
+                 "srq_grants": grants,
+                 "rounds_per_s": round(rounds / dt, 2)})
+    return rows
 
 
 def windowed_throughput(mesh, dp_c, dp_s, msg_bytes, *, window, n_msgs=32,
@@ -494,6 +615,9 @@ def run_all(fast: bool = False):
     windows = (1, 4, 16) if fast else (1, 2, 4, 8, 16)
     rows += window_sweep(mesh, presets["L"], sizes=wsizes, windows=windows)
     rows += credit_ablation(mesh, presets["L"])
+    # connection churn: ≥100 QPs through create/migrate/teardown under
+    # injected wire loss, every transfer bit-identical to lossless
+    rows += connection_churn(mesh, preset=presets["L"])
     # fig5 = system A preset
     rows += fig3(mesh, presets["A"], table="fig5_lat")
     rows += fig4(mesh, presets["A"], sizes, table="fig5_bw")
@@ -517,6 +641,14 @@ def dry_run() -> None:
         if row["rx_credits"] < 8:
             assert row["stalls"] > 0, "credit starvation produced no stalls"
         assert row["completions"] == 8, "not every message completed"
+    # connection churn under wire loss: the full ≥100-QP sweep runs with
+    # costs off, so it stays CI-fast; connection_churn asserts every
+    # migrated lossy transfer is bit-identical internally
+    for row in connection_churn(mesh, emulate=False, msg_bytes=64,
+                                table="churn_dryrun"):
+        print(json.dumps(row))
+        assert row["qps_churned"] >= 100, row
+        assert row["retransmits"] > 0, "wire loss injected nothing"
     print("perftest dry-run ok")
 
 
@@ -526,7 +658,8 @@ if __name__ == "__main__":
 
     from benchmarks._bootstrap import ensure_host_devices
 
-    ensure_host_devices(2, module="benchmarks.perftest")
+    # 4 host devices: the churn sweep migrates tables onto a second mesh
+    ensure_host_devices(4, module="benchmarks.perftest")
     if "--dry-run" in sys.argv:
         dry_run()
     else:

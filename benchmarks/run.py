@@ -96,6 +96,7 @@ def dry_run() -> None:
 
     elastic_smoke()
     bounce_smoke()
+    transport_smoke()
 
     for row in npb.run_all(benches=("EP",), modes=("bypass", "cord")):
         print(json.dumps(row))
@@ -202,6 +203,68 @@ def elastic_smoke() -> None:
                       "events": kinds}))
 
 
+def transport_smoke() -> None:
+    """PR-7 acceptance smoke (docs/transport.md): injected wire loss is
+    *non-terminal* — a windowed transfer through the go-back-N
+    retransmission machine delivers bit-identically to its lossless twin,
+    the retries/timeouts land in the tenant counters and the timeline's
+    ``retrans_s``/``timeouts_s`` rate series, and a connection-churn
+    round live-migrates a lossy shared-CQ table bit-identically."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks import perftest
+    from repro.core.obs import CounterTimeline
+    from repro.runtime.fault import WireFault
+
+    n_msgs, msg_bytes, window = 8, 1024, 4
+    mesh2 = perftest.make_mesh2()
+    dp = perftest._dp("cord", emulate=True, mesh=mesh2)
+    payload = np.arange(n_msgs * msg_bytes, dtype=np.uint8) \
+        .reshape(n_msgs, msg_bytes)
+    msgs = jnp.asarray(np.stack([payload, np.zeros_like(payload)]))
+    fault = WireFault(drop_rate=0.2, corrupt_rate=0.1, seed=5)
+
+    clean, _ = perftest.build_windowed(mesh2, dp, dp, msg_bytes, n_msgs,
+                                       window)
+    lossy, _ = perftest.build_windowed(mesh2, dp, dp, msg_bytes, n_msgs,
+                                       window, fault=fault)
+    out0, _, _ = jax.block_until_ready(clean(msgs, dp.runtime_init()))
+    out1, _, rt = jax.block_until_ready(lossy(msgs, dp.runtime_init()))
+    np.testing.assert_array_equal(
+        np.asarray(out1)[1], np.asarray(out0)[1],
+        err_msg="lossy windowed transfer is not bit-identical to lossless")
+    np.testing.assert_array_equal(np.asarray(out1)[1], payload)
+    rep = dp.runtime_report(rt)[dp.tenant]
+    assert rep["retransmits"] > 0, rep
+    assert rep["retransmits"] + rep["timeouts"] + rep["cqe_errors"] > 0
+
+    # the fault series is a first-class timeline rate
+    timeline = CounterTimeline(source="transport-smoke")
+    timeline.snapshot(0, dp.runtime_report(dp.runtime_init()))
+    timeline.snapshot(1, dp.runtime_report(rt))
+    rates = timeline.rates()[dp.tenant]
+    assert rates["retrans_s"][-1] > 0, rates
+    path = timeline.save("runs/transport_timeline.json")
+    CounterTimeline.load(path)                    # schema validation
+
+    # mini churn: lossy tables created → migrated mid-transfer → torn
+    # down (the ≥100-QP sweep is perftest --dry-run's churn_dryrun table)
+    (row,) = perftest.connection_churn(mesh2, rounds=2, qps=8,
+                                       msg_bytes=64, emulate=False,
+                                       table="churn_smoke")
+    assert row["bit_identical"] and row["qps_churned"] == 16, row
+    print(json.dumps({"table": "dryrun",
+                      "lossy_vs_lossless": "bit-identical",
+                      "retransmits": rep["retransmits"],
+                      "timeouts": rep["timeouts"],
+                      "cqe_errors": rep["cqe_errors"],
+                      "retrans_s_last": round(rates["retrans_s"][-1], 2),
+                      "transport_timeline": path}))
+    print(json.dumps(row))
+
+
 def bounce_smoke() -> None:
     """PR-6 acceptance smoke (docs/kernels.md): the Pallas dataplane
     kernels are bit-identical to the XLA emulation they replace — the
@@ -234,6 +297,12 @@ def bounce_smoke() -> None:
 
 
 def main() -> None:
+    if "--transport-smoke" in sys.argv:
+        # the PR-7 acceptance gate, runnable standalone (ci.yml step):
+        # wire loss must be non-terminal and bit-identical on delivery
+        transport_smoke()
+        print("transport smoke ok")
+        return
     if "--dry-run" in sys.argv:
         dry_run()
         return
@@ -287,6 +356,11 @@ def main() -> None:
             print(f"credits/{r['bytes']}B/w{r['window']}/"
                   f"c{r['rx_credits']},,gbps={r['gbps']} "
                   f"stalls={r['stalls']}")
+        elif tab == "churn":
+            print(f"churn/{r['qps_churned']}qp/"
+                  f"drop{r['drop_rate']},,retrans={r['retransmits']} "
+                  f"timeouts={r['timeouts']} "
+                  f"bit_identical={r['bit_identical']}")
         elif tab == "serve":
             print(f"serve/{r['scheduler']}/q{r['queue_depth']},,"
                   f"tok_s={r['tok_s']} ttft_ms={r['ttft_ms_mean']} "

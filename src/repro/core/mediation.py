@@ -49,6 +49,8 @@ counter.
 
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core import techniques as tech
 from repro.core import telemetry as tl
 from repro.core.policies import Policy, QoSPolicy, QuotaPolicy
@@ -266,19 +268,53 @@ class MediationPipeline:
     def stage_names(self) -> tuple[str, ...]:
         return tuple(s.name for s in self.stages)
 
-    def _fused_side(self, x, rec, state, tenant_idx, side: str):
+    def _pure_cost(self, rec, side: str) -> tuple[int, int]:
         iters = sum(getattr(s, f"{side}_delay_iters")(rec)
                     for s in self.stages if not s.stateful)
         copies = sum(getattr(s, f"{side}_copies")(rec)
                      for s in self.stages if not s.stateful)
+        return iters, copies
+
+    def _kernel_ctr_bump(self, state, tenant_idx, kernel_iters,
+                         kernel_copies):
+        """Land a side's in-kernel cost work in the tenant counter block
+        (``kernel_iters``/``kernel_copies``)."""
+        if state is None or "counters" not in state:
+            return state
+        ctrs = tl.tenant_counters_bump(state["counters"], tenant_idx,
+                                       kernel_iters=kernel_iters,
+                                       kernel_copies=kernel_copies)
+        return {**state, "counters": ctrs}
+
+    def _static_cost_bump(self, x, rec, state, tenant_idx, side: str):
+        """The XLA-emulation (and unfused) half of the kernel-cost
+        accounting: bump the totals the cost kernel's SMEM counters
+        *would* sum to for this payload, so reports are bit-identical
+        across pallas on/off and fused/unfused."""
+        iters, copies = self._pure_cost(rec, side)
+        if not (iters or copies) or state is None or "counters" not in state:
+            return state
+        from repro.kernels.dataplane import kernel_cost_totals
+        kit, kcp = kernel_cost_totals(x.size, iters, copies)
+        return self._kernel_ctr_bump(state, tenant_idx, kit, kcp)
+
+    def _fused_side(self, x, rec, state, tenant_idx, side: str):
+        iters, copies = self._pure_cost(rec, side)
         if self.pallas and (iters or copies):
             from repro.kernels import dataplane as dk
-            x, _ = dk.mediated_cost(x, dk.rescale_iters(iters), copies)
+            x, kctrs = dk.mediated_cost(x, dk.rescale_iters(iters), copies)
+            # the per-chunk SMEM cost counters, summed into the tenant
+            # block: what the hardware actually burned/copied
+            state = self._kernel_ctr_bump(
+                state, tenant_idx,
+                jnp.sum(kctrs[:, dk.COST_ITERS]),
+                jnp.sum(kctrs[:, dk.COST_COPIES]))
         else:
             if iters:
                 x = tech.delay_chain(x, iters)
             if copies:
                 x = tech.staged_copy(x, copies=copies)
+            state = self._static_cost_bump(x, rec, state, tenant_idx, side)
         for s in self.stages:
             if s.stateful:
                 x, state = getattr(s, side)(x, rec, state, tenant_idx)
@@ -289,20 +325,27 @@ class MediationPipeline:
             return self._fused_side(x, rec, state, tenant_idx, "send")
         for s in self.stages:
             x, state = s.send(x, rec, state, tenant_idx)
-        return x, state
+        return x, self._static_cost_bump(x, rec, state, tenant_idx, "send")
 
     def complete(self, x, rec: tl.OpRecord, state=None, tenant_idx: int = 0):
         if self.fused:
             return self._fused_side(x, rec, state, tenant_idx, "complete")
         for s in self.stages:
             x, state = s.complete(x, rec, state, tenant_idx)
-        return x, state
+        return x, self._static_cost_bump(x, rec, state, tenant_idx,
+                                         "complete")
 
     def send_delay_iters(self, rec: tl.OpRecord) -> int:
         return sum(s.send_delay_iters(rec) for s in self.stages)
 
     def complete_delay_iters(self, rec: tl.OpRecord) -> int:
         return sum(s.complete_delay_iters(rec) for s in self.stages)
+
+    def send_copies(self, rec: tl.OpRecord) -> int:
+        return sum(s.send_copies(rec) for s in self.stages)
+
+    def complete_copies(self, rec: tl.OpRecord) -> int:
+        return sum(s.complete_copies(rec) for s in self.stages)
 
     def __repr__(self) -> str:
         fused = "" if self.fused else " unfused"

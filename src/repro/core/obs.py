@@ -59,8 +59,13 @@ TIMELINE_SCHEMA = "cord-timeline/v2"
 TIMELINE_SCHEMAS = (TIMELINE_SCHEMA_V1, TIMELINE_SCHEMA)
 
 # Derived per-window rate series (docs/observability.md for semantics).
+# retrans_s/timeouts_s/srq_grants_s are the transport's fault-visibility
+# series (docs/transport.md); cqe_err_pct is error CQEs as a share of the
+# window's completions.  Older artifacts list fewer fields —
+# validate_timeline checks a document against its OWN rate_fields list.
 RATE_FIELDS = ("ops_s", "bytes_s", "chunks_s", "throttled_pct",
-               "stalls_pct", "denied_pct", "cq_depth")
+               "stalls_pct", "denied_pct", "cq_depth",
+               "retrans_s", "timeouts_s", "srq_grants_s", "cqe_err_pct")
 
 _SPARK_BLOCKS = "▁▂▃▄▅▆▇█"
 
@@ -253,6 +258,7 @@ class CounterTimeline:
                  for c in self.counter_names}
             ops = d.get("ops", 0.0)
             pct = (lambda n: 100.0 * n / ops if ops > 0 else 0.0)
+            comp = d.get("completions", 0.0)
             out[tn] = {
                 "ops_s": ops / dt,
                 "bytes_s": d.get("bytes", 0.0) / dt,
@@ -263,6 +269,11 @@ class CounterTimeline:
                 # cq_depth is a high-water mark, not additive: report the
                 # level at the window's close.
                 "cq_depth": self._value(cur, tn, "cq_depth"),
+                "retrans_s": d.get("retransmits", 0.0) / dt,
+                "timeouts_s": d.get("timeouts", 0.0) / dt,
+                "srq_grants_s": d.get("srq_grants", 0.0) / dt,
+                "cqe_err_pct": (100.0 * d.get("cqe_errors", 0.0) / comp
+                                if comp > 0 else 0.0),
             }
         return out
 

@@ -243,6 +243,54 @@ class QoSPolicy(Policy):
         """True if this policy rate-limits ``tenant``."""
         return bool(self.rates.get(tenant))
 
+    # ---- connection-table plane (core/verbs.py conn_send) ---------------
+    # The multi-QP transport arbitrates post order across tenants' QPs
+    # with this same bucket, but the winning QP is picked *inside traced
+    # code*, so the tenant index is a traced scalar — the static
+    # on_op_runtime hook cannot serve it.
+
+    def rates_for(self, tenants: tuple[str, ...]) -> tuple[float, ...]:
+        """Static per-QP refill rates (0.0 = ungoverned) in QP order —
+        the host-side half of the connection table's arbitration."""
+        return tuple(float(self.rates.get(t) or 0.0) for t in tenants)
+
+    def arb_scores(self, state, tenant_idx_arr, rates_arr):
+        """Tokens-after-refill per QP, the arbitration score ``conn_send``
+        ranks posts by.  Ungoverned QPs (rate 0) score above any governed
+        bucket so QoS only ever *demotes* governed tenants.  Reads the
+        same ``state["qos"]["tokens"]`` the token-bucket stage debits."""
+        tokens = state[self.name]["tokens"]
+        tk = jnp.minimum(tokens[tenant_idx_arr] + rates_arr,
+                         float(self.burst))
+        return jnp.where(rates_arr > 0, tk, float(self.burst) + 1.0)
+
+    def charge_wr(self, state, tenant_idx, rate, mask, bump_mask=None):
+        """Token-bucket refill + debit for one arbitrated WR at a *traced*
+        tenant index.  ``mask`` gates the token update (applied on every
+        rank — the bucket is connection state for the arbitration loop, so
+        it must stay SPMD-uniform); ``bump_mask`` additionally gates the
+        ``throttled`` counter bump (runtime state, active rank only).
+        No stall is emulated: arbitration already prefers token-rich QPs,
+        a dry winner is just accounted."""
+        if state is None or self.name not in state:
+            return state
+        governed = jnp.asarray(rate) > 0
+        m = jnp.asarray(mask) & governed
+        tokens = state[self.name]["tokens"]
+        tk = jnp.minimum(tokens[tenant_idx] + rate, float(self.burst))
+        ok = tk >= 1.0
+        new_tk = jnp.where(ok, tk - 1.0, 0.0)
+        tokens = tokens.at[tenant_idx].set(
+            jnp.where(m, new_tk, tokens[tenant_idx]))
+        state = {**state, self.name: {"tokens": tokens}}
+        bm = m if bump_mask is None else (m & jnp.asarray(bump_mask))
+        if "counters" in state:
+            ctrs = tl.tenant_counters_bump(
+                state["counters"], tenant_idx,
+                throttled=(bm & ~ok).astype(jnp.float32))
+            state = {**state, "counters": ctrs}
+        return state
+
 
 def default_policies() -> list[Policy]:
     return [TelemetryPolicy()]

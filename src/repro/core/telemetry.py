@@ -46,9 +46,18 @@ CTR_STALLS = 5       # sender ticks stalled on exhausted rx credits (verbs)
 CTR_CREDITS = 6      # rx credits consumed by two-sided sends (verbs)
 CTR_COMPLETIONS = 7  # CQEs drained from a completion queue (verbs)
 CTR_CQ_DEPTH = 8     # CQ occupancy high-water mark (a peak, not a sum)
-NUM_COUNTERS = 9
+CTR_RETRANSMITS = 9  # WRs re-posted by the retransmission machine (verbs)
+CTR_TIMEOUTS = 10    # RTO expiries (silent wire loss detected) (verbs)
+CTR_SRQ_GRANTS = 11  # shared-receive-queue buffers granted to a delivery
+CTR_CQE_ERRORS = 12  # error-status CQEs drained (CQE_ERR_*)
+CTR_CQ_SHED = 13     # CQEs shed on CQ-ring overrun (lost completions)
+CTR_KERNEL_ITERS = 14   # delay iterations burned in-kernel (mediated_cost)
+CTR_KERNEL_COPIES = 15  # bounce-copy passes executed in-kernel
+NUM_COUNTERS = 16
 COUNTER_NAMES = ("ops", "bytes", "denied", "chunks", "throttled",
-                 "stalls", "credits", "completions", "cq_depth")
+                 "stalls", "credits", "completions", "cq_depth",
+                 "retransmits", "timeouts", "srq_grants", "cqe_errors",
+                 "cq_shed", "kernel_iters", "kernel_copies")
 
 
 @dataclass
@@ -119,20 +128,29 @@ def counters_init() -> jax.Array:
 
 
 def _counter_row(ops, bytes, denied, chunks, throttled, stalls, credits,
-                 completions) -> jax.Array:
+                 completions, retransmits=0, timeouts=0, srq_grants=0,
+                 cqe_errors=0, cq_shed=0, kernel_iters=0,
+                 kernel_copies=0) -> jax.Array:
     # CQ depth is a high-water mark, never additive — it has no slot in the
     # bump row (see tenant_counters_peak) and stays 0 here.
     return jnp.stack([jnp.asarray(v, jnp.float32)
                       for v in (ops, bytes, denied, chunks, throttled,
-                                stalls, credits, completions, 0)])
+                                stalls, credits, completions, 0,
+                                retransmits, timeouts, srq_grants,
+                                cqe_errors, cq_shed, kernel_iters,
+                                kernel_copies)])
 
 
 def counters_bump(ctrs: jax.Array, *, ops=0, bytes=0, denied=0, chunks=0,
-                  throttled=0, stalls=0, credits=0, completions=0) -> jax.Array:
+                  throttled=0, stalls=0, credits=0, completions=0,
+                  retransmits=0, timeouts=0, srq_grants=0, cqe_errors=0,
+                  cq_shed=0, kernel_iters=0, kernel_copies=0) -> jax.Array:
     """Return updated counters. This is the per-op mediation computation in
     cord mode — a handful of scalar adds, the 'syscall body'."""
     return ctrs + _counter_row(ops, bytes, denied, chunks, throttled,
-                               stalls, credits, completions)
+                               stalls, credits, completions, retransmits,
+                               timeouts, srq_grants, cqe_errors, cq_shed,
+                               kernel_iters, kernel_copies)
 
 
 def counters_dict(ctrs: np.ndarray) -> dict[str, float]:
@@ -150,14 +168,21 @@ def tenant_counters_init(num_tenants: int) -> jax.Array:
     return jnp.zeros((num_tenants, NUM_COUNTERS), dtype=jnp.float32)
 
 
-def tenant_counters_bump(ctrs: jax.Array, tenant_idx: int, *, ops=0, bytes=0,
+def tenant_counters_bump(ctrs: jax.Array, tenant_idx, *, ops=0, bytes=0,
                          denied=0, chunks=0, throttled=0, stalls=0, credits=0,
-                         completions=0) -> jax.Array:
-    """Bump one tenant's counter row. ``tenant_idx`` is a static index into
-    the dataplane's tenant table; the bump values may be traced scalars."""
+                         completions=0, retransmits=0, timeouts=0,
+                         srq_grants=0, cqe_errors=0, cq_shed=0,
+                         kernel_iters=0, kernel_copies=0) -> jax.Array:
+    """Bump one tenant's counter row.  ``tenant_idx`` is an index into the
+    dataplane's tenant table — usually a static int, but ``.at[].add``
+    accepts a traced index too (the multi-QP connection table routes
+    per-delivery bumps by the delivering QP's tenant id); the bump values
+    may be traced scalars."""
     return ctrs.at[tenant_idx].add(
         _counter_row(ops, bytes, denied, chunks, throttled,
-                     stalls, credits, completions))
+                     stalls, credits, completions, retransmits, timeouts,
+                     srq_grants, cqe_errors, cq_shed, kernel_iters,
+                     kernel_copies))
 
 
 def tenant_counters_peak(ctrs: jax.Array, tenant_idx: int, *,
@@ -204,5 +229,7 @@ __all__ = [
     "normalize_axes",
     "CTR_OPS", "CTR_BYTES", "CTR_DENIED", "CTR_CHUNKS", "CTR_THROTTLED",
     "CTR_STALLS", "CTR_CREDITS", "CTR_COMPLETIONS", "CTR_CQ_DEPTH",
+    "CTR_RETRANSMITS", "CTR_TIMEOUTS", "CTR_SRQ_GRANTS", "CTR_CQE_ERRORS",
+    "CTR_CQ_SHED", "CTR_KERNEL_ITERS", "CTR_KERNEL_COPIES",
     "NUM_COUNTERS", "COUNTER_NAMES",
 ]

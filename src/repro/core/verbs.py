@@ -29,6 +29,18 @@ This is the "narrow waist" (paper §4) the perftest reproduction runs on:
   host memory, and ``qp_restore`` device_puts it onto a (new) mesh's
   shardings (``qp_specs``), after which ``windowed_send`` resumes with
   counters and outstanding credits intact (docs/elasticity.md).
+* **retransmission** — arming ``windowed_send`` with a
+  :class:`~repro.runtime.fault.WireFault` turns every ``CQE_ERR_*``
+  status and RTO expiry into a go-back-N rewind + mediated re-post
+  (bounded by ``QPConfig.retry_limit``), so injected wire loss or
+  corruption completes bit-identically to a lossless run instead of
+  dying (docs/transport.md).
+* **connection table** — ``conn_init``/``conn_send`` multiplex many QPs
+  onto ONE shared CQ (per-CQE qp_id + epoch tag, single drain loop) and
+  ONE shared receive queue, with post order across tenants' QPs
+  arbitrated by the mediation layer's QoS token buckets;
+  ``conn_quiesce``/``conn_snapshot``/``conn_restore`` migrate the whole
+  table — in-flight retry state included — in one stop-and-copy.
 
 Mediation is NOT reimplemented here: the per-endpoint issue/completion
 work is the dataplane's :class:`~repro.core.mediation.MediationPipeline`
@@ -75,9 +87,11 @@ from repro.core.dataplane import Dataplane
 UD_MTU = 4096
 
 # Completion-queue entry status codes.
-CQE_EMPTY = 0     # unowned slot
-CQE_SEND = 1      # send/write/read WR completed (sender-side CQE)
-CQE_RECV = 2      # receive completed (delivered into a posted recv buffer)
+CQE_EMPTY = 0      # unowned slot
+CQE_SEND = 1       # send/write/read WR completed (sender-side CQE)
+CQE_RECV = 2       # receive completed (delivered into a posted recv buffer)
+CQE_ERR_RETRY = 3  # WR failed retryably (wire corruption NAK) — re-post it
+CQE_ERR_FATAL = 4  # retry budget exhausted — the WR is abandoned
 
 
 class TransportError(Exception):
@@ -93,6 +107,14 @@ class QPConfig:
     cq_depth: int = 0              # CQ ring entries; 0 = max(depth, window)
     dtype: str = "uint8"           # slot element type
     axis: str = "rank"
+    # retransmission state machine (docs/transport.md): a WR whose CQE
+    # comes back CQE_ERR_RETRY — or that never completes within
+    # ``rto_ticks`` loop ticks — is re-posted go-back-N style after
+    # ``backoff_ticks`` of backoff, at most ``retry_limit`` consecutive
+    # times before the QP turns fatal (CQE_ERR_FATAL).
+    retry_limit: int = 7
+    rto_ticks: int = 8
+    backoff_ticks: int = 1
 
     def __post_init__(self):
         if self.transport not in ("RC", "UD"):
@@ -104,6 +126,10 @@ class QPConfig:
             raise TransportError(
                 f"depth/max_outstanding must be >= 1, got "
                 f"{self.depth}/{self.max_outstanding}")
+        if self.retry_limit < 0 or self.rto_ticks < 1 or self.backoff_ticks < 0:
+            raise TransportError(
+                f"need retry_limit >= 0, rto_ticks >= 1, backoff_ticks >= 0, "
+                f"got {self.retry_limit}/{self.rto_ticks}/{self.backoff_ticks}")
         itemsize = jnp.dtype(self.dtype).itemsize
         if self.msg_bytes < itemsize or self.msg_bytes % itemsize:
             raise TransportError(
@@ -143,6 +169,11 @@ def qp_init(cfg: QPConfig, dtype=None) -> dict:
         "credits": i32(),        # rx buffers granted via post_recv
         "rx_owed": i32(),        # delivered recvs awaiting re-post
         "win_hwm": i32(),        # max observed in-flight window
+        # retransmission machine + CQ-overrun visibility
+        "retry_cnt": i32(),      # consecutive retries of the oldest WR
+        "backoff": i32(),        # remaining backoff ticks before re-post
+        "rtx_pending": i32(),    # WRs a quiesce found unacked (must re-post)
+        "cq_shed": i32(),        # CQEs shed on ring overrun (cumulative)
     }
 
 
@@ -233,9 +264,13 @@ def _cqe_push(qp: dict, cfg: QPConfig, do, status: int, wrid):
     """Push one CQE when ``do`` (traced bool) holds; track the occupancy
     high-water mark.  A full ring drops the CQE (a real CQ overrun is
     fatal; the emulation sheds instead — the legacy counters still
-    advance, so poll counts stay correct)."""
+    advance, so poll counts stay correct) and the shed is counted in the
+    QP's cumulative ``cq_shed`` so overrun is observable before it turns
+    into a retransmission storm."""
     D = cfg.effective_cq_depth
-    do = do & (qp["cq_head"] - qp["cq_tail"] < D)
+    want = jnp.asarray(do)
+    do = want & (qp["cq_head"] - qp["cq_tail"] < D)
+    shed = (want & ~do).astype(jnp.int32)
     slot = jnp.mod(qp["cq_head"], D)
     st = jnp.where(do, status, qp["cq_status"][slot])
     wi = jnp.where(do, wrid, qp["cq_wrid"][slot])
@@ -245,16 +280,20 @@ def _cqe_push(qp: dict, cfg: QPConfig, do, status: int, wrid):
             "cq_status": qp["cq_status"].at[slot].set(st),
             "cq_wrid": qp["cq_wrid"].at[slot].set(wi),
             "cq_head": head,
-            "cq_hwm": jnp.maximum(qp["cq_hwm"], occ)}
+            "cq_hwm": jnp.maximum(qp["cq_hwm"], occ),
+            "cq_shed": qp["cq_shed"] + shed}
 
 
 def _cqe_push_n(qp: dict, cfg: QPConfig, n, status: int, wrid0):
     """Push ``n`` CQEs (traced count) with consecutive wr_ids starting at
     ``wrid0``, clamped to the ring's free space — excess CQEs are shed
-    rather than overwriting unconsumed entries (see :func:`_cqe_push`)."""
+    rather than overwriting unconsumed entries and counted in
+    ``cq_shed`` (see :func:`_cqe_push`)."""
     D = cfg.effective_cq_depth
     free = jnp.maximum(D - (qp["cq_head"] - qp["cq_tail"]), 0)
-    n = jnp.clip(jnp.asarray(n, jnp.int32), 0, free)
+    want = jnp.maximum(jnp.asarray(n, jnp.int32), 0)
+    n = jnp.minimum(want, free)
+    shed = want - n
     k = jnp.arange(D, dtype=jnp.int32)
     mask = k < n
     idx = jnp.mod(qp["cq_head"] + k, D)
@@ -266,7 +305,8 @@ def _cqe_push_n(qp: dict, cfg: QPConfig, n, status: int, wrid0):
             "cq_status": qp["cq_status"].at[idx].set(st),
             "cq_wrid": qp["cq_wrid"].at[idx].set(wi),
             "cq_head": head,
-            "cq_hwm": jnp.maximum(qp["cq_hwm"], occ)}
+            "cq_hwm": jnp.maximum(qp["cq_hwm"], occ),
+            "cq_shed": qp["cq_shed"] + shed}
 
 
 def _cqe_consume(qp: dict, cfg: QPConfig, n):
@@ -320,14 +360,15 @@ def post_recv(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
 
 def flush_send(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
                src: int, dst: int, *, op: str = "send",
-               state=None) -> tuple[dict, object]:
+               state=None, tenant: str | None = None) -> tuple[dict, object]:
     """The NIC DMA: move the send ring src→dst (or dst→src for READ).
 
     ``op``: "send" (two-sided), "write" / "read" (one-sided; RC only).
     Send/write completions land in the CQ ring; a READ moves remote
     memory without completing any posted send (one-sided ops never touch
-    the send queue's completions).  Returns ``(qp, state)`` — the uniform
-    dataplane state convention."""
+    the send queue's completions).  CQEs shed on a full CQ ring land in
+    the issuing tenant's ``cq_shed`` runtime counter.  Returns
+    ``(qp, state)`` — the uniform dataplane state convention."""
     if op != "send" and cfg.transport != "RC":
         raise TransportError(f"one-sided {op!r} requires RC transport")
     perm = [(src, dst)] if op != "read" else [(dst, src)]
@@ -343,6 +384,8 @@ def flush_send(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
         ncomp = qp["sq_head"] - qp["cq_sent"]
         new = _cqe_push_n(new, cfg, ncomp, CQE_SEND, qp["cq_sent"])
         new["cq_sent"] = qp["sq_head"]
+        state = _bump(state, dp.tenant_index(tenant), rank == src,
+                      cq_shed=new["cq_shed"] - qp["cq_shed"])
     return new, state
 
 
@@ -354,15 +397,23 @@ def poll_cq(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
     Returns ``(completions, qp, state)`` where ``completions`` is the
     number of deliveries since the last poll (``cq_sent - cq_rcvd``) —
     real counts, not a stale counter.  Consumes every outstanding CQE in
-    the ring and bumps the poller's ``completions`` runtime counter.
-    Pays the interrupt cost on the polling rank when polling is
-    disabled."""
+    the ring and bumps the poller's ``completions`` runtime counter;
+    error-status CQEs (``CQE_ERR_*``) additionally land in the
+    ``cqe_errors`` counter so a poller sees wire faults, not just
+    successes.  Pays the interrupt cost on the polling rank when polling
+    is disabled."""
     ring, state = rank_complete(qp["recv_ring"], rank, poller, dp,
                                 tag="verbs/poll_cq", state=state,
                                 tenant=tenant)
     completed = qp["cq_sent"] - qp["cq_rcvd"]
+    D = cfg.effective_cq_depth
+    k = jnp.arange(D, dtype=jnp.int32)
+    live = k < jnp.minimum(cq_occupancy(qp), D)
+    st = qp["cq_status"][jnp.mod(qp["cq_tail"] + k, D)]
+    nerr = jnp.sum((live & ((st == CQE_ERR_RETRY) | (st == CQE_ERR_FATAL)))
+                   .astype(jnp.int32))
     state = _bump(state, dp.tenant_index(tenant), rank == poller,
-                  completions=completed)
+                  completions=completed, cqe_errors=nerr)
     qp = _cqe_consume(qp, cfg, cq_occupancy(qp))
     qp = {**qp, "recv_ring": ring, "cq_rcvd": qp["cq_sent"]}
     return completed, qp, state
@@ -375,7 +426,7 @@ def poll_cq(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
 def windowed_send(dp: Dataplane, cfg: QPConfig, qp: dict, msgs: jax.Array,
                   rank: jax.Array, src: int, dst: int, *, op: str = "send",
                   state=None, tenant: str | None = None,
-                  dp_peer: Dataplane | None = None
+                  dp_peer: Dataplane | None = None, fault=None
                   ) -> tuple[jax.Array, dict, object]:
     """Transmit ``msgs`` (n, slot) src→dst through the async CQ runtime.
 
@@ -403,7 +454,21 @@ def windowed_send(dp: Dataplane, cfg: QPConfig, qp: dict, msgs: jax.Array,
     :func:`post_recv` first; a zero-credit sender can never resume (the
     loop's fuel bound then returns undelivered zeros).  One-sided
     write/read consume no credits.  For ``op="read"`` ``msgs`` is the
-    remote memory (resident on ``dst``) and the reader pulls it."""
+    remote memory (resident on ``dst``) and the reader pulls it.
+
+    ``fault`` (a :class:`~repro.runtime.fault.WireFault`, or anything
+    duck-typing its ``active``/``drops_wr``/``corrupts_wr``) injects
+    wire loss/corruption per transmission and arms the go-back-N
+    retransmission machine (docs/transport.md): a corrupted WR completes
+    with ``CQE_ERR_RETRY`` (a NAK), a dropped one times out after
+    ``cfg.rto_ticks`` idle ticks, and either rewinds the window to the
+    last in-order ack, backs off ``cfg.backoff_ticks``, and re-posts —
+    paying the full send-side mediation cost per retry — so the
+    delivered payload is **bit-identical to a lossless run**.  Retries
+    and timeouts land in the tenant's runtime counters; after
+    ``cfg.retry_limit`` consecutive failed retries the QP turns fatal
+    (``CQE_ERR_FATAL`` CQE, ``qp["retry_cnt"] > cfg.retry_limit``) and
+    undelivered slots stay zero."""
     if op not in ("send", "write", "read"):
         raise TransportError(f"unknown windowed op {op!r}")
     if op != "send" and cfg.transport != "RC":
@@ -411,6 +476,10 @@ def windowed_send(dp: Dataplane, cfg: QPConfig, qp: dict, msgs: jax.Array,
     n = int(msgs.shape[0])
     if n == 0:
         return jnp.zeros_like(msgs), qp, state
+    if fault is not None and fault.active:
+        return _windowed_send_rtx(dp, cfg, qp, msgs, rank, src, dst, op=op,
+                                  state=state, tenant=tenant,
+                                  dp_peer=dp_peer, fault=fault)
     W = min(cfg.max_outstanding, cfg.effective_cq_depth)
     uses_credits = op == "send"
     dp_peer = dp_peer if dp_peer is not None else dp
@@ -535,6 +604,198 @@ def windowed_send(dp: Dataplane, cfg: QPConfig, qp: dict, msgs: jax.Array,
     return out, qp, state
 
 
+def _windowed_send_rtx(dp: Dataplane, cfg: QPConfig, qp: dict,
+                       msgs: jax.Array, rank: jax.Array, src: int, dst: int,
+                       *, op: str, state, tenant, dp_peer, fault
+                       ) -> tuple[jax.Array, dict, object]:
+    """The lossy-wire variant of :func:`windowed_send`: the same
+    post/drain/stall event loop with the go-back-N retransmission machine
+    armed (docs/transport.md).  Compiled only when a ``fault`` is active,
+    so lossless callers keep the exact legacy loop.
+
+    Per-WR faults are rolled from ``(wr, attempt)`` so a retry re-rolls a
+    fresh outcome.  A corrupted transmission is NAK'd (``CQE_ERR_RETRY``
+    CQE, delivery suppressed); a dropped one is silent — no CQE — and the
+    RTO countdown catches it.  Either rewinds the window to the last
+    in-order ack (flush the CQ, ``sq_head`` back to ``cq_sent``), backs
+    off, and re-posts through the full mediation path.  Deliveries are
+    content-addressed by message index, so a duplicate arrival (ack lost,
+    payload delivered) is idempotent — completion is bit-identical to a
+    lossless run."""
+    n = int(msgs.shape[0])
+    W = min(cfg.max_outstanding, cfg.effective_cq_depth)
+    uses_credits = op == "send"
+    dp_peer = dp_peer if dp_peer is not None else dp
+    ti = dp.tenant_index(tenant)
+    perm = [(src, dst)] if op != "read" else [(dst, src)]
+    stall_iters = (tech.iters_for_ns(dp.cfg.interrupt_cost_us * 1e3)
+                   if dp.cfg.emulate_costs else 0)
+    # fuel: the lossless bound per full pass, times the retry budget, plus
+    # RTO countdowns and backoff between passes.
+    fuel = (cfg.retry_limit + 2) * (3 * n + 2 * W
+                                    + cfg.rto_ticks + cfg.backoff_ticks + 8)
+    tag = f"verbs/windowed_{op}"
+
+    cs0 = qp["cq_sent"]
+    out0 = jnp.zeros_like(msgs)
+    # per-message transmission counts: attempt k re-rolls the fault hash
+    attempts0 = jnp.zeros((n,), jnp.int32)
+    ar = jnp.arange(n, dtype=jnp.int32)
+    D = cfg.effective_cq_depth
+
+    def cond(carry):
+        t, i, qp, out, state, attempts, rto, fatal = carry
+        done = ((i >= n) & (qp["cq_sent"] - cs0 >= n)) | fatal
+        return (t < fuel) & ~done
+
+    def body(carry):
+        t, i, qp, out, state, attempts, rto, fatal = carry
+        in_flight = qp["sq_head"] - qp["cq_sent"]
+        on_src = rank == src
+        have_credit = (qp["credits"] > 0) if uses_credits \
+            else jnp.bool_(True)
+        backing_off = qp["backoff"] > 0
+        can_post = ((i < n) & (in_flight < W) & have_credit & ~backing_off)
+        cq_ready = cq_occupancy(qp) > 0
+        do_drain = ~can_post & cq_ready
+        # silent loss: nothing to post, no CQE arriving, WRs in flight —
+        # the retransmission timer runs down to an RTO expiry.
+        timeout = (~can_post & ~cq_ready & ~backing_off
+                   & (in_flight > 0) & (rto <= 0))
+        do_stall = (~can_post & ~do_drain & ~backing_off & ~timeout
+                    & (i < n) & (in_flight < W))
+        posted = can_post.astype(jnp.int32)
+
+        # -- post (possibly a retransmission): the sender's syscall -----
+        idx = jnp.minimum(i, n - 1)
+        att = attempts[idx]
+        payload = jax.lax.dynamic_index_in_dim(msgs, idx, 0, keepdims=False)
+        wire = jnp.where(can_post, payload, jnp.zeros_like(payload))
+        wire, state = jax.lax.cond(
+            can_post,
+            lambda ops: rank_mediate(ops[0], rank, src, dp, tag=tag,
+                                     state=ops[1], tenant=tenant),
+            lambda ops: ops, (wire, state))
+        ring_slot = jnp.mod(qp["sq_head"], cfg.depth)
+        send_ring = jax.lax.cond(
+            can_post,
+            lambda r: jax.lax.dynamic_update_index_in_dim(r, wire,
+                                                          ring_slot, 0),
+            lambda r: r, qp["send_ring"])
+        wr = jax.lax.dynamic_index_in_dim(send_ring, ring_slot, 0,
+                                          keepdims=False)
+        if op == "read":
+            wr = jnp.where(can_post, payload, jnp.zeros_like(payload))
+
+        # -- DMA, through the injected wire fault -----------------------
+        rx = jax.lax.ppermute(wr, cfg.axis, perm)
+        lost = can_post & fault.drops_wr(idx, att)
+        bad = can_post & ~lost & fault.corrupts_wr(idx, att)
+        deliver = can_post & ~lost & ~bad
+
+        # -- delivery: only an undamaged arrival lands + acks -----------
+        if uses_credits:
+            rx, state = jax.lax.cond(
+                deliver,
+                lambda ops: rank_complete(ops[0], rank, dst, dp_peer,
+                                          tag="verbs/rx_complete",
+                                          state=ops[1], tenant=tenant),
+                lambda ops: ops, (rx, state))
+        recv_ring = jax.lax.cond(
+            deliver,
+            lambda r: jax.lax.dynamic_update_index_in_dim(
+                r, rx, jnp.mod(ring_slot, cfg.depth), 0),
+            lambda r: r, qp["recv_ring"])
+        out = jax.lax.cond(
+            deliver,
+            lambda o: jax.lax.dynamic_update_index_in_dim(o, rx, idx, 0),
+            lambda o: o, out)
+        qp = {**qp, "send_ring": send_ring, "recv_ring": recv_ring}
+        # invariant: sq_head == cs0 + i, so the CQE wr_id is absolute
+        qp = _cqe_push(qp, cfg, deliver, CQE_SEND, qp["sq_head"])
+        qp = _cqe_push(qp, cfg, bad, CQE_ERR_RETRY, qp["sq_head"])
+        sq_head = qp["sq_head"] + posted
+        credits = qp["credits"] - (posted if uses_credits else 0)
+        rx_owed = qp["rx_owed"] + (posted if uses_credits else 0)
+        win = sq_head - qp["cq_sent"]
+        qp = {**qp, "sq_head": sq_head, "credits": credits,
+              "rx_owed": rx_owed,
+              "win_hwm": jnp.maximum(qp["win_hwm"], win)}
+
+        # -- drain one CQE, routed by status + wr_id --------------------
+        tslot = jnp.mod(qp["cq_tail"], D)
+        cqe_st = qp["cq_status"][tslot]
+        cqe_wr = qp["cq_wrid"][tslot]
+        is_err = do_drain & (cqe_st == CQE_ERR_RETRY)
+        in_order = do_drain & (cqe_st == CQE_SEND) & (cqe_wr == qp["cq_sent"])
+        is_gap = do_drain & (cqe_st == CQE_SEND) & (cqe_wr != qp["cq_sent"])
+        tok = jnp.float32(1.0)
+        tok, state = jax.lax.cond(
+            do_drain,
+            lambda ops: rank_complete(ops[0], rank, src, dp,
+                                      tag="verbs/cq_drain", state=ops[1],
+                                      tenant=tenant),
+            lambda ops: ops, (tok, state))
+        qp = _cqe_consume(qp, cfg, do_drain.astype(jnp.int32))
+        qp = {**qp, "cq_sent": qp["cq_sent"] + in_order.astype(jnp.int32)}
+
+        # -- go-back-N rewind: NAK, sequence gap, or RTO expiry ---------
+        rew = is_err | is_gap | timeout
+        new_retry = qp["retry_cnt"] + rew.astype(jnp.int32)
+        give_up = rew & (new_retry > cfg.retry_limit)
+        do_rew = rew & ~give_up
+        acked_i = qp["cq_sent"] - cs0
+        attempts = jnp.where(do_rew & (ar >= acked_i) & (ar < i),
+                             attempts + 1, attempts)
+        qp = _cqe_consume(qp, cfg,
+                          jnp.where(do_rew, cq_occupancy(qp), 0))
+        qp = {**qp,
+              "sq_head": jnp.where(do_rew, qp["cq_sent"], qp["sq_head"]),
+              "backoff": jnp.where(
+                  do_rew, jnp.int32(cfg.backoff_ticks),
+                  jnp.maximum(
+                      qp["backoff"] - backing_off.astype(jnp.int32), 0)),
+              "retry_cnt": jnp.where(
+                  rew, new_retry,
+                  jnp.where(in_order, 0, qp["retry_cnt"]))}
+        i = jnp.where(do_rew, acked_i, i + posted)
+        fatal = fatal | give_up
+        qp = _cqe_push(qp, cfg, give_up, CQE_ERR_FATAL, qp["cq_sent"])
+
+        # -- stall / backoff: both pay the interrupt-wait cost ----------
+        if stall_iters:
+            tok = jax.lax.cond(
+                (do_stall | backing_off) & on_src,
+                lambda v: tech.delay_chain(v, stall_iters),
+                lambda v: v, tok)
+        if uses_credits:
+            repost = jnp.where(do_stall, qp["rx_owed"], 0)
+            qp = {**qp, "credits": qp["credits"] + repost,
+                  "rx_owed": qp["rx_owed"] - repost}
+        out = tech.tie(out, tok)
+
+        # any forward progress (or a rewind) re-arms the RTO
+        rto = jnp.where(can_post | do_drain | rew | backing_off,
+                        jnp.int32(cfg.rto_ticks), rto - 1)
+
+        # -- runtime accounting (active side only) ----------------------
+        state = _bump(state, ti, on_src & can_post,
+                      credits=1 if uses_credits else 0,
+                      retransmits=(att > 0).astype(jnp.int32))
+        state = _bump(state, ti, on_src & do_drain, completions=1,
+                      cqe_errors=is_err.astype(jnp.int32))
+        state = _bump(state, ti, on_src & do_stall, stalls=1)
+        state = _bump(state, ti, on_src & timeout, timeouts=1)
+        state = _peak(state, ti, on_src, cq_occupancy(qp))
+        return t + 1, i, qp, out, state, attempts, rto, fatal
+
+    i0 = qp["sq_head"] - cs0   # resume mid-window after a restore
+    _, _, qp, out, state, _, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), i0, qp, out0, state, attempts0,
+                     jnp.int32(cfg.rto_ticks), jnp.bool_(False)))
+    return out, qp, state
+
+
 # ---------------------------------------------------------------------------
 # live QP migration (MigrOS-style): quiesce → stop-and-copy → restore.
 # The OS-control payoff of staying on the dataplane (docs/elasticity.md):
@@ -548,7 +809,8 @@ def windowed_send(dp: Dataplane, cfg: QPConfig, qp: dict, msgs: jax.Array,
 _QP_RING_KEYS = ("send_ring", "recv_ring")
 _QP_UNIFORM_KEYS = ("sq_head", "cq_sent", "cq_rcvd", "cq_status", "cq_wrid",
                     "cq_head", "cq_tail", "cq_hwm", "credits", "rx_owed",
-                    "win_hwm")
+                    "win_hwm", "retry_cnt", "backoff", "rtx_pending",
+                    "cq_shed")
 
 
 def qp_specs(axis: str = "rank") -> dict:
@@ -569,16 +831,26 @@ def qp_quiesce(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
     """Drain the connection to a migratable snapshot (MigrOS's stop
     phase).  A bounded ``while_loop`` consumes the CQ one entry per tick,
     paying the completion-side pipeline cost per CQE on ``src`` exactly
-    like ``windowed_send``'s lazy drains, then acknowledges every
-    completed WR (``cq_sent``/``cq_rcvd`` catch up to ``sq_head``).
+    like ``windowed_send``'s lazy drains, routing each CQE the same way
+    the retransmission machine does: an in-order ``CQE_SEND`` acks
+    (``cq_sent`` advances); an error CQE or a sequence gap marks its WR
+    in ``rtx_pending`` instead of force-acking a transfer the wire never
+    completed.  After the drain, any in-flight WR that produced no CQE
+    at all (silently dropped) also lands in ``rtx_pending`` and the
+    window is rewound (``sq_head`` back to ``cq_sent``) — the go-back-N
+    rewind frozen at the migration point.
 
     On return the CQ is empty and the sender window is closed; credits,
-    ``rx_owed`` and every cumulative counter are untouched, so a
-    windowed transfer split around a quiesce → :func:`qp_snapshot` →
-    :func:`qp_restore` sequence completes bit-identically to an
-    uninterrupted one (tests/test_elastic_trigger.py).  Returns
-    ``(qp, state)`` — the uniform dataplane convention."""
+    ``rx_owed``, ``retry_cnt``/``backoff`` and every cumulative counter
+    are untouched, so a windowed transfer split around a quiesce →
+    :func:`qp_snapshot` → :func:`qp_restore` sequence completes
+    bit-identically to an uninterrupted one — lossless *or* lossy
+    (tests/test_elastic_trigger.py, tests/test_transport.py).  The
+    caller learns how many WRs acked from the ``cq_sent`` delta and
+    re-sends the rest.  Returns ``(qp, state)`` — the uniform dataplane
+    convention."""
     ti = dp.tenant_index(tenant)
+    D = cfg.effective_cq_depth
 
     def cond(carry):
         qp, _, _ = carry
@@ -588,16 +860,30 @@ def qp_quiesce(dp: Dataplane, cfg: QPConfig, qp: dict, rank: jax.Array,
         qp, state, tok = carry
         tok, state = rank_complete(tok, rank, src, dp, tag="verbs/quiesce",
                                    state=state, tenant=tenant)
-        state = _bump(state, ti, rank == src, completions=1)
+        tslot = jnp.mod(qp["cq_tail"], D)
+        st = qp["cq_status"][tslot]
+        wr = qp["cq_wrid"][tslot]
+        is_err = (st == CQE_ERR_RETRY) | (st == CQE_ERR_FATAL)
+        in_order = (st == CQE_SEND) & (wr == qp["cq_sent"])
+        is_gap = (st == CQE_SEND) & (wr > qp["cq_sent"])
+        # wr < cq_sent (an already-acked flush CQE) just drains.
+        state = _bump(state, ti, rank == src, completions=1,
+                      cqe_errors=is_err.astype(jnp.int32))
         qp = _cqe_consume(qp, cfg, 1)
+        qp = {**qp,
+              "cq_sent": qp["cq_sent"] + in_order.astype(jnp.int32),
+              "rtx_pending": qp["rtx_pending"]
+              + (is_err | is_gap).astype(jnp.int32)}
         return qp, state, tok
 
     qp, state, tok = jax.lax.while_loop(
         cond, body, (qp, state, jnp.float32(1.0)))
+    dropped = qp["sq_head"] - qp["cq_sent"]   # in flight, no CQE: lost
     qp = {**qp,
           "send_ring": tech.tie(qp["send_ring"], tok),
-          "cq_sent": qp["sq_head"],
-          "cq_rcvd": qp["sq_head"]}
+          "rtx_pending": qp["rtx_pending"] + dropped,
+          "sq_head": qp["cq_sent"],
+          "cq_rcvd": qp["cq_sent"]}
     return qp, state
 
 
@@ -625,10 +911,513 @@ def qp_restore(qp_host: dict, mesh, *, axis: str = "rank") -> dict:
             for k, v in qp_host.items()}
 
 
+# ---------------------------------------------------------------------------
+# the connection table: many QPs on one shared CQ + SRQ (docs/transport.md).
+# RDMAvisor's observation is that per-connection queue state is the
+# scalability killer for RDMA-as-a-service; the converged dataplane
+# answer is to multiplex every QP onto ONE completion queue (each CQE
+# tagged with its qp_id + epoch, one drain loop for the whole table) and
+# ONE shared receive queue whose buffers are granted to whichever QP
+# delivers next.  Post order across tenants' QPs is arbitrated by the
+# QoS token buckets the mediation layer already owns.
+# ---------------------------------------------------------------------------
+
+_CONN_RING_KEYS = ("send_ring", "recv_ring")
+_CONN_QP_KEYS = ("sq_head", "cq_sent", "cq_rcvd", "win_hwm", "retry_cnt",
+                 "backoff", "rtx_pending", "epoch", "srq_grants",
+                 "retransmits", "timeouts")
+_CONN_CQ_KEYS = ("cq_status", "cq_wrid", "cq_qp", "cq_epoch")
+_CONN_SCALAR_KEYS = ("cq_head", "cq_tail", "cq_hwm", "cq_shed",
+                     "srq_credits", "srq_owed")
+
+
+def conn_init(cfg: QPConfig, num_qps: int, dtype=None) -> dict:
+    """Create a connection table: ``num_qps`` QPs sharing one CQ and one
+    SRQ — a pytree, like :func:`qp_init`.
+
+    Per-QP state is vectorized ``(Q,)`` (rings ``(Q, depth, slot)``); the
+    shared CQ is one ring whose entries carry ``(status, wr_id, qp_id,
+    epoch)`` — the qp_id routes each completion back to its connection,
+    the epoch lets a rewound QP's stale CQEs be discarded at drain time
+    without flushing other QPs' completions.  ``cfg.cq_depth == 0`` sizes
+    the shared ring to hold every QP's full window at once."""
+    if num_qps < 1:
+        raise TransportError(f"need num_qps >= 1, got {num_qps}")
+    dt = jnp.dtype(dtype if dtype is not None else cfg.dtype)
+    if cfg.msg_bytes % dt.itemsize:
+        raise TransportError(
+            f"msg_bytes={cfg.msg_bytes} not a multiple of dtype {dt.name!r} "
+            f"itemsize ({dt.itemsize} B)")
+    slot = cfg.msg_bytes // dt.itemsize
+    Q = int(num_qps)
+    D = cfg.cq_depth or max(cfg.depth, cfg.max_outstanding) * Q
+    i32v = lambda: jnp.zeros((Q,), jnp.int32)
+    i32 = lambda: jnp.zeros((), jnp.int32)
+    conn = {
+        "send_ring": jnp.zeros((Q, cfg.depth, slot), dt),
+        "recv_ring": jnp.zeros((Q, cfg.depth, slot), dt),
+        # per-QP queue counters (connection state, SPMD-uniform)
+        "sq_head": i32v(), "cq_sent": i32v(), "cq_rcvd": i32v(),
+        "win_hwm": i32v(), "retry_cnt": i32v(), "backoff": i32v(),
+        "rtx_pending": i32v(), "epoch": i32v(), "srq_grants": i32v(),
+        "retransmits": i32v(), "timeouts": i32v(),
+        # the shared CQ
+        "cq_status": jnp.zeros((D,), jnp.int32),
+        "cq_wrid": jnp.full((D,), -1, jnp.int32),
+        "cq_qp": jnp.full((D,), -1, jnp.int32),
+        "cq_epoch": jnp.zeros((D,), jnp.int32),
+        "cq_head": i32(), "cq_tail": i32(), "cq_hwm": i32(),
+        "cq_shed": i32(),
+        # the shared receive queue
+        "srq_credits": i32(), "srq_owed": i32(),
+    }
+    return conn
+
+
+def conn_specs(num_qps: int | None = None, axis: str = "rank") -> dict:
+    """shard_map PartitionSpecs for a connection-table pytree (the
+    :func:`qp_specs` analogue): payload rings sharded over ``axis``,
+    everything else uniform connection state.  ``num_qps`` is accepted
+    for symmetry but unused — specs are shape-free."""
+    specs = {k: P() for k in
+             _CONN_QP_KEYS + _CONN_CQ_KEYS + _CONN_SCALAR_KEYS}
+    specs.update({k: P(axis, None, None) for k in _CONN_RING_KEYS})
+    return specs
+
+
+def _conn_cqe_push(conn: dict, do, status: int, wrid, qp_id, epoch) -> dict:
+    """Push one tagged CQE onto the shared CQ when ``do`` holds; sheds on
+    overrun into the table's cumulative ``cq_shed`` (see
+    :func:`_cqe_push`)."""
+    D = conn["cq_status"].shape[0]
+    want = jnp.asarray(do)
+    do = want & (conn["cq_head"] - conn["cq_tail"] < D)
+    shed = (want & ~do).astype(jnp.int32)
+    slot = jnp.mod(conn["cq_head"], D)
+    upd = lambda ring, v: ring.at[slot].set(
+        jnp.where(do, jnp.asarray(v, ring.dtype), ring[slot]))
+    head = conn["cq_head"] + do.astype(jnp.int32)
+    occ = head - conn["cq_tail"]
+    return {**conn,
+            "cq_status": upd(conn["cq_status"], status),
+            "cq_wrid": upd(conn["cq_wrid"], wrid),
+            "cq_qp": upd(conn["cq_qp"], qp_id),
+            "cq_epoch": upd(conn["cq_epoch"], epoch),
+            "cq_head": head,
+            "cq_hwm": jnp.maximum(conn["cq_hwm"], occ),
+            "cq_shed": conn["cq_shed"] + shed}
+
+
+def _conn_cqe_pop(conn: dict, do) -> dict:
+    """Consume the tail CQE of the shared CQ when ``do`` holds."""
+    D = conn["cq_status"].shape[0]
+    do = jnp.asarray(do) & (cq_occupancy(conn) > 0)
+    slot = jnp.mod(conn["cq_tail"], D)
+    st = jnp.where(do, CQE_EMPTY, conn["cq_status"][slot])
+    return {**conn,
+            "cq_status": conn["cq_status"].at[slot].set(st),
+            "cq_tail": conn["cq_tail"] + do.astype(jnp.int32)}
+
+
+def srq_post(dp: Dataplane, cfg: QPConfig, conn: dict, rank: jax.Array,
+             dst: int, n: int = 1, state=None,
+             tenant: str | None = None) -> tuple[dict, object]:
+    """Post ``n`` receive buffers to the *shared* receive queue on rank
+    ``dst`` — one mediated syscall grants credits any QP in the table may
+    consume (the SRQ's whole point: receive memory scales with the
+    table's aggregate rate, not with the QP count).  Returns
+    ``(conn, state)``."""
+    tok = jnp.zeros((), jnp.float32)
+    tok, state = rank_mediate(tok, rank, dst, dp, tag="verbs/srq_post",
+                              state=state, tenant=tenant)
+    ring = tech.tie(conn["recv_ring"], tok)
+    return {**conn, "recv_ring": ring,
+            "srq_credits": conn["srq_credits"] + jnp.int32(n)}, state
+
+
+def conn_send(dp: Dataplane, cfg: QPConfig, conn: dict, msgs: jax.Array,
+              rank: jax.Array, src: int, dst: int, *, state=None,
+              tenants: tuple[str, ...] | None = None, fault=None
+              ) -> tuple[jax.Array, dict, object]:
+    """Transmit ``msgs`` (Q, n, slot) src→dst: every QP in the table
+    sends its n messages, multiplexed through the shared CQ and SRQ by
+    one event loop — the connection-table analogue of
+    :func:`windowed_send`.
+
+    One event fires per tick:
+
+    * **post** — the QoS token buckets arbitrate which eligible QP posts
+      next (:meth:`~repro.core.policies.QoSPolicy.arb_scores`: the QP
+      whose tenant has the most tokens-after-refill wins; ties rotate
+      round-robin).  The winner pays the pipeline's send-side cost, is
+      charged a token at its *traced* tenant index, consumes one SRQ
+      credit, and its delivery is granted an SRQ buffer
+      (``srq_grants``).  The CQE lands in the shared CQ tagged with the
+      QP's id and current epoch.
+    * **drain** — when no QP can post, the oldest shared CQE routes back
+      to its QP by ``qp_id``: an in-order ``CQE_SEND`` acks it, a NAK or
+      sequence gap rewinds *that QP only* — its epoch increments, so its
+      stale CQEs are discarded at drain instead of flushing the shared
+      ring under every other QP.
+    * **stall** — SRQ dry: the receiver re-posts consumed buffers
+      (``srq_owed``), the sender pays the interrupt-wait cost.
+    * **RTO** — per-QP retransmission timers run down on idle ticks and
+      rewind silently-dropped windows, exactly like
+      :func:`_windowed_send_rtx`.
+
+    ``tenants`` maps each QP to a tenant name (default: the dataplane's
+    default tenant); ``fault`` injects per-transmission wire faults with
+    WR identity ``qp * n + msg``.  SRQ credits must be granted via
+    :func:`srq_post` first.  A QP whose retry budget exhausts turns
+    fatal (``retry_cnt > cfg.retry_limit``) and its undelivered slots
+    stay zero; every other QP completes bit-identically to a lossless
+    run.  Returns ``(out, conn, state)``."""
+    if cfg.transport != "RC":
+        raise TransportError("conn_send requires RC transport")
+    Q, n = int(msgs.shape[0]), int(msgs.shape[1])
+    if Q != conn["sq_head"].shape[0]:
+        raise TransportError(
+            f"msgs has {Q} QPs but the table holds "
+            f"{conn['sq_head'].shape[0]}")
+    if n == 0:
+        return jnp.zeros_like(msgs), conn, state
+    tenants = tuple(tenants) if tenants is not None \
+        else (dp.tenant,) * Q
+    if len(tenants) != Q:
+        raise TransportError(
+            f"tenants has {len(tenants)} entries for {Q} QPs")
+    W = min(cfg.max_outstanding, cfg.depth)
+    ti_arr = jnp.array([dp.tenant_index(t) for t in tenants], jnp.int32)
+    perm = [(src, dst)]
+    stall_iters = (tech.iters_for_ns(dp.cfg.interrupt_cost_us * 1e3)
+                   if dp.cfg.emulate_costs else 0)
+    # per-op mediation cost, paid explicitly (the pipeline's stateful
+    # stages key on a *static* tenant index; the arbitration winner is
+    # traced, so the cost/bucket/counter work is applied by hand here
+    # with the same stage-reported totals)
+    rec = _verbs_rec(dp, msgs[0, 0], "verbs/conn_send")
+    send_iters = dp.pipeline.send_delay_iters(rec)
+    send_copies = dp.pipeline.send_copies(rec)
+    comp_iters = dp.pipeline.complete_delay_iters(rec)
+    comp_copies = dp.pipeline.complete_copies(rec)
+    from repro.core.policies import QoSPolicy, QuotaPolicy
+    qos = next((p for p in dp.policies
+                if isinstance(p, QoSPolicy) and p.rates), None) \
+        if dp.enforce else None
+    rates_arr = jnp.array(qos.rates_for(tenants), jnp.float32) \
+        if qos is not None else None
+    quota = next((p for p in dp.policies if isinstance(p, QuotaPolicy)),
+                 None) if (dp.enforce and not dp.kernel_bypass) else None
+    lim_arr = jnp.array([float(quota.limits.get(t, np.inf))
+                         for t in tenants], jnp.float32) \
+        if quota is not None else None
+    mediated = not dp.kernel_bypass
+
+    def _pay(x, iters, copies):
+        if iters:
+            x = tech.delay_chain(x, iters)
+        if copies:
+            x = tech.staged_copy(x, copies=copies)
+        return x
+
+    fuel = ((cfg.retry_limit + 2) * Q
+            * (3 * n + 2 * W + cfg.rto_ticks + cfg.backoff_ticks + 8))
+    cs0 = conn["cq_sent"]
+    out0 = jnp.zeros_like(msgs)
+    attempts0 = jnp.zeros((Q, n), jnp.int32)
+    arq = jnp.arange(Q, dtype=jnp.int32)
+    arn = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(carry):
+        t, conn, i_arr, out, state, attempts, rto_arr, rr = carry
+        acked = conn["cq_sent"] - cs0
+        fatal_q = conn["retry_cnt"] > cfg.retry_limit
+        return (t < fuel) & ~jnp.all((acked >= n) | fatal_q)
+
+    def body(carry):
+        t, conn, i_arr, out, state, attempts, rto_arr, rr = carry
+        on_src = rank == src
+        in_flight = conn["sq_head"] - conn["cq_sent"]        # (Q,)
+        fatal_q = conn["retry_cnt"] > cfg.retry_limit
+        backing = conn["backoff"] > 0
+        elig = ((i_arr < n) & (in_flight < W) & ~backing & ~fatal_q)
+        have_srq = conn["srq_credits"] > 0
+        can_post = have_srq & jnp.any(elig)
+        cq_ready = cq_occupancy(conn) > 0
+        do_drain = ~can_post & cq_ready
+        timeout_q = ((~can_post & ~cq_ready) & (in_flight > 0)
+                     & ~backing & (rto_arr <= 0))             # (Q,)
+        any_timeout = jnp.any(timeout_q)
+        do_stall = (~can_post & ~cq_ready & ~any_timeout
+                    & ~have_srq & jnp.any(elig))
+
+        # -- arbitration: the mediation layer's token buckets pick the
+        #    next QP to post (most tokens-after-refill wins, ties rotate
+        #    round-robin so equal tenants interleave fairly) -----------
+        if qos is not None and state is not None and qos.name in state:
+            score = qos.arb_scores(state, ti_arr, rates_arr)
+        else:
+            score = jnp.ones((Q,), jnp.float32)
+        score = jnp.where(elig, score, -jnp.inf)
+        best = jnp.max(score)
+        cand = elig & (score >= best - 1e-6)
+        ordk = jnp.mod(arq - rr, Q)
+        pick = jnp.argmin(jnp.where(cand, ordk, Q)).astype(jnp.int32)
+        oh_pick = (arq == pick) & can_post                    # (Q,)
+        posted = can_post.astype(jnp.int32)
+        ti_pick = ti_arr[pick]
+
+        # -- post: cost, token charge, accounting, fault, delivery -----
+        idx = jnp.minimum(i_arr[pick], n - 1)
+        att = attempts[pick, idx]
+        payload = msgs[pick, idx]
+        wire = jnp.where(can_post, payload, jnp.zeros_like(payload))
+        wire = jax.lax.cond(
+            can_post & on_src,
+            lambda v: _pay(v, send_iters, send_copies),
+            lambda v: v, wire)
+        if qos is not None:
+            state = qos.charge_wr(state, ti_pick, rates_arr[pick],
+                                  can_post, bump_mask=on_src)
+        if mediated:
+            state = _bump(state, ti_pick, on_src & can_post,
+                          ops=1, bytes=rec.bytes,
+                          retransmits=(att > 0).astype(jnp.int32))
+        ring_slot = jnp.mod(conn["sq_head"][pick], cfg.depth)
+        cur = conn["send_ring"][pick, ring_slot]
+        send_ring = conn["send_ring"].at[pick, ring_slot].set(
+            jnp.where(can_post, wire, cur))
+        wr_payload = send_ring[pick, ring_slot]
+
+        # -- DMA through the injected wire fault ------------------------
+        rx = jax.lax.ppermute(wr_payload, cfg.axis, perm)
+        wr_global = pick * n + idx
+        if fault is not None:
+            lost = can_post & fault.drops_wr(wr_global, att)
+            bad = can_post & ~lost & fault.corrupts_wr(wr_global, att)
+        else:
+            lost = jnp.bool_(False)
+            bad = jnp.bool_(False)
+        deliver = can_post & ~lost & ~bad
+
+        # -- delivery: an SRQ buffer is granted to whichever QP lands --
+        rx = jax.lax.cond(
+            deliver & (rank == dst),
+            lambda v: _pay(v, comp_iters, comp_copies),
+            lambda v: v, rx)
+        cur = conn["recv_ring"][pick, ring_slot]
+        recv_ring = conn["recv_ring"].at[pick, ring_slot].set(
+            jnp.where(deliver, rx, cur))
+        cur = out[pick, idx]
+        out = out.at[pick, idx].set(jnp.where(deliver, rx, cur))
+        conn = {**conn, "send_ring": send_ring, "recv_ring": recv_ring}
+        conn = _conn_cqe_push(conn, deliver, CQE_SEND,
+                              conn["sq_head"][pick], pick,
+                              conn["epoch"][pick])
+        conn = _conn_cqe_push(conn, bad, CQE_ERR_RETRY,
+                              conn["sq_head"][pick], pick,
+                              conn["epoch"][pick])
+        dgrant = deliver.astype(jnp.int32)
+        sq_head = conn["sq_head"] + oh_pick.astype(jnp.int32)
+        conn = {**conn,
+                "sq_head": sq_head,
+                "srq_credits": conn["srq_credits"] - posted,
+                "srq_owed": conn["srq_owed"] + posted,
+                "srq_grants": conn["srq_grants"]
+                + oh_pick.astype(jnp.int32) * dgrant,
+                "retransmits": conn["retransmits"]
+                + oh_pick.astype(jnp.int32) * (att > 0).astype(jnp.int32),
+                "win_hwm": jnp.maximum(conn["win_hwm"],
+                                       sq_head - conn["cq_sent"])}
+        i_arr = i_arr + oh_pick.astype(jnp.int32)
+        state = _bump(state, ti_pick, on_src & can_post,
+                      credits=1, srq_grants=dgrant)
+
+        # -- drain: route the oldest shared CQE back to its QP ----------
+        D = conn["cq_status"].shape[0]
+        tslot = jnp.mod(conn["cq_tail"], D)
+        cqe_st = conn["cq_status"][tslot]
+        cqe_wr = conn["cq_wrid"][tslot]
+        qt = jnp.clip(conn["cq_qp"][tslot], 0, Q - 1)
+        cqe_ep = conn["cq_epoch"][tslot]
+        stale = do_drain & (cqe_ep != conn["epoch"][qt])
+        live = do_drain & ~stale
+        is_err = live & (cqe_st == CQE_ERR_RETRY)
+        in_order = live & (cqe_st == CQE_SEND) \
+            & (cqe_wr == conn["cq_sent"][qt])
+        is_gap = live & (cqe_st == CQE_SEND) \
+            & (cqe_wr > conn["cq_sent"][qt])
+        oh_qt = (arq == qt)
+        tok = jnp.float32(1.0)
+        tok = jax.lax.cond(
+            live & on_src,
+            lambda v: _pay(v, comp_iters, comp_copies),
+            lambda v: v, tok)
+        conn = _conn_cqe_pop(conn, do_drain)
+        conn = {**conn,
+                "cq_sent": conn["cq_sent"]
+                + (oh_qt & in_order).astype(jnp.int32)}
+        if mediated:
+            state = _bump(state, ti_arr[qt], on_src & live,
+                          completions=1,
+                          cqe_errors=is_err.astype(jnp.int32))
+
+        # -- go-back-N rewind, per QP: NAK, gap, or RTO expiry ----------
+        rew_q = (oh_qt & (is_err | is_gap)) | timeout_q       # (Q,)
+        new_retry = conn["retry_cnt"] + rew_q.astype(jnp.int32)
+        give_up_q = rew_q & (new_retry > cfg.retry_limit)
+        do_rew_q = rew_q & ~give_up_q
+        acked = conn["cq_sent"] - cs0                         # (Q,)
+        attempts = attempts + (do_rew_q[:, None]
+                               & (arn[None, :] >= acked[:, None])
+                               & (arn[None, :] < i_arr[:, None])
+                               ).astype(jnp.int32)
+        i_arr = jnp.where(do_rew_q, acked, i_arr)
+        conn = {**conn,
+                "sq_head": jnp.where(do_rew_q, conn["cq_sent"],
+                                     conn["sq_head"]),
+                # the rewound QP's stale CQEs are epoch-discarded at
+                # drain — the shared ring is never flushed under others
+                "epoch": conn["epoch"] + do_rew_q.astype(jnp.int32),
+                "backoff": jnp.where(
+                    do_rew_q, jnp.int32(cfg.backoff_ticks),
+                    jnp.maximum(
+                        conn["backoff"] - backing.astype(jnp.int32), 0)),
+                "retry_cnt": jnp.where(
+                    rew_q, new_retry,
+                    jnp.where(oh_qt & in_order, 0, conn["retry_cnt"])),
+                "timeouts": conn["timeouts"] + timeout_q.astype(jnp.int32)}
+        if state is not None and "counters" in state:
+            m = (timeout_q & on_src).astype(jnp.float32)
+            ctrs = state["counters"].at[ti_arr, tl.CTR_TIMEOUTS].add(m)
+            state = {**state, "counters": ctrs}
+
+        # -- quota marking (runtime plane, traced index) ----------------
+        if quota is not None and state is not None \
+                and "counters" in state:
+            used = state["counters"][ti_pick, tl.CTR_BYTES]
+            over = (used > lim_arr[pick]) & can_post & on_src
+            ctrs = state["counters"].at[ti_pick, tl.CTR_DENIED].add(
+                over.astype(jnp.float32))
+            state = {**state, "counters": ctrs}
+
+        # -- stall: SRQ dry — receiver re-posts, sender waits -----------
+        if stall_iters:
+            tok = jax.lax.cond(
+                (do_stall | jnp.any(backing)) & on_src,
+                lambda v: tech.delay_chain(v, stall_iters),
+                lambda v: v, tok)
+        repost = jnp.where(do_stall, conn["srq_owed"], 0)
+        conn = {**conn,
+                "srq_credits": conn["srq_credits"] + repost,
+                "srq_owed": conn["srq_owed"] - repost}
+        starved = jnp.argmax(elig).astype(jnp.int32)
+        state = _bump(state, ti_arr[starved], on_src & do_stall, stalls=1)
+        out = tech.tie(out, tok)
+        state = _peak(state, ti_pick, on_src & can_post,
+                      cq_occupancy(conn))
+
+        # -- per-QP RTO: served QPs re-arm, idle in-flight QPs count down
+        served = (oh_pick & can_post) | (oh_qt & live) | rew_q | backing
+        rto_arr = jnp.where(
+            served, jnp.int32(cfg.rto_ticks),
+            jnp.where((conn["sq_head"] - conn["cq_sent"]) > 0,
+                      rto_arr - 1, jnp.int32(cfg.rto_ticks)))
+        rr = jnp.where(can_post, jnp.mod(pick + 1, Q), rr)
+        return (t + 1, conn, i_arr, out, state, attempts, rto_arr, rr)
+
+    carry = (jnp.int32(0), conn, conn["sq_head"] - cs0, out0, state,
+             attempts0, jnp.full((Q,), cfg.rto_ticks, jnp.int32),
+             jnp.int32(0))
+    _, conn, _, out, state, _, _, _ = jax.lax.while_loop(cond, body, carry)
+    return out, conn, state
+
+
+def conn_quiesce(dp: Dataplane, cfg: QPConfig, conn: dict, rank: jax.Array,
+                 src: int, state=None,
+                 tenants: tuple[str, ...] | None = None
+                 ) -> tuple[dict, object]:
+    """Quiesce the whole connection table (the :func:`qp_quiesce`
+    analogue): drain the shared CQ one CQE per tick — routing each to its
+    QP by ``qp_id``, discarding stale-epoch entries, acking in-order
+    completions, marking errors and gaps in the owning QP's
+    ``rtx_pending`` — then rewind every QP's unacked window into
+    ``rtx_pending`` and close it.  Retry counters, backoff, epochs and
+    SRQ credits are preserved, so a migrated table resumes its
+    retransmission state bit-identically.  Returns ``(conn, state)``."""
+    Q = int(conn["sq_head"].shape[0])
+    tenants = tuple(tenants) if tenants is not None \
+        else (dp.tenant,) * Q
+    ti_arr = jnp.array([dp.tenant_index(t) for t in tenants], jnp.int32)
+    arq = jnp.arange(Q, dtype=jnp.int32)
+    D = conn["cq_status"].shape[0]
+
+    def cond(carry):
+        conn, _, _ = carry
+        return cq_occupancy(conn) > 0
+
+    def body(carry):
+        conn, state, tok = carry
+        tok, state = rank_complete(tok, rank, src, dp, tag="verbs/quiesce",
+                                   state=state)
+        tslot = jnp.mod(conn["cq_tail"], D)
+        st = conn["cq_status"][tslot]
+        wr = conn["cq_wrid"][tslot]
+        qt = jnp.clip(conn["cq_qp"][tslot], 0, Q - 1)
+        live = conn["cq_epoch"][tslot] == conn["epoch"][qt]
+        is_err = live & ((st == CQE_ERR_RETRY) | (st == CQE_ERR_FATAL))
+        in_order = live & (st == CQE_SEND) & (wr == conn["cq_sent"][qt])
+        is_gap = live & (st == CQE_SEND) & (wr > conn["cq_sent"][qt])
+        oh_qt = (arq == qt)
+        state = _bump(state, ti_arr[qt], rank == src, completions=1,
+                      cqe_errors=is_err.astype(jnp.int32))
+        conn = _conn_cqe_pop(conn, True)
+        conn = {**conn,
+                "cq_sent": conn["cq_sent"]
+                + (oh_qt & in_order).astype(jnp.int32),
+                "rtx_pending": conn["rtx_pending"]
+                + (oh_qt & (is_err | is_gap)).astype(jnp.int32)}
+        return conn, state, tok
+
+    conn, state, tok = jax.lax.while_loop(
+        cond, body, (conn, state, jnp.float32(1.0)))
+    dropped = conn["sq_head"] - conn["cq_sent"]   # in flight, no CQE
+    conn = {**conn,
+            "send_ring": tech.tie(conn["send_ring"], tok),
+            "rtx_pending": conn["rtx_pending"] + dropped,
+            "sq_head": conn["cq_sent"],
+            "cq_rcvd": conn["cq_sent"]}
+    return conn, state
+
+
+def conn_snapshot(conn: dict) -> dict:
+    """Stop-and-copy a (quiesced) connection table to host memory — the
+    whole table, shared CQ, SRQ and in-flight retry state, in one
+    checkpointable dict (see :func:`qp_snapshot`)."""
+    return {k: np.asarray(jax.device_get(v)) for k, v in conn.items()}
+
+
+def conn_restore(conn_host: dict, mesh, *, axis: str = "rank") -> dict:
+    """``device_put`` a connection-table snapshot onto ``mesh``'s
+    shardings (:func:`conn_specs`) — live migration of every QP in the
+    table at once, retransmission state included."""
+    specs = conn_specs(axis=axis)
+    missing = set(specs) - set(conn_host)
+    if missing:
+        raise TransportError(
+            f"connection-table snapshot missing keys {sorted(missing)} — "
+            f"not a conn_init/conn_snapshot pytree")
+    return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+            for k, v in conn_host.items()}
+
+
 __all__ = [
     "QPConfig", "TransportError", "UD_MTU",
-    "CQE_EMPTY", "CQE_SEND", "CQE_RECV", "qp_init",
+    "CQE_EMPTY", "CQE_SEND", "CQE_RECV", "CQE_ERR_RETRY", "CQE_ERR_FATAL",
+    "qp_init",
     "post_send", "post_recv", "flush_send", "poll_cq", "windowed_send",
     "qp_specs", "qp_quiesce", "qp_snapshot", "qp_restore",
+    "conn_init", "conn_specs", "srq_post", "conn_send",
+    "conn_quiesce", "conn_snapshot", "conn_restore",
     "rank_mediate", "rank_complete", "allreduce_state", "cq_occupancy",
 ]

@@ -18,6 +18,7 @@ from repro.kernels.dataplane.bounce import (
     DEFAULT_CHUNK_ELEMS,
     NUM_COST_COLS,
     bounce_copy,
+    kernel_cost_totals,
     mediated_cost,
 )
 from repro.kernels.dataplane.ops import (
@@ -28,7 +29,8 @@ from repro.kernels.dataplane.ops import (
 )
 
 __all__ = [
-    "bounce_copy", "mediated_cost", "use_pallas_dataplane",
+    "bounce_copy", "mediated_cost", "kernel_cost_totals",
+    "use_pallas_dataplane",
     "kernel_calibrate", "kernel_iters_for_ns", "rescale_iters",
     "DEFAULT_CHUNK_ELEMS", "COST_ITERS", "COST_COPIES", "NUM_COST_COLS",
 ]

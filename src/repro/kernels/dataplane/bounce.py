@@ -215,6 +215,27 @@ def bounce_copy(x: jax.Array, copies: int = 1, *,
     return out
 
 
+def kernel_cost_totals(nelems: int, delay_iters: int, copies: int = 0,
+                       chunk_elems: int = DEFAULT_CHUNK_ELEMS
+                       ) -> tuple[int, int]:
+    """Static ``(total_iters, total_copy_passes)`` the cost kernel's SMEM
+    counters sum to for a payload of ``nelems`` elements — the exact
+    chunk split of :func:`mediated_cost` (even per-chunk delay split,
+    rounded up; ``copies`` passes per chunk), mirrored host-side.
+
+    The fused mediation pipeline uses this to bump the tenant
+    ``kernel_iters``/``kernel_copies`` counters identically whether the
+    cost ran as the Pallas kernel or the XLA emulation, keeping reports
+    bit-identical across backends (tests/test_dataplane_kernels.py)."""
+    if (delay_iters <= 0 and copies <= 0) or nelems <= 0:
+        return 0, 0
+    chunk = max(1, min(chunk_elems, nelems))
+    n_full, tail = divmod(nelems, chunk)
+    n_chunks = n_full + (1 if tail else 0)
+    iters_per_chunk = -(-delay_iters // n_chunks) if delay_iters > 0 else 0
+    return iters_per_chunk * n_chunks, copies * n_chunks
+
+
 def mediated_cost(x: jax.Array, delay_iters: int, copies: int = 0, *,
                   chunk_elems: int = DEFAULT_CHUNK_ELEMS,
                   interpret: bool | None = None):
@@ -233,5 +254,6 @@ def mediated_cost(x: jax.Array, delay_iters: int, copies: int = 0, *,
                    chunk_elems=chunk_elems, interpret=interpret)
 
 
-__all__ = ["bounce_copy", "mediated_cost", "DEFAULT_CHUNK_ELEMS",
+__all__ = ["bounce_copy", "mediated_cost", "kernel_cost_totals",
+           "DEFAULT_CHUNK_ELEMS",
            "COST_ITERS", "COST_COPIES", "NUM_COST_COLS"]

@@ -1,16 +1,26 @@
-"""Fault-tolerant training runtime.
+"""Fault-tolerant runtime: step-level failures and wire-level loss.
 
-At thousands of nodes the question is not *if* a step fails but *when*:
-this runner wraps the train loop with
+At thousands of nodes the question is not *if* something fails but
+*when*.  Two injection planes live here:
 
-  * periodic (optionally async) checkpointing,
-  * auto-resume from the latest valid checkpoint,
-  * bounded retry on step failure (``FaultInjector`` simulates device/node
-    loss in tests),
-  * a step watchdog flagging stragglers (steps slower than
-    ``straggler_factor`` × the trailing median get logged and counted —
-    the mitigation at scale is re-issue/skip, which the data pipeline's
-    deterministic ``batch_at(step)`` makes safe).
+* **Step plane** (``FaultInjector`` + ``run_loop``): whole-step failures
+  — device/node loss — handled host-side with periodic (optionally
+  async) checkpointing, auto-resume from the latest valid checkpoint,
+  bounded retry, and a straggler watchdog (steps slower than
+  ``straggler_factor`` × the trailing median get logged and counted).
+
+* **Wire plane** (:class:`WireFault`): per-work-request loss and
+  corruption injected *inside traced code* into the verbs transport
+  (``core/verbs.py``): ``windowed_send``/``conn_send`` consult the
+  injector per wire transmission, a dropped WR produces no CQE (the
+  sender's RTO fires), a corrupted one completes with ``CQE_ERR_RETRY``
+  (a NAK), and the go-back-N retransmission machine re-posts — paying
+  mediation cost per retry — until the transfer is bit-identical to a
+  lossless run or ``QPConfig.retry_limit`` is exhausted
+  (docs/transport.md).  Predicates are pure integer hashes of
+  ``(wr, attempt, seed)`` computed identically on every rank, so queue
+  counters stay SPMD-uniform; explicit ``drops``/``corrupts`` schedules
+  give tests deterministic single-event control.
 """
 
 from __future__ import annotations
@@ -20,12 +30,97 @@ import time
 from dataclasses import dataclass, field
 
 import jax
+import jax.numpy as jnp
 
 from repro.checkpoint import store
 
 
 class SimulatedFailure(RuntimeError):
     pass
+
+
+# ---------------------------------------------------------------------------
+# wire-level fault injection (traced — consumed by core/verbs.py)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WireFault:
+    """Deterministic wire loss/corruption for the verbs transport.
+
+    ``drop_rate`` / ``corrupt_rate`` are per-transmission probabilities
+    realized by a pure integer hash of ``(wr, attempt, seed)`` — no RNG
+    state, identical on every rank, and a *retry of the same WR rolls a
+    fresh outcome* (the attempt number salts the hash), so any rate < 1
+    eventually delivers.  ``drops`` / ``corrupts`` are explicit
+    ``(wr, attempt)`` schedules for tests that need exactly one loss at
+    a known point.  A drop beats a corrupt when both fire for the same
+    transmission (the packet never arrived to be corrupted).
+
+    ``wr`` is the transfer-relative work-request identity the transport
+    passes in (message index for ``windowed_send``;
+    ``qp_id * n_msgs + msg`` for ``conn_send``), so schedules address
+    "QP 3's second message" directly."""
+
+    drop_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    seed: int = 0
+    drops: tuple = ()     # explicit (wr, attempt) pairs, always dropped
+    corrupts: tuple = ()  # explicit (wr, attempt) pairs, always corrupted
+
+    def __post_init__(self):
+        for r in (self.drop_rate, self.corrupt_rate):
+            if not 0.0 <= r <= 1.0:
+                raise ValueError(f"wire fault rate {r} outside [0, 1]")
+
+    @property
+    def active(self) -> bool:
+        """True if any fault can ever fire — verbs compiles the plain
+        (no-retry-machinery) loop when inactive."""
+        return bool(self.drop_rate or self.corrupt_rate
+                    or self.drops or self.corrupts)
+
+    def _roll(self, wr, attempt, salt: int):
+        """16-bit hash of (wr, attempt, seed, salt): a Knuth mix through
+        a murmur-style avalanche finalizer, so consecutive attempts of
+        the same WR land independently across the 16-bit range (a weak
+        mix here makes a dropped WR stay dropped for many retries)."""
+        w = jnp.asarray(wr, jnp.uint32)
+        a = jnp.asarray(attempt, jnp.uint32)
+        h = (w * jnp.uint32(2654435761)
+             + a * jnp.uint32(2246822519)
+             + jnp.uint32((self.seed * 2 + salt) & 0xffffffff)
+             * jnp.uint32(69069))
+        h = h ^ (h >> 16)
+        h = h * jnp.uint32(0x85ebca6b)
+        h = h ^ (h >> 13)
+        h = h * jnp.uint32(0xc2b2ae35)
+        h = h ^ (h >> 16)
+        return h & jnp.uint32(0xffff)
+
+    def _scheduled(self, pairs, wr, attempt):
+        hit = jnp.bool_(False)
+        for w, a in pairs:
+            hit = hit | ((jnp.asarray(wr, jnp.int32) == int(w))
+                         & (jnp.asarray(attempt, jnp.int32) == int(a)))
+        return hit
+
+    def drops_wr(self, wr, attempt):
+        """Traced bool: this (wr, attempt) transmission is lost on the
+        wire — no delivery, no CQE (silent loss; the RTO catches it)."""
+        hit = self._scheduled(self.drops, wr, attempt)
+        if self.drop_rate > 0:
+            thresh = jnp.uint32(int(self.drop_rate * 0x10000))
+            hit = hit | (self._roll(wr, attempt, salt=1) < thresh)
+        return hit
+
+    def corrupts_wr(self, wr, attempt):
+        """Traced bool: this transmission arrives damaged — delivery is
+        discarded and the CQE carries ``CQE_ERR_RETRY`` (a NAK)."""
+        hit = self._scheduled(self.corrupts, wr, attempt)
+        if self.corrupt_rate > 0:
+            thresh = jnp.uint32(int(self.corrupt_rate * 0x10000))
+            hit = hit | (self._roll(wr, attempt, salt=2) < thresh)
+        return hit
 
 
 @dataclass
@@ -126,4 +221,5 @@ def run_loop(step_fn, state, loader, *, steps: int, ckpt_dir: str | None = None,
     return state, report
 
 
-__all__ = ["run_loop", "FaultInjector", "SimulatedFailure", "RunReport"]
+__all__ = ["run_loop", "FaultInjector", "SimulatedFailure", "RunReport",
+           "WireFault"]

@@ -1,0 +1,529 @@
+"""The shared-CQ multi-QP transport (docs/transport.md): go-back-N
+retransmission under injected wire loss/corruption (lossy transfers
+complete bit-identically to lossless ones), retry exhaustion turning a
+QP fatal, the connection table's shared CQ/SRQ with QoS-arbitrated post
+order, per-QP and per-tenant fault counters, CQ-overrun shedding
+visibility, and live migration of retransmission state through
+quiesce → snapshot → restore."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DataplaneConfig
+from repro.core import Dataplane, compat, verbs
+from repro.core.policies import QoSPolicy, TelemetryPolicy
+from repro.runtime.fault import WireFault
+
+
+def _dp(mesh, **kw):
+    kw.setdefault("policies", [TelemetryPolicy()])
+    return Dataplane(DataplaneConfig(mode="cord", emulate_costs=False),
+                     mesh=mesh, **kw)
+
+
+def _payload(n, msg_bytes, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, (n, msg_bytes), dtype=np.uint8)
+
+
+def _stack(payload):
+    """(2, ...) input: src rank holds the payload, dst rank zeros."""
+    return jnp.asarray(np.stack([payload, np.zeros_like(payload)]))
+
+
+# ---------------------------------------------------------------------------
+# single-QP plane: windowed_send + WireFault
+# ---------------------------------------------------------------------------
+
+CFG = verbs.QPConfig(msg_bytes=64, depth=8, max_outstanding=4,
+                     retry_limit=7, rto_ticks=4, backoff_ticks=1)
+
+
+def _run_windowed(mesh, dp, cfg, msgs, *, fault=None, credits=None):
+    n = int(msgs.shape[1])
+    credits = n if credits is None else credits
+
+    def body(m, rt):
+        rank = jax.lax.axis_index("rank")
+        qp = verbs.qp_init(cfg)
+        qp, rt = verbs.post_recv(dp, cfg, qp, rank, dst=1, n=credits,
+                                 state=rt)
+        out, qp, rt = verbs.windowed_send(dp, cfg, qp, m[0], rank, src=0,
+                                          dst=1, state=rt, fault=fault)
+        return out[None], qp, verbs.allreduce_state(rt)
+
+    fn = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(P("rank", None, None), P()),
+        out_specs=(P("rank", None, None), verbs.qp_specs("rank"), P())))
+    out, qp, rt = jax.block_until_ready(fn(msgs, dp.runtime_init()))
+    return np.asarray(out)[1], qp, dp.runtime_report(rt)[dp.tenant]
+
+
+def test_windowed_lossless_equals_rtx_machine(mesh2):
+    """A fault whose schedule never fires still compiles the full
+    retransmission loop — its output must match the plain path exactly."""
+    dp = _dp(mesh2)
+    payload = _payload(6, CFG.msg_bytes, seed=1)
+    msgs = _stack(payload)
+    plain, _, _ = _run_windowed(mesh2, dp, CFG, msgs)
+    armed = WireFault(drops=((99, 99),))
+    assert armed.active
+    out, qp, rep = _run_windowed(mesh2, dp, CFG, msgs, fault=armed)
+    np.testing.assert_array_equal(out, plain)
+    np.testing.assert_array_equal(out, payload)
+    assert rep["retransmits"] == 0 and rep["timeouts"] == 0
+    assert int(qp["retry_cnt"]) == 0
+
+
+@pytest.mark.parametrize("fault, kind", [
+    (WireFault(drops=((2, 0),)), "drop_mid"),      # gap-detected rewind
+    (WireFault(drops=((5, 0),)), "drop_last"),     # RTO-detected rewind
+    (WireFault(corrupts=((1, 0),)), "corrupt"),    # NAK (CQE_ERR_RETRY)
+    (WireFault(drop_rate=0.2, corrupt_rate=0.2, seed=3), "rates"),
+])
+def test_windowed_lossy_completes_bit_identical(mesh2, fault, kind):
+    dp = _dp(mesh2)
+    payload = _payload(6, CFG.msg_bytes, seed=2)
+    out, qp, rep = _run_windowed(mesh2, dp, CFG, _stack(payload),
+                                 fault=fault)
+    np.testing.assert_array_equal(out, payload)
+    # something was actually injected and recovered from
+    assert rep["retransmits"] > 0, rep
+    if kind == "drop_last":
+        assert rep["timeouts"] > 0, rep       # no later CQE to show the gap
+    if kind == "corrupt":
+        assert rep["cqe_errors"] > 0, rep     # the NAK CQE was drained
+    # recovery is complete: the in-order ack reset the retry counter
+    assert int(qp["retry_cnt"]) == 0
+
+
+def test_windowed_retry_exhaustion_turns_fatal(mesh2):
+    """100% loss: the QP retries retry_limit times, turns fatal instead
+    of hanging (fuel-bounded), and undelivered slots stay zero."""
+    cfg = verbs.QPConfig(msg_bytes=64, depth=8, max_outstanding=4,
+                         retry_limit=2, rto_ticks=3, backoff_ticks=1)
+    dp = _dp(mesh2)
+    payload = _payload(4, cfg.msg_bytes, seed=3)
+    out, qp, rep = _run_windowed(mesh2, dp, cfg, _stack(payload),
+                                 fault=WireFault(drop_rate=1.0))
+    assert int(qp["retry_cnt"]) > cfg.retry_limit
+    np.testing.assert_array_equal(out, np.zeros_like(payload))
+    assert rep["timeouts"] >= cfg.retry_limit + 1, rep
+
+
+def test_windowed_retransmits_pay_mediation_cost(mesh2):
+    """Every retry is a real re-post: ops/bytes accounting grows by
+    exactly the retransmitted work relative to a lossless run."""
+    dp = _dp(mesh2)
+    payload = _payload(6, CFG.msg_bytes, seed=4)
+    _, _, rep0 = _run_windowed(mesh2, dp, CFG, _stack(payload))
+    fault = WireFault(drops=((2, 0),))
+    _, _, rep1 = _run_windowed(mesh2, dp, CFG, _stack(payload), fault=fault)
+    extra = rep1["ops"] - rep0["ops"]
+    assert extra == rep1["retransmits"] > 0
+    assert rep1["bytes"] - rep0["bytes"] == extra * CFG.msg_bytes
+
+
+def test_cq_shed_lands_in_telemetry(mesh2):
+    """Satellite: CQEs shed on ring overrun are counted, not silently
+    dropped — both on the QP and in the tenant counter block."""
+    cfg = verbs.QPConfig(msg_bytes=16, depth=8, cq_depth=2)
+    dp = _dp(mesh2)
+    payload = _payload(6, cfg.msg_bytes, seed=5)
+    msgs = _stack(payload)
+
+    def body(m, rt):
+        rank = jax.lax.axis_index("rank")
+        qp = verbs.qp_init(cfg)
+        for i in range(6):
+            qp, rt = verbs.post_send(dp, cfg, qp, m[0, i], rank, src=0,
+                                     state=rt)
+        qp, rt = verbs.flush_send(dp, cfg, qp, rank, src=0, dst=1, state=rt)
+        return qp, verbs.allreduce_state(rt)
+
+    fn = jax.jit(compat.shard_map(
+        body, mesh=mesh2, in_specs=(P("rank", None, None), P()),
+        out_specs=(verbs.qp_specs("rank"), P())))
+    qp, rt = jax.block_until_ready(fn(msgs, dp.runtime_init()))
+    rep = dp.runtime_report(rt)[dp.tenant]
+    assert int(qp["cq_shed"]) == 4          # 6 CQEs into a 2-slot ring
+    assert rep["cq_shed"] == 4.0, rep
+
+
+# ---------------------------------------------------------------------------
+# connection table: shared CQ + SRQ + QoS arbitration
+# ---------------------------------------------------------------------------
+
+CCFG = verbs.QPConfig(msg_bytes=32, depth=8, max_outstanding=3,
+                      retry_limit=7, rto_ticks=4, backoff_ticks=1)
+
+
+def _conn_payload(Q, n, msg_bytes, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, (Q, n, msg_bytes), dtype=np.uint8)
+
+
+def _run_conn(mesh, dp, cfg, msgs, *, tenants=None, fault=None,
+              credits=None):
+    Q, n = int(msgs.shape[1]), int(msgs.shape[2])
+    credits = Q * n if credits is None else credits
+
+    def body(m, rt):
+        rank = jax.lax.axis_index("rank")
+        conn = verbs.conn_init(cfg, Q)
+        conn, rt = verbs.srq_post(dp, cfg, conn, rank, dst=1, n=credits,
+                                  state=rt)
+        out, conn, rt = verbs.conn_send(dp, cfg, conn, m[0], rank, src=0,
+                                        dst=1, state=rt, tenants=tenants,
+                                        fault=fault)
+        return out[None], conn, verbs.allreduce_state(rt)
+
+    fn = jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=(P("rank", None, None, None), P()),
+        out_specs=(P("rank", None, None, None), verbs.conn_specs(), P())))
+    out, conn, rt = jax.block_until_ready(fn(msgs, dp.runtime_init()))
+    return np.asarray(out)[1], conn, dp.runtime_report(rt)
+
+
+def test_conn_send_lossless_all_qps_deliver(mesh2):
+    Q, n = 3, 4
+    dp = _dp(mesh2)
+    payload = _conn_payload(Q, n, CCFG.msg_bytes, seed=6)
+    out, conn, rep = _run_conn(mesh2, dp, CCFG, _stack(payload))
+    np.testing.assert_array_equal(out, payload)
+    # every delivery was granted an SRQ buffer, attributed per QP
+    np.testing.assert_array_equal(np.asarray(conn["srq_grants"]),
+                                  np.full(Q, n))
+    r = rep[dp.tenant]
+    assert r["srq_grants"] == Q * n
+    # Q*n posts + the single mediated srq_post syscall
+    assert r["ops"] == Q * n + 1 and r["completions"] == Q * n
+    assert int(conn["cq_hwm"]) > 0          # CQEs really share one ring
+
+
+def test_conn_send_requires_rc_and_matching_shapes(mesh2):
+    ud = verbs.QPConfig(transport="UD", msg_bytes=32)
+    conn = verbs.conn_init(CCFG, 2)
+    msgs = jnp.zeros((2, 1, 32), jnp.uint8)
+    with pytest.raises(verbs.TransportError):
+        verbs.conn_send(_dp(mesh2), ud, conn, msgs, jnp.int32(0), 0, 1)
+    with pytest.raises(verbs.TransportError):
+        verbs.conn_send(_dp(mesh2), CCFG, conn,
+                        jnp.zeros((3, 1, 32), jnp.uint8), jnp.int32(0), 0, 1)
+    with pytest.raises(verbs.TransportError):
+        verbs.conn_init(CCFG, 0)
+
+
+@pytest.mark.parametrize("fault", [
+    # QP 1's second message dropped (wr identity = qp * n + msg)
+    WireFault(drops=((1 * 4 + 1, 0),)),
+    # QP 2's first message corrupted, twice in a row
+    WireFault(corrupts=((2 * 4 + 0, 0), (2 * 4 + 0, 1))),
+    # background loss across every QP
+    WireFault(drop_rate=0.15, corrupt_rate=0.15, seed=7),
+])
+def test_conn_send_lossy_bit_identical(mesh2, fault):
+    Q, n = 3, 4
+    dp = _dp(mesh2)
+    payload = _conn_payload(Q, n, CCFG.msg_bytes, seed=7)
+    out, conn, rep = _run_conn(mesh2, dp, CCFG, _stack(payload),
+                               fault=fault)
+    np.testing.assert_array_equal(out, payload)
+    retrans = np.asarray(conn["retransmits"])
+    assert retrans.sum() > 0
+    assert rep[dp.tenant]["retransmits"] == retrans.sum()
+    # full recovery on every QP
+    np.testing.assert_array_equal(np.asarray(conn["retry_cnt"]),
+                                  np.zeros(Q, np.int32))
+
+
+def test_conn_send_scheduled_fault_hits_only_its_qp(mesh2):
+    """A rewind is per-QP: the shared CQ is epoch-filtered, never flushed
+    under the other connections."""
+    Q, n = 3, 4
+    dp = _dp(mesh2)
+    payload = _conn_payload(Q, n, CCFG.msg_bytes, seed=8)
+    fault = WireFault(drops=((1 * 4 + 1, 0),))
+    out, conn, _ = _run_conn(mesh2, dp, CCFG, _stack(payload), fault=fault)
+    np.testing.assert_array_equal(out, payload)
+    retrans = np.asarray(conn["retransmits"])
+    assert retrans[1] > 0
+    assert retrans[0] == 0 and retrans[2] == 0
+    # only the rewound QP changed epoch
+    epochs = np.asarray(conn["epoch"])
+    assert epochs[1] > 0 and epochs[0] == 0 and epochs[2] == 0
+
+
+def test_conn_send_fatal_qp_isolated(mesh2):
+    """One QP losing every transmission exhausts its retries and turns
+    fatal; the others complete bit-identically around it."""
+    Q, n = 3, 2
+    cfg = verbs.QPConfig(msg_bytes=32, depth=8, max_outstanding=3,
+                         retry_limit=2, rto_ticks=3, backoff_ticks=1)
+    dp = _dp(mesh2)
+    payload = _conn_payload(Q, n, cfg.msg_bytes, seed=9)
+    # drop every attempt of QP 1's messages
+    drops = tuple((1 * n + m, a) for m in range(n)
+                  for a in range(cfg.retry_limit + 2))
+    out, conn, _ = _run_conn(mesh2, dp, cfg, _stack(payload),
+                             fault=WireFault(drops=drops))
+    retry = np.asarray(conn["retry_cnt"])
+    assert retry[1] > cfg.retry_limit
+    np.testing.assert_array_equal(out[1], np.zeros_like(payload[1]))
+    np.testing.assert_array_equal(out[0], payload[0])
+    np.testing.assert_array_equal(out[2], payload[2])
+    assert retry[0] == 0 and retry[2] == 0
+
+
+def test_conn_qos_arbitration_charges_and_throttles(mesh2):
+    """The mediation token buckets arbitrate post order: a rate-limited
+    tenant's QPs still deliver bit-identically, but its bucket records
+    the deficit while the ungoverned tenant's does not."""
+    Q, n = 4, 3
+    payload = _conn_payload(Q, n, CCFG.msg_bytes, seed=10)
+    tenants = ("a", "b", "a", "b")
+    dp = Dataplane(
+        DataplaneConfig(mode="cord", emulate_costs=False), mesh=mesh2,
+        tenant="a", tenants=("a", "b"),
+        policies=[TelemetryPolicy(),
+                  QoSPolicy(rates={"b": 0.25}, burst=1.0)])
+    out, conn, rep = _run_conn(mesh2, dp, CCFG, _stack(payload),
+                               tenants=tenants)
+    np.testing.assert_array_equal(out, payload)
+    # the srq_post syscall is billed to the default tenant ("a")
+    assert rep["a"]["ops"] == 2 * n + 1 and rep["b"]["ops"] == 2 * n
+    assert rep["b"]["throttled"] > 0
+    assert rep["a"]["throttled"] == 0
+    assert rep["a"]["srq_grants"] == 2 * n
+    assert rep["b"]["srq_grants"] == 2 * n
+
+
+def test_srq_starvation_stalls_then_recovers(mesh2):
+    """Under-granted SRQ: the table stalls, the receiver re-posts its
+    consumed buffers, and delivery still completes bit-identically."""
+    Q, n = 2, 4
+    dp = _dp(mesh2)
+    payload = _conn_payload(Q, n, CCFG.msg_bytes, seed=11)
+    out, conn, rep = _run_conn(mesh2, dp, CCFG, _stack(payload), credits=2)
+    np.testing.assert_array_equal(out, payload)
+    assert rep[dp.tenant]["stalls"] > 0
+    assert int(conn["srq_owed"]) + int(conn["srq_credits"]) >= 0
+
+
+# ---------------------------------------------------------------------------
+# migration: quiesce / snapshot / restore with retry state in flight
+# ---------------------------------------------------------------------------
+
+def _conn_parts(mesh, dp, cfg, Q, *, tenants=None, fault=None, credits=0):
+    """Jitted init/grant/xfer/quiesce pieces of a migratable table."""
+    cspec = verbs.conn_specs()
+
+    def init_body(rt):
+        rank = jax.lax.axis_index("rank")
+        conn = verbs.conn_init(cfg, Q)
+        if credits:
+            conn, rt = verbs.srq_post(dp, cfg, conn, rank, dst=1,
+                                      n=credits, state=rt)
+        return conn, verbs.allreduce_state(rt)
+
+    def xfer_body(m, conn, rt):
+        rank = jax.lax.axis_index("rank")
+        out, conn, rt = verbs.conn_send(dp, cfg, conn, m[0], rank, src=0,
+                                        dst=1, state=rt, tenants=tenants,
+                                        fault=fault)
+        return out[None], conn, verbs.allreduce_state(rt)
+
+    def quiesce_body(conn, rt):
+        rank = jax.lax.axis_index("rank")
+        conn, rt = verbs.conn_quiesce(dp, cfg, conn, rank, src=0, state=rt,
+                                      tenants=tenants)
+        return conn, verbs.allreduce_state(rt)
+
+    return {
+        "init": jax.jit(compat.shard_map(
+            init_body, mesh=mesh, in_specs=(P(),),
+            out_specs=(cspec, P()))),
+        "xfer": jax.jit(compat.shard_map(
+            xfer_body, mesh=mesh,
+            in_specs=(P("rank", None, None, None), cspec, P()),
+            out_specs=(P("rank", None, None, None), cspec, P()))),
+        "quiesce": jax.jit(compat.shard_map(
+            quiesce_body, mesh=mesh, in_specs=(cspec, P()),
+            out_specs=(cspec, P()))),
+    }
+
+
+def test_conn_migration_under_loss_bit_identical(mesh2):
+    """The acceptance flow: half the transfer under injected loss on mesh
+    A, quiesce → stop-and-copy → restore onto a different mesh, the rest
+    there — the combined delivery matches an uninterrupted lossless run
+    and the table's fault counters ride along."""
+    Q, n, k = 3, 4, 2
+    mesh_b = compat.make_mesh((2,), ("rank",), devices=jax.devices()[2:4])
+    fault = WireFault(drop_rate=0.2, corrupt_rate=0.1, seed=12)
+    payload = _conn_payload(Q, n, CCFG.msg_bytes, seed=12)
+    msgs = _stack(payload)
+
+    dp_a, dp_b = _dp(mesh2), _dp(mesh_b)
+    pa = _conn_parts(mesh2, dp_a, CCFG, Q, fault=fault, credits=Q * n * 2)
+    pb = _conn_parts(mesh_b, dp_b, CCFG, Q, fault=fault)
+
+    # lossless baseline, uninterrupted
+    base, _, _ = _run_conn(mesh2, dp_a, CCFG, msgs)
+
+    conn, _ = pa["init"](dp_a.runtime_init())
+    out1, conn, _ = pa["xfer"](msgs[:, :, :k], conn, dp_a.runtime_init())
+    conn, _ = pa["quiesce"](conn, dp_a.runtime_init())
+    snap = verbs.conn_snapshot(conn)
+    assert int(snap["cq_head"] - snap["cq_tail"]) == 0, "CQ not quiesced"
+    # every QP's window is closed; nothing silently in flight
+    np.testing.assert_array_equal(snap["sq_head"], snap["cq_sent"])
+    retrans_a = snap["retransmits"].copy()
+
+    conn_b = verbs.conn_restore(snap, mesh_b)
+    out2, conn_b, _ = jax.block_until_ready(
+        pb["xfer"](msgs[:, :, k:], conn_b, dp_b.runtime_init()))
+    moved = np.concatenate([np.asarray(out1)[1], np.asarray(out2)[1]],
+                           axis=1)
+    np.testing.assert_array_equal(moved, np.asarray(base))
+    # migrated counters only ever grow — the snapshot carried them
+    snap_b = verbs.conn_snapshot(conn_b)
+    assert (snap_b["retransmits"] >= retrans_a).all()
+    assert (snap_b["srq_grants"] == 2 * k * np.ones(Q)).all() \
+        or (snap_b["srq_grants"] >= k).all()
+
+
+def test_conn_quiesce_routes_error_cqes_and_inflight(mesh2):
+    """Satellite: quiesce with the shared CQ holding an error CQE, a
+    stale-epoch CQE, and a QP with silently-dropped WRs in flight — each
+    routes to the right QP's rtx_pending, stale entries are discarded,
+    and retry/backoff state survives the snapshot bit-identically."""
+    Q = 3
+    dp = _dp(mesh2)
+    parts = _conn_parts(mesh2, dp, CCFG, Q)
+    conn, _ = parts["init"](dp.runtime_init())
+    snap = {k: np.array(v) for k, v in verbs.conn_snapshot(conn).items()}
+
+    # hand-build mid-retry state: QP1 took a NAK (error CQE in the ring,
+    # retry counter live), QP0 rewound earlier (a stale-epoch CQE is
+    # still queued), QP2 has two WRs in flight that never completed
+    snap["epoch"][0] = 2
+    snap["cq_status"][0] = verbs.CQE_ERR_RETRY
+    snap["cq_wrid"][0] = snap["cq_sent"][1]
+    snap["cq_qp"][0] = 1
+    snap["cq_epoch"][0] = snap["epoch"][1]
+    snap["cq_status"][1] = verbs.CQE_SEND
+    snap["cq_wrid"][1] = 5
+    snap["cq_qp"][1] = 0
+    snap["cq_epoch"][1] = 1                      # != epoch[0] == 2: stale
+    snap["cq_head"] = np.int32(2)
+    snap["sq_head"][2] = snap["cq_sent"][2] + 2  # dropped in flight
+    snap["retry_cnt"][1] = 3
+    snap["backoff"][1] = 1
+
+    conn = verbs.conn_restore(snap, mesh2)
+    conn, rt = parts["quiesce"](conn, dp.runtime_init())
+    q = {k: np.array(v) for k, v in verbs.conn_snapshot(conn).items()}
+
+    assert int(q["cq_head"] - q["cq_tail"]) == 0
+    # error CQE → QP1; stale CQE discarded (QP0 untouched); dropped → QP2
+    np.testing.assert_array_equal(q["rtx_pending"], [0, 1, 2])
+    np.testing.assert_array_equal(q["sq_head"], q["cq_sent"])
+    # in-flight retry state is preserved for the resuming side
+    assert q["retry_cnt"][1] == 3 and q["backoff"][1] == 1
+    assert q["epoch"][0] == 2
+    rep = dp.runtime_report(rt)[dp.tenant]
+    assert rep["cqe_errors"] == 1.0
+    assert rep["completions"] == 2.0             # both CQEs were drained
+
+
+def test_windowed_migration_under_loss_bit_identical(mesh2):
+    """Single-QP plane: a lossy windowed transfer split by quiesce →
+    snapshot → restore onto another mesh completes bit-identically, with
+    retransmission counters carried across the move."""
+    from benchmarks import perftest
+
+    n, k, msg_bytes, window = 8, 4, 64, 4
+    mesh_b = compat.make_mesh((2,), ("rank",), devices=jax.devices()[4:6])
+    payload = _payload(n, msg_bytes, seed=13)
+    msgs = _stack(payload)
+    fault = WireFault(drop_rate=0.2, seed=13)
+    cfg = verbs.QPConfig(msg_bytes=msg_bytes, depth=max(window, 2),
+                         max_outstanding=window)
+    dp_a, dp_b = _dp(mesh2), _dp(mesh_b)
+    qspec = verbs.qp_specs("rank")
+
+    def mk(mesh, dp, credits):
+        def init_body(rt):
+            rank = jax.lax.axis_index("rank")
+            qp = verbs.qp_init(cfg)
+            if credits:
+                qp, rt = verbs.post_recv(dp, cfg, qp, rank, dst=1,
+                                         n=credits, state=rt)
+            return qp, verbs.allreduce_state(rt)
+
+        def xfer_body(m, qp, rt):
+            rank = jax.lax.axis_index("rank")
+            out, qp, rt = verbs.windowed_send(dp, cfg, qp, m[0], rank,
+                                              src=0, dst=1, state=rt,
+                                              fault=fault)
+            return out[None], qp, verbs.allreduce_state(rt)
+
+        def quiesce_body(qp, rt):
+            rank = jax.lax.axis_index("rank")
+            qp, rt = verbs.qp_quiesce(dp, cfg, qp, rank, src=0, state=rt)
+            return qp, verbs.allreduce_state(rt)
+
+        return {
+            "init": jax.jit(compat.shard_map(
+                init_body, mesh=mesh, in_specs=(P(),),
+                out_specs=(qspec, P()))),
+            "xfer": jax.jit(compat.shard_map(
+                xfer_body, mesh=mesh,
+                in_specs=(P("rank", None, None), qspec, P()),
+                out_specs=(P("rank", None, None), qspec, P()))),
+            "quiesce": jax.jit(compat.shard_map(
+                quiesce_body, mesh=mesh, in_specs=(qspec, P()),
+                out_specs=(qspec, P()))),
+        }
+
+    pa, pb = mk(mesh2, dp_a, n * 4), mk(mesh_b, dp_b, 0)
+    qp, _ = pa["init"](dp_a.runtime_init())
+    out1, qp, _ = pa["xfer"](msgs[:, :k], qp, dp_a.runtime_init())
+    qp, _ = pa["quiesce"](qp, dp_a.runtime_init())
+    snap = verbs.qp_snapshot(qp)
+    assert int(snap["cq_head"] - snap["cq_tail"]) == 0
+    assert int(snap["sq_head"]) == int(snap["cq_sent"])
+    qp_b = verbs.qp_restore(snap, mesh_b)
+    out2, qp_b, _ = jax.block_until_ready(
+        pb["xfer"](msgs[:, k:], qp_b, dp_b.runtime_init()))
+    moved = np.concatenate([np.asarray(out1)[1], np.asarray(out2)[1]])
+    np.testing.assert_array_equal(moved, payload)
+    assert int(verbs.qp_snapshot(qp_b)["retry_cnt"]) == 0
+
+
+def test_conn_restore_rejects_non_table_snapshot(mesh2):
+    conn = verbs.conn_init(CCFG, 2)
+    snap = verbs.conn_snapshot(conn)
+    del snap["cq_qp"]
+    with pytest.raises(verbs.TransportError):
+        verbs.conn_restore(snap, mesh2)
+
+
+def test_conn_churn_round_under_loss(mesh2):
+    """Mini churn (the full ≥100-QP sweep is benchmarks/perftest.py):
+    tables created, driven under loss, quiesced and torn down in rounds
+    stay bit-identical throughout and reuse the same compiled shapes."""
+    Q, n = 4, 2
+    dp = _dp(mesh2)
+    fault = WireFault(drop_rate=0.2, seed=21)
+    for rnd in range(3):
+        payload = _conn_payload(Q, n, CCFG.msg_bytes, seed=30 + rnd)
+        out, conn, _ = _run_conn(mesh2, dp, CCFG, _stack(payload),
+                                 fault=fault)
+        np.testing.assert_array_equal(out, payload)
+        np.testing.assert_array_equal(np.asarray(conn["retry_cnt"]),
+                                      np.zeros(Q, np.int32))
