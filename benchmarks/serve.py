@@ -1,14 +1,22 @@
-"""Serve-path benchmark: gang-scheduled vs persistent-slot continuous
-batching (tokens/s, time-to-first-token, decode-step compile count).
+"""Serve-path benchmark: paged-KV vs fixed-stripe continuous batching,
+with the legacy gang scheduler as the convoy baseline (sustained
+tokens/s, p50/p99 time-to-first-token, decode-step compile counts).
 
     PYTHONPATH=src python -m benchmarks.serve [--fast] [--dry-run]
 
-The sweep serves a varied-prompt-length request stream through both
-schedulers at several queue depths (multiples of ``max_batch``) and emits
-``serve`` table rows; ``--dry-run`` is the CI smoke — a few bucket-aligned
-requests, asserting the continuous scheduler's temperature-0 outputs match
-gang scheduling and that the fixed-shape decode step compiled exactly
-once.
+The sweep serves a mixed long+short prompt stream at queue depths well
+past ``max_batch`` through three engines — gang, fixed-stripe continuous,
+and paged continuous at *equal KV memory* (the paged engine trades the
+stripe's per-slot headroom for extra decode slots) — and writes every
+row into a ``BENCH_serve.json`` artifact next to the per-tick engine
+timelines (``runs/serve_*_timeline.json``).
+
+``--dry-run`` is the CI smoke: the paged engine must emit bit-identical
+temperature-0 tokens to the fixed stripe on a uniform stream, admit (and
+chunk-prefill) a prompt longer than any stripe, match-or-beat the
+equal-memory stripe on tok/s with a lower p99 TTFT on the mixed stream,
+and surface nonzero preemption/restore counters in the saved timeline
+artifact.
 """
 
 from __future__ import annotations
@@ -20,11 +28,23 @@ import time
 MAX_BATCH = 4
 MAX_NEW = 32
 KV_LEN = 56
+BLOCK = 8
 _VARIED_LENGTHS = (5, 9, 14, 7, 15, 6, 11, 13)   # buckets 8 / 16
 # Per-request decode budgets: the wide spread is what exposes the gang
 # convoy effect — every early finisher idles its slot until the gang's
 # longest request (MAX_NEW steps) drains, while continuous refills it.
 _VARIED_BUDGETS = (2, MAX_NEW, 3, 5)
+
+# Equal-memory paged-vs-fixed pairing: the stripe engine preallocates
+# FIXED_BATCH × PAIR_KV cache positions; the paged engine spends the same
+# token capacity as a shared pool (PAIR_BLOCKS × BLOCK positions) and
+# runs PAGED_BATCH slots over it — slot count decoupled from stripe size.
+FIXED_BATCH = 2
+PAGED_BATCH = 6
+PAIR_KV = 128
+PAIR_BLOCKS = FIXED_BATCH * PAIR_KV // BLOCK
+_LONG_EVERY = 6                                   # 1 in 6 requests is long
+_LONG_LEN, _LONG_NEW = 40, 24
 
 
 def _build():
@@ -39,102 +59,200 @@ def _build():
     return cfg, model, params
 
 
-def _requests(n: int, equal_len: int = 0):
+def _requests(n: int, equal_len: int = 0, mixed: bool = False):
     import numpy as np
 
     from repro.serve import Request
 
-    lengths = [equal_len or _VARIED_LENGTHS[i % len(_VARIED_LENGTHS)]
-               for i in range(n)]
-    return [Request(rid=i,
-                    max_new_tokens=(MAX_NEW if equal_len else
-                                    _VARIED_BUDGETS[i % len(_VARIED_BUDGETS)]),
-                    prompt=np.asarray((np.arange(ln) + 3 * i) % 100,
-                                      np.int32))
-            for i, ln in enumerate(lengths)]
+    reqs = []
+    for i in range(n):
+        if mixed and i % _LONG_EVERY == 0:
+            ln, new = _LONG_LEN, _LONG_NEW
+        else:
+            ln = equal_len or _VARIED_LENGTHS[i % len(_VARIED_LENGTHS)]
+            new = (MAX_NEW if equal_len else
+                   _VARIED_BUDGETS[i % len(_VARIED_BUDGETS)])
+        reqs.append(Request(
+            rid=i, max_new_tokens=new,
+            prompt=np.asarray((np.arange(ln) + 3 * i) % 100, np.int32)))
+    return reqs
 
 
-def _engine(cfg, model, params, scheduler: str, obs=None):
+def _engine(cfg, model, params, scheduler: str, obs=None, *,
+            max_batch: int = MAX_BATCH, kv_cache_len: int = KV_LEN,
+            block_size: int = 0, n_blocks: int = 0, prefill_chunk: int = 512):
     from repro.configs.base import ServeConfig
     from repro.serve import Engine
 
     return Engine(model, params, cfg,
-                  ServeConfig(max_batch=MAX_BATCH, max_new_tokens=MAX_NEW,
-                              kv_cache_len=KV_LEN, scheduler=scheduler),
+                  ServeConfig(max_batch=max_batch, max_new_tokens=MAX_NEW,
+                              kv_cache_len=kv_cache_len, scheduler=scheduler,
+                              block_size=block_size, n_blocks=n_blocks,
+                              prefill_chunk=prefill_chunk),
                   eos_id=-1, obs=obs)
 
 
 def _serve(eng, make_reqs, repeats: int = 1):
     """Serve ``make_reqs()`` ``repeats`` times on a warm engine, reporting
     the best wall clock (per-request streams are rebuilt each repeat so
-    outputs don't accumulate)."""
-    best, done = float("inf"), []
+    outputs don't accumulate).  TTFT percentiles come from the best
+    repeat — queue wait included, which is exactly what the paged engine's
+    extra slots (and chunked prefill) are supposed to shrink."""
+    import numpy as np
+
+    best, done, ttft = float("inf"), [], []
     for _ in range(repeats):
         reqs = make_reqs()
         t0 = time.perf_counter()
-        done = eng.run(reqs)
-        best = min(best, time.perf_counter() - t0)
+        out = eng.run(reqs)
+        wall = time.perf_counter() - t0
+        if wall < best:
+            best, done = wall, out
+            ttft = [r.t_first - t0 for r in out if r.t_first is not None]
     toks = sum(len(r.out_tokens) for r in done)
-    ttft = [r.t_first - t0 for r in done if r.t_first is not None]
     return done, {
         "tok_s": round(toks / best, 1),
-        "ttft_ms_mean": round(1e3 * sum(ttft) / max(len(ttft), 1), 2),
-        "ttft_ms_max": round(1e3 * max(ttft), 2) if ttft else 0.0,
+        "ttft_ms_p50": round(1e3 * float(np.percentile(ttft, 50)), 2)
+        if ttft else 0.0,
+        "ttft_ms_p99": round(1e3 * float(np.percentile(ttft, 99)), 2)
+        if ttft else 0.0,
         "decode_compiles": eng.decode_compile_count(),
         "wall_s": round(best, 3),
     }
+
+
+def _save_artifact(rows: list[dict], path: str = "BENCH_serve.json") -> str:
+    with open(path, "w") as f:
+        json.dump({"bench": "serve", "rows": rows}, f, indent=1)
+    return path
+
+
+_PAIR = {
+    "gang": dict(max_batch=FIXED_BATCH, kv_cache_len=PAIR_KV),
+    "fixed": dict(max_batch=FIXED_BATCH, kv_cache_len=PAIR_KV),
+    "paged": dict(max_batch=PAGED_BATCH, kv_cache_len=PAIR_KV,
+                  block_size=BLOCK, n_blocks=PAIR_BLOCKS),
+}
 
 
 def run_all(fast: bool = False) -> list[dict]:
     from repro.core.obs import CounterTimeline
 
     cfg, model, params = _build()
-    depths = (2, 4) if fast else (2, 4, 8)       # × MAX_BATCH
+    depths = (8, 16) if fast else (8, 16, 32)      # queue depth ≫ max_batch
     rows = []
-    for scheduler in ("gang", "continuous"):
+    for name, geom in _PAIR.items():
+        scheduler = "gang" if name == "gang" else "continuous"
         # per-tick engine timeline, written next to the bench JSON
-        timeline = CounterTimeline(source=f"bench-serve/{scheduler}")
-        eng = _engine(cfg, model, params, scheduler, obs=timeline)
-        eng.run(_requests(2 * MAX_BATCH))        # warm the compile caches
-        for mult in depths:
-            n = mult * MAX_BATCH
-            _, stats = _serve(eng, lambda n=n: _requests(n), repeats=5)
-            row = {"table": "serve", "scheduler": scheduler,
-                   "queue_depth": n, "max_batch": MAX_BATCH,
-                   "max_new_tokens": MAX_NEW, **stats}
+        timeline = CounterTimeline(source=f"bench-serve/{name}")
+        eng = _engine(cfg, model, params, scheduler, obs=timeline, **geom)
+        eng.run(_requests(8, mixed=True))          # warm the compile caches
+        for n in depths:
+            _, stats = _serve(eng, lambda n=n: _requests(n, mixed=True),
+                              repeats=5)
+            row = {"table": "serve", "engine": name,
+                   "queue_depth": n, "max_new_tokens": MAX_NEW,
+                   **geom, **stats}
             rows.append(row)
             print(json.dumps(row))
-        path = timeline.save(f"runs/serve_{scheduler}_timeline.json")
-        print(json.dumps({"table": "serve", "scheduler": scheduler,
+        path = timeline.save(f"runs/serve_{name}_timeline.json")
+        print(json.dumps({"table": "serve", "engine": name,
                           "timeline": path,
                           "ticks": len(timeline.samples)}))
+    print(json.dumps({"table": "serve",
+                      "artifact": _save_artifact(rows)}))
     return rows
 
 
 def dry_run() -> None:
-    """CI smoke: bucket-aligned stream through both schedulers must emit
-    identical temperature-0 tokens, with exactly one decode compile on
-    the continuous side, and the attached engine timeline must round-trip
-    as a well-formed schema-versioned artifact."""
+    """CI smoke for the paged serving engine (see module docstring)."""
     from repro.core.obs import CounterTimeline
+    from repro.serve import ServeError
 
     cfg, model, params = _build()
-    timeline = CounterTimeline(source="bench-serve/dryrun")
-    done_c, stats_c = _serve(_engine(cfg, model, params, "continuous",
-                                     obs=timeline),
-                             lambda: _requests(6, equal_len=8))
-    done_g, stats_g = _serve(_engine(cfg, model, params, "gang"),
-                             lambda: _requests(6, equal_len=8))
-    out_c = {r.rid: r.out_tokens for r in done_c}
+    rows = []
+
+    # 1. uniform stream: gang ≡ fixed stripe ≡ paged at temperature 0,
+    #    one decode compile on both continuous layouts
+    done_g, _ = _serve(_engine(cfg, model, params, "gang"),
+                       lambda: _requests(6, equal_len=8))
+    fixed = _engine(cfg, model, params, "continuous")
+    done_f, stats_f = _serve(fixed, lambda: _requests(6, equal_len=8))
+    paged = _engine(cfg, model, params, "continuous", block_size=BLOCK)
+    assert paged.paged, "paged layout did not activate"
+    done_p, stats_p = _serve(paged, lambda: _requests(6, equal_len=8))
     out_g = {r.rid: r.out_tokens for r in done_g}
-    assert out_c == out_g, "continuous != gang at temperature 0"
-    assert stats_c["decode_compiles"] == 1, stats_c
+    out_f = {r.rid: r.out_tokens for r in done_f}
+    out_p = {r.rid: r.out_tokens for r in done_p}
+    assert out_f == out_g, "continuous != gang at temperature 0"
+    assert out_p == out_f, "paged != fixed stripe at temperature 0"
+    assert stats_f["decode_compiles"] == 1, stats_f
+    assert stats_p["decode_compiles"] == 1, stats_p
+
+    # 2. a prompt longer than ANY fixed stripe: the stripe engine rejects
+    #    it at submit; the paged engine serves it (chunk-at-a-time
+    #    prefill, 80 tokens through 16-token chunks), and chunked prefill
+    #    changes no tokens vs whole-prompt paged prefill
+    long_req = lambda: _requests(1, equal_len=80)
+    try:
+        fixed.run(long_req())
+        raise AssertionError("stripe engine admitted an 80-token prompt "
+                             f"into kv_cache_len={KV_LEN}")
+    except ServeError:
+        pass
+    whole = _engine(cfg, model, params, "continuous", block_size=BLOCK)
+    (done_w,) = whole.run(long_req())
+    chunked = _engine(cfg, model, params, "continuous", block_size=BLOCK,
+                      prefill_chunk=16)
+    assert chunked.chunked, "chunked prefill did not activate"
+    (done_c,) = chunked.run(long_req())
+    assert len(done_w.out_tokens) == MAX_NEW
+    assert done_c.out_tokens == done_w.out_tokens, \
+        "chunked prefill != whole prefill at temperature 0"
+
+    # 3. equal-memory mixed sweep: paged (more slots, same KV tokens)
+    #    must match-or-beat the fixed stripe on sustained tok/s and p99
+    #    TTFT at a queue depth well past either batch
+    pair = {}
+    for name in ("fixed", "paged"):
+        scheduler = "continuous"
+        eng = _engine(cfg, model, params, scheduler, **_PAIR[name])
+        eng.run(_requests(8, mixed=True))          # warm compile caches
+        _, stats = _serve(eng, lambda: _requests(18, mixed=True), repeats=3)
+        pair[name] = stats
+        rows.append({"table": "serve_dryrun", "engine": name,
+                     "queue_depth": 18, **_PAIR[name], **stats})
+    assert pair["paged"]["tok_s"] >= pair["fixed"]["tok_s"], pair
+    assert pair["paged"]["ttft_ms_p99"] <= pair["fixed"]["ttft_ms_p99"], pair
+
+    # 4. preemption visibility: a pool too small for both residents
+    #    forces preempt→resume, and the counters land in the timeline
+    #    artifact (cumulative counters + preempt_s/restore_s rates)
+    timeline = CounterTimeline(source="bench-serve/dryrun")
+    # 9 blocks fit one request's whole lifetime (the submit bound) but
+    # not two co-residents' decode growth (5 blocks each by the end)
+    tiny = _engine(cfg, model, params, "continuous", obs=timeline,
+                   max_batch=2, kv_cache_len=64, block_size=BLOCK,
+                   n_blocks=9)
+    done_t = tiny.run(_requests(2, equal_len=8))
+    assert all(len(r.out_tokens) == MAX_NEW for r in done_t)
+    rep = tiny.tenant_report()["default"]
+    assert rep["preemptions"] > 0 and rep["restores"] > 0, rep
     path = timeline.save("runs/serve_dryrun_timeline.json")
-    doc = CounterTimeline.load(path)             # validates the schema
+    doc = CounterTimeline.load(path)               # validates the schema
     assert doc["samples"], "engine timeline captured no ticks"
-    print(json.dumps({"table": "serve_dryrun", "requests": len(out_c),
+    last = doc["samples"][-1]["tenants"]["default"]
+    assert last["preemptions"] > 0 and last["restores"] > 0, last
+    assert "preempt_s" in doc["rate_fields"] and \
+        "restore_s" in doc["rate_fields"], doc["rate_fields"]
+    assert "free_blocks" in doc["samples"][-1]["gauges"]
+
+    print(json.dumps({"table": "serve_dryrun", "requests": len(out_p),
                       "timeline": path, "ticks": len(doc["samples"]),
-                      "continuous": stats_c, "gang": stats_g}))
+                      "preemptions": rep["preemptions"],
+                      "restores": rep["restores"],
+                      "fixed": pair["fixed"], "paged": pair["paged"],
+                      "artifact": _save_artifact(rows)}))
     print("serve dry-run ok")
 
 

@@ -272,6 +272,43 @@ class ServeConfig:
     # Per-tenant cap on concurrently held decode slots (0 = uncapped) —
     # the hard ceiling on a tenant's decode-step budget per engine step.
     max_slots_per_tenant: int = 0
+    # Paged KV cache (docs/serving.md).  block_size > 0 switches the
+    # continuous engine from per-slot fixed stripes to a shared block
+    # pool with per-slot block tables; 0 keeps the legacy stripe layout.
+    block_size: int = 0
+    # Usable pool blocks (0 = auto: max_batch * kv_cache_len/block_size,
+    # i.e. the same token capacity the stripe layout preallocates).
+    n_blocks: int = 0
+
+    def __post_init__(self):
+        if self.block_size < 0:
+            raise ValueError(f"block_size must be >= 0, got {self.block_size}")
+        if self.block_size > 0 and self.kv_cache_len % self.block_size:
+            raise ValueError(
+                f"block_size={self.block_size} must divide "
+                f"kv_cache_len={self.kv_cache_len} — partial trailing "
+                f"blocks would silently truncate a slot's cache")
+        if self.n_blocks < 0:
+            raise ValueError(f"n_blocks must be >= 0, got {self.n_blocks}")
+        if self.n_blocks > 0 and self.block_size == 0:
+            raise ValueError(
+                f"n_blocks={self.n_blocks} requires block_size > 0 — the "
+                f"pool is only allocated under the paged layout")
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0, got {self.prefill_chunk}")
+        if self.prefill_chunk > 0:
+            if self.prefill_chunk < 8 or (
+                    self.prefill_chunk & (self.prefill_chunk - 1)):
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must be 0 (off) or "
+                    f"a power of two >= 8 (the minimum prompt bucket) so "
+                    f"chunk covers nest inside prompt buckets")
+            if self.block_size > 0 and self.prefill_chunk % self.block_size:
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must be a multiple "
+                    f"of block_size={self.block_size} so chunk scatters stay "
+                    f"block-aligned")
 
 
 @dataclass(frozen=True)

@@ -65,7 +65,8 @@ TIMELINE_SCHEMAS = (TIMELINE_SCHEMA_V1, TIMELINE_SCHEMA)
 # validate_timeline checks a document against its OWN rate_fields list.
 RATE_FIELDS = ("ops_s", "bytes_s", "chunks_s", "throttled_pct",
                "stalls_pct", "denied_pct", "cq_depth",
-               "retrans_s", "timeouts_s", "srq_grants_s", "cqe_err_pct")
+               "retrans_s", "timeouts_s", "srq_grants_s", "cqe_err_pct",
+               "preempt_s", "restore_s")
 
 _SPARK_BLOCKS = "▁▂▃▄▅▆▇█"
 
@@ -274,6 +275,8 @@ class CounterTimeline:
                 "srq_grants_s": d.get("srq_grants", 0.0) / dt,
                 "cqe_err_pct": (100.0 * d.get("cqe_errors", 0.0) / comp
                                 if comp > 0 else 0.0),
+                "preempt_s": d.get("preemptions", 0.0) / dt,
+                "restore_s": d.get("restores", 0.0) / dt,
             }
         return out
 

@@ -53,11 +53,14 @@ CTR_CQE_ERRORS = 12  # error-status CQEs drained (CQE_ERR_*)
 CTR_CQ_SHED = 13     # CQEs shed on CQ-ring overrun (lost completions)
 CTR_KERNEL_ITERS = 14   # delay iterations burned in-kernel (mediated_cost)
 CTR_KERNEL_COPIES = 15  # bounce-copy passes executed in-kernel
-NUM_COUNTERS = 16
+CTR_PREEMPTIONS = 16    # decode slots preempted (pool pressure / budget)
+CTR_RESTORES = 17       # preempted requests resumed (recompute prefill)
+NUM_COUNTERS = 18
 COUNTER_NAMES = ("ops", "bytes", "denied", "chunks", "throttled",
                  "stalls", "credits", "completions", "cq_depth",
                  "retransmits", "timeouts", "srq_grants", "cqe_errors",
-                 "cq_shed", "kernel_iters", "kernel_copies")
+                 "cq_shed", "kernel_iters", "kernel_copies",
+                 "preemptions", "restores")
 
 
 @dataclass
@@ -130,7 +133,7 @@ def counters_init() -> jax.Array:
 def _counter_row(ops, bytes, denied, chunks, throttled, stalls, credits,
                  completions, retransmits=0, timeouts=0, srq_grants=0,
                  cqe_errors=0, cq_shed=0, kernel_iters=0,
-                 kernel_copies=0) -> jax.Array:
+                 kernel_copies=0, preemptions=0, restores=0) -> jax.Array:
     # CQ depth is a high-water mark, never additive — it has no slot in the
     # bump row (see tenant_counters_peak) and stays 0 here.
     return jnp.stack([jnp.asarray(v, jnp.float32)
@@ -138,19 +141,21 @@ def _counter_row(ops, bytes, denied, chunks, throttled, stalls, credits,
                                 stalls, credits, completions, 0,
                                 retransmits, timeouts, srq_grants,
                                 cqe_errors, cq_shed, kernel_iters,
-                                kernel_copies)])
+                                kernel_copies, preemptions, restores)])
 
 
 def counters_bump(ctrs: jax.Array, *, ops=0, bytes=0, denied=0, chunks=0,
                   throttled=0, stalls=0, credits=0, completions=0,
                   retransmits=0, timeouts=0, srq_grants=0, cqe_errors=0,
-                  cq_shed=0, kernel_iters=0, kernel_copies=0) -> jax.Array:
+                  cq_shed=0, kernel_iters=0, kernel_copies=0,
+                  preemptions=0, restores=0) -> jax.Array:
     """Return updated counters. This is the per-op mediation computation in
     cord mode — a handful of scalar adds, the 'syscall body'."""
     return ctrs + _counter_row(ops, bytes, denied, chunks, throttled,
                                stalls, credits, completions, retransmits,
                                timeouts, srq_grants, cqe_errors, cq_shed,
-                               kernel_iters, kernel_copies)
+                               kernel_iters, kernel_copies, preemptions,
+                               restores)
 
 
 def counters_dict(ctrs: np.ndarray) -> dict[str, float]:
@@ -172,7 +177,8 @@ def tenant_counters_bump(ctrs: jax.Array, tenant_idx, *, ops=0, bytes=0,
                          denied=0, chunks=0, throttled=0, stalls=0, credits=0,
                          completions=0, retransmits=0, timeouts=0,
                          srq_grants=0, cqe_errors=0, cq_shed=0,
-                         kernel_iters=0, kernel_copies=0) -> jax.Array:
+                         kernel_iters=0, kernel_copies=0, preemptions=0,
+                         restores=0) -> jax.Array:
     """Bump one tenant's counter row.  ``tenant_idx`` is an index into the
     dataplane's tenant table — usually a static int, but ``.at[].add``
     accepts a traced index too (the multi-QP connection table routes
@@ -182,7 +188,7 @@ def tenant_counters_bump(ctrs: jax.Array, tenant_idx, *, ops=0, bytes=0,
         _counter_row(ops, bytes, denied, chunks, throttled,
                      stalls, credits, completions, retransmits, timeouts,
                      srq_grants, cqe_errors, cq_shed, kernel_iters,
-                     kernel_copies))
+                     kernel_copies, preemptions, restores))
 
 
 def tenant_counters_peak(ctrs: jax.Array, tenant_idx: int, *,
@@ -231,5 +237,6 @@ __all__ = [
     "CTR_STALLS", "CTR_CREDITS", "CTR_COMPLETIONS", "CTR_CQ_DEPTH",
     "CTR_RETRANSMITS", "CTR_TIMEOUTS", "CTR_SRQ_GRANTS", "CTR_CQE_ERRORS",
     "CTR_CQ_SHED", "CTR_KERNEL_ITERS", "CTR_KERNEL_COPIES",
+    "CTR_PREEMPTIONS", "CTR_RESTORES",
     "NUM_COUNTERS", "COUNTER_NAMES",
 ]

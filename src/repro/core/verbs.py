@@ -115,6 +115,12 @@ class QPConfig:
     retry_limit: int = 7
     rto_ticks: int = 8
     backoff_ticks: int = 1
+    # adaptive RTO: re-arm the retransmission timer from an EWMA of the
+    # QP's observed drain latency (see :func:`adaptive_rto`) instead of
+    # the static ``rto_ticks``.  The static value stays the hard ceiling
+    # — fuel bounds and worst-case latency are unchanged — and the
+    # fallback until the first in-order completion is sampled.
+    adaptive_rto: bool = True
 
     def __post_init__(self):
         if self.transport not in ("RC", "UD"):
@@ -604,6 +610,19 @@ def windowed_send(dp: Dataplane, cfg: QPConfig, qp: dict, msgs: jax.Array,
     return out, qp, state
 
 
+def adaptive_rto(srtt, nsamp, cfg: QPConfig) -> jax.Array:
+    """Retransmission timeout derived from the observed drain latency:
+    ``2 * ceil(srtt) + 1`` ticks, clamped to ``[2, cfg.rto_ticks]``.
+    ``srtt`` is an EWMA (gain 1/8) of in-order ack spacing in loop ticks;
+    ``nsamp`` counts samples.  With no samples yet the static
+    ``cfg.rto_ticks`` is returned unchanged, and the clamp keeps the
+    static value a hard ceiling so retry fuel bounds stay valid.  Works
+    elementwise, so per-QP ``(Q,)`` estimates vectorise for free."""
+    est = 2 * jnp.ceil(srtt).astype(jnp.int32) + 1
+    return jnp.where(nsamp > 0, jnp.clip(est, 2, cfg.rto_ticks),
+                     jnp.int32(cfg.rto_ticks))
+
+
 def _windowed_send_rtx(dp: Dataplane, cfg: QPConfig, qp: dict,
                        msgs: jax.Array, rank: jax.Array, src: int, dst: int,
                        *, op: str, state, tenant, dp_peer, fault
@@ -644,12 +663,13 @@ def _windowed_send_rtx(dp: Dataplane, cfg: QPConfig, qp: dict,
     D = cfg.effective_cq_depth
 
     def cond(carry):
-        t, i, qp, out, state, attempts, rto, fatal = carry
+        t, i, qp, out, state, attempts, rto, fatal = carry[:8]
         done = ((i >= n) & (qp["cq_sent"] - cs0 >= n)) | fatal
         return (t < fuel) & ~done
 
     def body(carry):
-        t, i, qp, out, state, attempts, rto, fatal = carry
+        (t, i, qp, out, state, attempts, rto, fatal,
+         srtt, nsamp, last_ack) = carry
         in_flight = qp["sq_head"] - qp["cq_sent"]
         on_src = rank == src
         have_credit = (qp["credits"] > 0) if uses_credits \
@@ -739,6 +759,14 @@ def _windowed_send_rtx(dp: Dataplane, cfg: QPConfig, qp: dict,
         qp = _cqe_consume(qp, cfg, do_drain.astype(jnp.int32))
         qp = {**qp, "cq_sent": qp["cq_sent"] + in_order.astype(jnp.int32)}
 
+        # -- adaptive RTO: sample in-order ack spacing (drain latency) ---
+        sample = (t - last_ack).astype(jnp.float32)
+        srtt = jnp.where(in_order,
+                         jnp.where(nsamp == 0, sample,
+                                   0.875 * srtt + 0.125 * sample), srtt)
+        nsamp = nsamp + in_order.astype(jnp.int32)
+        last_ack = jnp.where(in_order, t, last_ack)
+
         # -- go-back-N rewind: NAK, sequence gap, or RTO expiry ---------
         rew = is_err | is_gap | timeout
         new_retry = qp["retry_cnt"] + rew.astype(jnp.int32)
@@ -775,8 +803,10 @@ def _windowed_send_rtx(dp: Dataplane, cfg: QPConfig, qp: dict,
         out = tech.tie(out, tok)
 
         # any forward progress (or a rewind) re-arms the RTO
+        armed = adaptive_rto(srtt, nsamp, cfg) if cfg.adaptive_rto \
+            else jnp.int32(cfg.rto_ticks)
         rto = jnp.where(can_post | do_drain | rew | backing_off,
-                        jnp.int32(cfg.rto_ticks), rto - 1)
+                        armed, rto - 1)
 
         # -- runtime accounting (active side only) ----------------------
         state = _bump(state, ti, on_src & can_post,
@@ -787,12 +817,14 @@ def _windowed_send_rtx(dp: Dataplane, cfg: QPConfig, qp: dict,
         state = _bump(state, ti, on_src & do_stall, stalls=1)
         state = _bump(state, ti, on_src & timeout, timeouts=1)
         state = _peak(state, ti, on_src, cq_occupancy(qp))
-        return t + 1, i, qp, out, state, attempts, rto, fatal
+        return (t + 1, i, qp, out, state, attempts, rto, fatal,
+                srtt, nsamp, last_ack)
 
     i0 = qp["sq_head"] - cs0   # resume mid-window after a restore
-    _, _, qp, out, state, _, _, _ = jax.lax.while_loop(
+    _, _, qp, out, state, *_ = jax.lax.while_loop(
         cond, body, (jnp.int32(0), i0, qp, out0, state, attempts0,
-                     jnp.int32(cfg.rto_ticks), jnp.bool_(False)))
+                     jnp.int32(cfg.rto_ticks), jnp.bool_(False),
+                     jnp.float32(0.0), jnp.int32(0), jnp.int32(0)))
     return out, qp, state
 
 
@@ -1129,13 +1161,14 @@ def conn_send(dp: Dataplane, cfg: QPConfig, conn: dict, msgs: jax.Array,
     arn = jnp.arange(n, dtype=jnp.int32)
 
     def cond(carry):
-        t, conn, i_arr, out, state, attempts, rto_arr, rr = carry
+        t, conn, i_arr, out, state, attempts, rto_arr, rr = carry[:8]
         acked = conn["cq_sent"] - cs0
         fatal_q = conn["retry_cnt"] > cfg.retry_limit
         return (t < fuel) & ~jnp.all((acked >= n) | fatal_q)
 
     def body(carry):
-        t, conn, i_arr, out, state, attempts, rto_arr, rr = carry
+        (t, conn, i_arr, out, state, attempts, rto_arr, rr,
+         srtt_q, nsamp_q, last_ack_q) = carry
         on_src = rank == src
         in_flight = conn["sq_head"] - conn["cq_sent"]        # (Q,)
         fatal_q = conn["retry_cnt"] > cfg.retry_limit
@@ -1257,6 +1290,16 @@ def conn_send(dp: Dataplane, cfg: QPConfig, conn: dict, msgs: jax.Array,
         conn = {**conn,
                 "cq_sent": conn["cq_sent"]
                 + (oh_qt & in_order).astype(jnp.int32)}
+
+        # -- adaptive RTO: per-QP EWMA of in-order ack spacing -----------
+        hit = oh_qt & in_order                                # (Q,)
+        sample = (t - last_ack_q).astype(jnp.float32)
+        srtt_q = jnp.where(hit,
+                           jnp.where(nsamp_q == 0, sample,
+                                     0.875 * srtt_q + 0.125 * sample),
+                           srtt_q)
+        nsamp_q = nsamp_q + hit.astype(jnp.int32)
+        last_ack_q = jnp.where(hit, t, last_ack_q)
         if mediated:
             state = _bump(state, ti_arr[qt], on_src & live,
                           completions=1,
@@ -1319,17 +1362,21 @@ def conn_send(dp: Dataplane, cfg: QPConfig, conn: dict, msgs: jax.Array,
 
         # -- per-QP RTO: served QPs re-arm, idle in-flight QPs count down
         served = (oh_pick & can_post) | (oh_qt & live) | rew_q | backing
+        armed = adaptive_rto(srtt_q, nsamp_q, cfg) if cfg.adaptive_rto \
+            else jnp.full((Q,), cfg.rto_ticks, jnp.int32)
         rto_arr = jnp.where(
-            served, jnp.int32(cfg.rto_ticks),
+            served, armed,
             jnp.where((conn["sq_head"] - conn["cq_sent"]) > 0,
-                      rto_arr - 1, jnp.int32(cfg.rto_ticks)))
+                      rto_arr - 1, armed))
         rr = jnp.where(can_post, jnp.mod(pick + 1, Q), rr)
-        return (t + 1, conn, i_arr, out, state, attempts, rto_arr, rr)
+        return (t + 1, conn, i_arr, out, state, attempts, rto_arr, rr,
+                srtt_q, nsamp_q, last_ack_q)
 
     carry = (jnp.int32(0), conn, conn["sq_head"] - cs0, out0, state,
              attempts0, jnp.full((Q,), cfg.rto_ticks, jnp.int32),
-             jnp.int32(0))
-    _, conn, _, out, state, _, _, _ = jax.lax.while_loop(cond, body, carry)
+             jnp.int32(0), jnp.zeros((Q,), jnp.float32),
+             jnp.zeros((Q,), jnp.int32), jnp.zeros((Q,), jnp.int32))
+    _, conn, _, out, state, *_ = jax.lax.while_loop(cond, body, carry)
     return out, conn, state
 
 
@@ -1414,7 +1461,7 @@ def conn_restore(conn_host: dict, mesh, *, axis: str = "rank") -> dict:
 __all__ = [
     "QPConfig", "TransportError", "UD_MTU",
     "CQE_EMPTY", "CQE_SEND", "CQE_RECV", "CQE_ERR_RETRY", "CQE_ERR_FATAL",
-    "qp_init",
+    "qp_init", "adaptive_rto",
     "post_send", "post_recv", "flush_send", "poll_cq", "windowed_send",
     "qp_specs", "qp_quiesce", "qp_snapshot", "qp_restore",
     "conn_init", "conn_specs", "srq_post", "conn_send",

@@ -1,7 +1,13 @@
 """Serving launcher: batched requests through the Engine.
 
 ``python -m repro.launch.serve --arch gemma3-1b --requests 8
-[--scheduler continuous|gang] [--timeline]``
+[--scheduler continuous|gang] [--block-size 16] [--n-blocks N]
+[--prefill-chunk 512] [--timeline]``
+
+``--block-size`` switches the continuous engine to the paged KV block
+pool (docs/serving.md); ``--n-blocks`` sizes the pool (0 = the stripe
+layout's token capacity); ``--prefill-chunk`` bounds how many prompt
+tokens one engine tick may prefill (0 disables chunking).
 
 ``--timeline`` attaches a :class:`~repro.core.obs.CounterTimeline` to the
 engine: one per-tick snapshot of the serve counter block (WFQ grants,
@@ -32,6 +38,15 @@ def main() -> None:
     ap.add_argument("--scheduler", default="continuous",
                     choices=("continuous", "gang"))
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged KV: pool block size in tokens (0 = legacy "
+                         "fixed stripe; 16 is a good starting point)")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="paged KV: usable pool blocks (0 = auto: the "
+                         "stripe layout's token capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=512,
+                    help="chunked prefill: tokens per prefill tick "
+                         "(power of two >= 8; 0 disables chunking)")
     ap.add_argument("--timeline", action="store_true",
                     help="per-tick engine snapshots into "
                          "runs/<arch>_serve_timeline.json")
@@ -43,14 +58,20 @@ def main() -> None:
     # cache sized for the longest prompt bucket (prompts are 6..10 tokens)
     # plus the requested decode budget
     kv_len = prompt_bucket(10) + args.max_new_tokens + 1
+    kv_len = max(kv_len, 128)
+    if args.block_size > 0:              # keep block_size | kv_cache_len
+        kv_len = -(-kv_len // args.block_size) * args.block_size
     obs = ObsConfig(timeline=args.timeline)
     timeline = CounterTimeline(source=f"serve/{args.arch}") \
         if obs.timeline else None
     eng = Engine(model, params, cfg,
                  ServeConfig(max_batch=args.max_batch,
                              max_new_tokens=args.max_new_tokens,
-                             kv_cache_len=max(kv_len, 128),
-                             scheduler=args.scheduler),
+                             kv_cache_len=kv_len,
+                             scheduler=args.scheduler,
+                             block_size=args.block_size,
+                             n_blocks=args.n_blocks,
+                             prefill_chunk=args.prefill_chunk),
                  eos_id=-1, obs=timeline, obs_every=obs.every)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6 + i % 5),

@@ -118,6 +118,151 @@ def cache_validity(max_len: int, filled_len) -> jax.Array:
     return jnp.arange(max_len, dtype=jnp.int32) < filled_len
 
 
+# ---------------------------------------------------------------------------
+# Paged KV block pool (vLLM-style, docs/serving.md)
+# ---------------------------------------------------------------------------
+#
+# The paged layout replaces the per-slot stripe with ONE shared pool of
+# fixed-size blocks: ``(layers, n_blocks + 1, block_size, kv_heads,
+# head_dim)`` per k/v leaf, plus a host-side ``(max_batch, tables_len)``
+# int32 block table mapping each slot's logical block index to a physical
+# pool block.  Physical block 0 is reserved as a shared *null* block:
+# free slots and unallocated table tail entries point at it, so gathers
+# stay total functions of the table (garbage rows are masked by the same
+# per-slot validity that guards stripe decode).  Scatters for inactive
+# slots are routed to the out-of-bounds index ``n_blocks + 1`` and
+# dropped (`mode="drop"`), never corrupting block 0.
+
+def kv_pool_init(layers: int, n_blocks: int, block_size: int, kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16) -> dict:
+    """Block pool with ``n_blocks`` usable blocks (physical ids 1..n_blocks;
+    id 0 is the shared null block)."""
+    shape = (layers, n_blocks + 1, block_size, kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_pool_gather(pool: dict, tables, block_size: int) -> dict:
+    """Materialise a dense (layers, B, T*block_size, KVH, hd) decode cache
+    from the pool by per-slot block table (B, T) — the paged engine's view
+    for the UNCHANGED fixed-shape decode step.  Rows mapped to the null
+    block read zeros; validity masking keeps them unattended."""
+    tables = jnp.asarray(tables, jnp.int32)
+
+    def one(buf):
+        ll, _, bs, kvh, hd = buf.shape
+        b, t = tables.shape
+        g = buf[:, tables]                     # (L, B, T, bs, KVH, hd)
+        return g.reshape(ll, b, t * bs, kvh, hd)
+
+    return {name: one(buf) for name, buf in pool.items()}
+
+
+def kv_pool_scatter_token(pool: dict, cache: dict, tables, pos, active,
+                          block_size: int) -> dict:
+    """Write back the ONE token each active slot appended this decode tick.
+
+    ``cache`` is the gathered dense cache AFTER the decode step (the new
+    token sits at per-slot ``pos``); the token is extracted per slot and
+    scattered to pool block ``tables[slot, pos // block_size]`` at offset
+    ``pos % block_size``.  Inactive slots scatter to the out-of-bounds
+    physical index and are dropped."""
+    tables = jnp.asarray(tables, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    active = jnp.asarray(active, bool)
+    b = tables.shape[0]
+    rows = jnp.arange(b, dtype=jnp.int32)
+
+    def one(buf, dense):
+        n_total = buf.shape[1]                 # n_blocks + 1
+        tok = dense[:, rows, pos]              # (L, B, KVH, hd)
+        blk = tables[rows, pos // block_size]  # (B,) physical ids
+        blk = jnp.where(active, blk, jnp.int32(n_total))  # OOB → dropped
+        return buf.at[:, blk, pos % block_size].set(
+            tok.astype(buf.dtype), mode="drop")
+
+    return {name: one(buf, cache[name]) for name, buf in pool.items()}
+
+
+def kv_pool_insert(pool: dict, prefilled: dict, block_ids,
+                   block_size: int) -> dict:
+    """Insert one prefilled request's cache (leading batch dim 1, capacity
+    ``cap``) into the pool blocks ``block_ids`` (static-length int32 array,
+    ceil(cap / block_size) entries; pad unused entries with the OOB index
+    so they drop)."""
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+
+    def one(buf, src):
+        ll, _, bs, kvh, hd = buf.shape
+        src = src[:, 0]                        # (L, cap, KVH, hd)
+        cap = src.shape[1]
+        pad = (-cap) % bs
+        if pad:
+            src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        chunks = src.reshape(ll, -1, bs, kvh, hd)   # (L, nblk, bs, KVH, hd)
+        return buf.at[:, block_ids].set(chunks.astype(buf.dtype),
+                                        mode="drop")
+
+    return {name: one(buf, prefilled[name]) for name, buf in pool.items()}
+
+
+def kv_pool_scatter_chunk(pool: dict, cache: dict, table_row, offset,
+                          chunk: int, block_size: int) -> dict:
+    """Scatter one prefill chunk (written into a dense batch-1 ``cache`` at
+    traced ``offset``) into the pool.  ``offset`` and ``chunk`` are multiples
+    of ``block_size`` (ServeConfig validation), so the chunk covers whole
+    blocks: ids come from ``table_row[offset//bs : offset//bs + chunk//bs]``
+    via a traced dynamic slice."""
+    table_row = jnp.asarray(table_row, jnp.int32)
+    offset = jnp.asarray(offset, jnp.int32)
+    nblk = chunk // block_size
+
+    def one(buf, dense):
+        ll, _, bs, kvh, hd = buf.shape
+        piece = jax.lax.dynamic_slice(
+            dense, (0, 0, offset, 0, 0),
+            (ll, 1, chunk, kvh, hd))[:, 0]          # (L, chunk, KVH, hd)
+        chunks = piece.reshape(ll, nblk, bs, kvh, hd)
+        ids = jax.lax.dynamic_slice(table_row, (offset // bs,), (nblk,))
+        return buf.at[:, ids].set(chunks.astype(buf.dtype), mode="drop")
+
+    return {name: one(buf, cache[name]) for name, buf in pool.items()}
+
+
+class BlockAllocator:
+    """Host-side free-list over the pool's usable physical blocks
+    (ids 1..n_blocks; 0 is the null block).  All-or-nothing ``alloc``;
+    double-free raises — table bugs corrupt *other tenants'* caches, so
+    they must fail loudly."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError(f"need n_blocks >= 1, got {n_blocks}")
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks, 0, -1))   # pop() yields 1, 2, ...
+        self._held: set[int] = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, k: int) -> list[int] | None:
+        """Claim ``k`` blocks, or None (and no change) if fewer are free."""
+        if k < 0:
+            raise ValueError(f"need k >= 0, got {k}")
+        if k > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(k)]
+        self._held.update(ids)
+        return ids
+
+    def free(self, ids) -> None:
+        for i in ids:
+            if i not in self._held:
+                raise ValueError(f"double free / foreign block id {i}")
+            self._held.discard(i)
+            self._free.append(int(i))
+
+
 def kv_cache_constrain(dp, cache, *, tag: str = "kvcache",
                        qos: str = "kvcache", tenant: str | None = None):
     """Issue the KV cache's sharding edges through the dataplane.
@@ -134,4 +279,6 @@ def kv_cache_constrain(dp, cache, *, tag: str = "kvcache",
 
 __all__ = ["kv_cache_init", "kv_update", "kv_update_slots", "kv_slot_insert",
            "slot_vectors_init", "slot_validity", "cache_positions",
-           "cache_validity", "kv_cache_constrain", "KV_CACHE_AXES"]
+           "cache_validity", "kv_cache_constrain", "KV_CACHE_AXES",
+           "kv_pool_init", "kv_pool_gather", "kv_pool_scatter_token",
+           "kv_pool_insert", "kv_pool_scatter_chunk", "BlockAllocator"]

@@ -36,6 +36,9 @@ class Model:
     # for families without a slot-aware decode path; the serving engine
     # falls back to gang scheduling when absent.
     decode_step_slots: Callable | None = None
+    # Chunked prefill: write one (B, C) chunk at a traced offset.  None for
+    # families without it; the engine prefills whole prompts when absent.
+    prefill_chunk: Callable | None = None
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -58,6 +61,9 @@ def build_model(cfg: ModelConfig) -> Model:
             decode_step_slots=lambda params, token, cache, pos, **kw:
                 m.transformer_decode_step_slots(params, cfg, token, cache,
                                                 pos, **kw),
+            prefill_chunk=lambda params, batch, cache, offset, **kw:
+                m.transformer_prefill_chunk(params, cfg, batch, cache,
+                                            offset, **kw),
         )
     if fam == "hybrid":
         m = hybrid

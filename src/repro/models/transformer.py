@@ -147,6 +147,25 @@ def _layer(lp, x, *, cfg, dp, positions, window, theta, mode,
         o = attend_naive(q, ck, cv, valid[:, None, :],
                          logit_cap=a.logit_softcap)
         new_ck, new_cv = cache_k, cache_v
+    elif mode == "chunk":
+        # chunked prefill: q len C written into the cache at a *traced*
+        # offset (cache_pos), attending to everything filled so far.  The
+        # cache constrain is the same mediation edge decode pays, so every
+        # chunk is accounted through the fused pipeline like a decode tick.
+        cache_k, cache_v = kv_update(cache_k, cache_v, k, v, cache_pos)
+        s_max = cache_k.shape[1]
+        k_pos = jnp.arange(s_max, dtype=jnp.int32)
+        k_valid = k_pos < cache_pos + q.shape[1]
+        ck = constrain(dp, cache_k,
+                       ("batch", "kv_seq", "kv_heads", "cache_head_dim"),
+                       tag="attn/cache_k")
+        cv = constrain(dp, cache_v,
+                       ("batch", "kv_seq", "kv_heads", "cache_head_dim"),
+                       tag="attn/cache_v")
+        o = attend(q, ck, cv, q_pos=positions, k_pos=k_pos, causal=True,
+                   window=window, logit_cap=a.logit_softcap, k_valid=k_valid,
+                   impl="flash", q_block=q_block, kv_block=kv_block)
+        new_ck, new_cv = cache_k, cache_v
     else:  # decode: q len 1 against the cache
         cache_k, cache_v = kv_update(cache_k, cache_v, k, v, cache_pos)
         s_max = cache_k.shape[1]
@@ -276,6 +295,50 @@ def transformer_prefill(params, cfg: ModelConfig, batch: dict, cache, *,
     return logits_fn(params["embed"], last, dp=dp), cache
 
 
+def transformer_prefill_chunk(params, cfg: ModelConfig, batch: dict, cache,
+                              offset, *, dp=None, last_pos=None,
+                              kv_block=1024):
+    """One prefill *chunk*: write ``batch["tokens"]`` (B, C) into the cache
+    at traced position ``offset`` and attend causally to everything filled
+    so far.  Returns (logits, cache) like :func:`transformer_prefill`;
+    the logits only matter on the chunk containing ``last_pos`` (the last
+    real prompt token) — earlier chunks' logits are discarded by the
+    caller.
+
+    ``offset`` is a traced scalar, so ONE jitted chunk step serves every
+    chunk of every prompt of a given chunk length — the chunked analogue
+    of the fixed-shape slot decode.  Token-only batches (no vision
+    prefix); the engine falls back to whole prefill otherwise."""
+    dtype = dtype_of(cfg.dtype)
+    tokens = batch["tokens"]
+    b, c = tokens.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    x = embed(params["embed"], tokens, dtype, dp=dp)
+    positions = offset + jnp.arange(c, dtype=jnp.int32)
+    window_arr, theta_arr = layer_flags(cfg)
+
+    def body(x, xs):
+        lp, w, th, ck, cv = xs
+        x, _aux, ck, cv = _layer(lp, x, cfg=cfg, dp=dp, positions=positions,
+                                 window=w, theta=th, mode="chunk",
+                                 cache_k=ck, cache_v=cv, cache_pos=offset,
+                                 kv_block=kv_block)
+        return x, (ck, cv)
+
+    xs = (params["layers"], jnp.asarray(window_arr), jnp.asarray(theta_arr),
+          cache["k"], cache["v"])
+    x, caches = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    from repro.layers.embedding import logits as logits_fn
+    if last_pos is None:
+        last = x[:, -1:, :]
+    else:
+        idx = jnp.clip(jnp.asarray(last_pos, jnp.int32) - offset, 0, c - 1)
+        last = x[jnp.arange(b), idx][:, None, :]
+    return logits_fn(params["embed"], last, dp=dp), {"k": caches[0],
+                                                     "v": caches[1]}
+
+
 def transformer_decode_step(params, cfg: ModelConfig, token, cache, pos, *,
                             dp=None, kv_block=1024):
     """One decode step. token: (B,1) int32; pos: scalar int32 (current
@@ -337,5 +400,6 @@ def transformer_decode_step_slots(params, cfg: ModelConfig, token, cache,
 __all__ = [
     "transformer_init", "transformer_apply", "transformer_loss",
     "transformer_init_cache", "transformer_prefill",
-    "transformer_decode_step", "transformer_decode_step_slots", "layer_flags",
+    "transformer_prefill_chunk", "transformer_decode_step",
+    "transformer_decode_step_slots", "layer_flags",
 ]

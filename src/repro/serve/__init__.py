@@ -1,3 +1,11 @@
-from repro.serve.engine import Engine, Request, WFQScheduler, prompt_bucket, sample
+from repro.serve.engine import (
+    Engine,
+    Request,
+    ServeError,
+    WFQScheduler,
+    prompt_bucket,
+    sample,
+)
 
-__all__ = ["Engine", "Request", "WFQScheduler", "prompt_bucket", "sample"]
+__all__ = ["Engine", "Request", "ServeError", "WFQScheduler",
+           "prompt_bucket", "sample"]

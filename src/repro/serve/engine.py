@@ -40,6 +40,31 @@ layout, :meth:`Engine.runtime_counters`; attach a
 stream that block — plus active-slot / queue-depth gauges — into a
 per-tick timeline artifact and sparkline panels (docs/observability.md).
 
+**Paged KV cache** (``ServeConfig.block_size > 0``, docs/serving.md):
+instead of one ``kv_cache_len`` stripe per slot, the engine owns ONE
+shared pool of fixed-size blocks plus a per-slot host block table
+(layers/kvcache.py ``kv_pool_*`` helpers).  Each decode tick gathers
+every slot's blocks into a dense cache, runs the UNCHANGED fixed-shape
+slot decode, and scatters the one written token back — gather is a total
+function of the table and garbage rows are validity-masked, so paged
+decode is bit-identical to stripe decode at temperature 0.  Prefill
+allocates a request's cover blocks at grant; decode growth claims one
+block at a time, and pool pressure (or a lowered slot budget,
+:meth:`Engine.set_slot_budget`) *preempts* a running slot: its emitted
+tokens are the snapshot (writes are idempotent), its blocks return to
+the pool, and the request re-queues for recompute/resume — counted as
+``preemptions``/``restores`` in the tenant counter block and surfaced as
+``preempt_s``/``restore_s`` timeline rates.  Slot count thus decouples
+from context length: a prompt longer than any fixed stripe is admissible
+while free blocks exist.
+
+**Chunked prefill** (``ServeConfig.prefill_chunk > 0``): a prompt longer
+than one chunk is prefilled one ``(1, prefill_chunk)`` chunk per engine
+tick at a traced offset (``Model.prefill_chunk``), interleaved with the
+decode ticks of co-resident slots — a long prompt no longer monopolizes
+the engine, bounding co-residents' p99 TTFT — and every chunk pays its
+mediation cost through the same fused pipeline as a decode tick.
+
 ``scheduler="gang"`` keeps the legacy behaviour — admit up to
 ``max_batch`` requests, batch-prefill them left-padded, decode the gang
 to completion with shape-derived (recompiling) prefill/decode steps —
@@ -69,7 +94,13 @@ from repro.core import telemetry as tl
 from repro.core.mediation import HostTokenBucket
 from repro.core.policies import QoSPolicy
 from repro.layers.kvcache import (
+    BlockAllocator,
     kv_cache_constrain,
+    kv_pool_gather,
+    kv_pool_init,
+    kv_pool_insert,
+    kv_pool_scatter_chunk,
+    kv_pool_scatter_token,
     kv_slot_insert,
     slot_vectors_init,
 )
@@ -78,6 +109,11 @@ from repro.layers.kvcache import (
 # force-admits the queue head (guarantees progress under any rate config).
 _MAX_STARVED_ROUNDS = 10_000
 _MIN_PROMPT_BUCKET = 8
+
+
+class ServeError(ValueError):
+    """A request the engine cannot serve under the current ServeConfig —
+    raised at *submit* time (capacity checks), never mid-decode."""
 
 
 @dataclass(eq=False)                 # identity semantics: rid is
@@ -195,6 +231,65 @@ class Engine:
             self._step_slots = jax.jit(
                 lambda p, t, c, pos: step_slots(p, t, c, pos, dp=dp),
                 donate_argnums=(2,))
+
+        # ---- paged KV block pool (block_size > 0) ---------------------
+        bs = serve.block_size
+        self.paged = bs > 0 and self._slot_support
+        if self.paged:
+            spec = jax.eval_shape(lambda: model.init_cache(1, bs))
+            rank5 = (isinstance(spec, dict) and "k" in spec and "v" in spec
+                     and all(len(v.shape) == 5 for v in spec.values()))
+            if not rank5:
+                self.paged = False       # no paged layout for this cache
+        if self.paged:
+            ks = spec["k"]
+            # (layers, kv_heads, head_dim, dtype) from the model's own
+            # cache layout, so the pool matches it bit-for-bit
+            self._pool_geom = (ks.shape[0], ks.shape[3], ks.shape[4],
+                               ks.dtype)
+            self._n_usable = serve.n_blocks or \
+                (serve.max_batch * serve.kv_cache_len // bs)
+            self._tables_len = self._n_usable
+
+            def _pool_step(p, t, pool, tables, pos, act):
+                dense = kv_pool_gather(pool, tables, bs)
+                logits, dense = step_slots(p, t, dense, pos, dp=dp)
+                return logits, kv_pool_scatter_token(pool, dense, tables,
+                                                     pos, act, bs)
+
+            self._step_pool = jax.jit(_pool_step, donate_argnums=(2,))
+            self._pool_insert = jax.jit(
+                lambda pool, pc, ids: kv_pool_insert(pool, pc, ids, bs),
+                donate_argnums=(0,))
+            self._prefill_last = jax.jit(
+                lambda p, t, c, last: model.prefill(
+                    p, {"tokens": t}, kv_cache_constrain(dp, c), dp=dp,
+                    last_pos=last))
+
+        # ---- chunked prefill (prefill_chunk > 0) ----------------------
+        chunk_fn = getattr(model, "prefill_chunk", None)
+        self.chunked = (serve.prefill_chunk > 0 and chunk_fn is not None
+                        and self._slot_support)
+        if self.chunked:
+            self._chunk = jax.jit(
+                lambda p, t, c, off, last: chunk_fn(
+                    p, {"tokens": t}, kv_cache_constrain(dp, c), off, dp=dp,
+                    last_pos=last),
+                donate_argnums=(2,))
+            if self.paged:
+                self._chunk_scatter = jax.jit(
+                    lambda pool, pc, trow, off: kv_pool_scatter_chunk(
+                        pool, pc, trow, off, serve.prefill_chunk, bs),
+                    donate_argnums=(0,))
+            else:
+                self._slot_ins = jax.jit(
+                    lambda c, pc, s: kv_slot_insert(c, pc, s),
+                    donate_argnums=(0,))
+
+        # per-run slot bookkeeping (reset by _run_continuous)
+        self._prefills: dict[int, dict] = {}
+        self._prefill_q: deque = deque()
+        self._budget_cap = 0             # 0 = use scfg.max_slots_per_tenant
         qos = next((p for p in (dp.policies if dp is not None else [])
                     if isinstance(p, QoSPolicy)), None)
         self._buckets = HostTokenBucket.from_policy(
@@ -202,7 +297,8 @@ class Engine:
         self._wfq = WFQScheduler(qos.rates if qos is not None else {})
         self.tenant_stats: dict[str, dict[str, float]] = defaultdict(
             lambda: {"requests": 0, "tokens": 0, "deferrals": 0,
-                     "wfq_grants": 0, "occupancy_steps": 0})
+                     "wfq_grants": 0, "occupancy_steps": 0,
+                     "preemptions": 0, "restores": 0})
         self._tenant_ids: dict[str, int] = {}
         self._decode_shapes: set[tuple] = set()
 
@@ -265,9 +361,11 @@ class Engine:
         if self._obs_tick_no % self.obs_every:
             return
         ctrs, tenants = self.runtime_counters()
+        gauges = {"active_slots": active, "queued": queued}
+        if self.paged and getattr(self, "_alloc", None) is not None:
+            gauges["free_blocks"] = self._alloc.free_blocks
         self.obs.snapshot_block(self._obs_tick_no, ctrs, tenants,
-                                gauges={"active_slots": active,
-                                        "queued": queued})
+                                gauges=gauges)
 
     # ------------------------------------------------------------------
     def _pad_prompts(self, reqs: list[Request]) -> np.ndarray:
@@ -307,48 +405,286 @@ class Engine:
                              f"expected 'continuous' or 'gang'")
         if sched == "continuous" and self._slot_support:
             return self._run_continuous(list(requests), rng)
+        for r in requests:               # clear error, never a mid-decode
+            need = len(r.prompt) + \
+                min(r.max_new_tokens, self.scfg.max_new_tokens) + 1
+            if need > self.scfg.kv_cache_len:
+                raise ServeError(
+                    f"gang request needs {need} cache positions (prompt "
+                    f"{len(r.prompt)} + new tokens + 1) but kv_cache_len "
+                    f"is {self.scfg.kv_cache_len}")
         return self._run_gang(list(requests), rng)
 
     # ------------------------------------------------------------------
     # continuous: persistent slots, fixed-shape decode, WFQ packing
     # ------------------------------------------------------------------
+    def _cover(self, n: int) -> int:
+        """Prefill cache capacity for an ``n``-token sequence: the chunk
+        cover (smallest multiple of ``prefill_chunk`` ≥ n) when chunked
+        prefill applies, else the power-of-two prompt bucket."""
+        C = self.scfg.prefill_chunk
+        if self.chunked and n > C:
+            return -(-n // C) * C
+        return prompt_bucket(n)
+
+    @staticmethod
+    def _resume_len(r: Request) -> int:
+        """Tokens re-prefilled when ``r`` restarts: the prompt plus every
+        emitted token but the last (which becomes the pending decode
+        input) — 0 emitted means a fresh start over the prompt alone."""
+        k = len(r.out_tokens)
+        return len(r.prompt) + k - 1 if k else len(r.prompt)
+
+    def _blocks_for(self, r: Request) -> int:
+        return -(-self._cover(self._resume_len(r)) // self.scfg.block_size)
+
     def _bucket_cap(self, prompt_len: int) -> int:
-        cap = prompt_bucket(prompt_len)
+        cap = self._cover(prompt_len)
         need = cap + self.scfg.max_new_tokens + 1
         if need > self.scfg.kv_cache_len:
-            raise ValueError(
-                f"request needs {need} cache positions (prompt bucket {cap}"
+            raise ServeError(
+                f"request needs {need} cache positions (prefill cover {cap}"
                 f" + max_new_tokens {self.scfg.max_new_tokens} + 1) but "
                 f"kv_cache_len is {self.scfg.kv_cache_len}")
         return cap
 
-    def _start_request(self, r: Request, slot: int, cache, slots, vecs, tok,
-                       ntok, done, rng):
-        """Prefill one request (bucketed, batch 1), insert its cache into
-        ``slot``, and emit its first token.  Returns (cache, rng)."""
-        cap = self._bucket_cap(len(r.prompt))
-        toks = np.zeros((1, cap), np.int32)
-        toks[0, :len(r.prompt)] = r.prompt           # right-pad
-        pcache = self.model.init_cache(1, cap)
-        last = np.asarray([len(r.prompt) - 1], np.int32)
-        logits, cache = self._prefill_slot(self.params, jnp.asarray(toks),
-                                           pcache, cache, jnp.int32(slot),
-                                           jnp.asarray(last))
-        rng, k = jax.random.split(rng)
-        t = int(np.asarray(sample(logits[:, -1, :], k,
-                                  self.scfg.temperature))[0])
-        self._emit(r, t)
+    def _check_capacity(self, r: Request) -> None:
+        """Submit-time admission check (raises :class:`ServeError`).
+
+        Paged: worst-case pool blocks over the request's whole lifetime —
+        the prefill cover, the resume cover after a worst-case preemption
+        (every budgeted token emitted), and the decode high-water mark —
+        must fit the pool.  Stripe: the legacy per-slot stripe check."""
+        if not self.paged:
+            self._bucket_cap(len(r.prompt))
+            return
+        L = len(r.prompt)
         limit = min(r.max_new_tokens, self.scfg.max_new_tokens)
-        if t == self.eos_id or limit <= 1:
-            self._finish(r, done)                    # slot stays free
-            return cache, rng
+        need = max(self._cover(L), self._cover(L + max(limit - 1, 0)),
+                   L + limit) + 1
+        nblk = -(-need // self.scfg.block_size)
+        if nblk > self._n_usable:
+            raise ServeError(
+                f"request needs {nblk} pool blocks ({need} cache positions"
+                f" / block_size {self.scfg.block_size}) but the pool has "
+                f"only {self._n_usable} usable blocks")
+
+    def _resume_fits(self, r: Request) -> bool:
+        """Whether preempting ``r`` now leaves it restartable.  Always true
+        under paging (the submit check covered the worst-case resume);
+        stripe resume re-prefills a *longer* sequence whose cover can
+        outgrow the slot stripe mid-bucket."""
+        if self.paged:
+            return True
+        eff = self._resume_len(r)
+        limit = min(r.max_new_tokens, self.scfg.max_new_tokens)
+        return max(self._cover(eff),
+                   len(r.prompt) + limit) + 1 <= self.scfg.kv_cache_len
+
+    # ------------------------------------------------------------------
+    # preemption (pool pressure / slot budgets) and resume
+    # ------------------------------------------------------------------
+    def set_slot_budget(self, n: int) -> None:
+        """Tighten (or with 0, relax back to ServeConfig) the per-tenant
+        cap on concurrently held slots — the serve-side elastic control
+        knob.  Takes effect on the next engine tick: over-budget tenants
+        have their most recent slots preempted."""
+        self._budget_cap = max(int(n), 0)
+
+    def _release_slot(self, slot: int, vecs) -> None:
+        """Return a slot's resources (pool blocks, slot vectors)."""
+        if self.paged and self._slot_blocks[slot]:
+            self._alloc.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self._tables[slot, :] = 0
+        vecs["active"][slot] = False
+        vecs["tenant"][slot] = -1
+
+    def _preempt_slot(self, slot: int, slots, vecs, tok, ntok,
+                      queue) -> None:
+        """Evict the resident request: its emitted tokens ARE the snapshot
+        (prefill/decode writes are idempotent, so recompute is exact at
+        temperature 0), its blocks return to the pool, and it re-queues at
+        the front for resume."""
+        r = slots[slot]
+        st = self._prefills.pop(slot, None)
+        if st is not None:               # mid-chunk-prefill: drop partials
+            try:
+                self._prefill_q.remove(slot)
+            except ValueError:
+                pass
+        slots[slot] = None
+        self._release_slot(slot, vecs)
+        vecs["pos"][slot] = 0
+        ntok[slot] = 0
+        self.tenant_stats[r.tenant]["preemptions"] += 1
+        queue.appendleft(r)
+
+    def _enforce_budget(self, slots, vecs, tok, ntok, queue) -> None:
+        """Preempt over-budget tenants' most recent slots down to the
+        effective per-tenant cap (``set_slot_budget`` overrides the
+        ServeConfig value) — what makes WFQ budgets *enforceable* instead
+        of advisory."""
+        cap = self._budget_cap or self.scfg.max_slots_per_tenant
+        if not cap:
+            return
+        held: dict[str, list[int]] = defaultdict(list)
+        for i, r in enumerate(slots):
+            if r is not None:
+                held[r.tenant].append(i)
+        for tenant, idxs in held.items():
+            extra = len(idxs) - cap
+            if extra <= 0:
+                continue
+            for i in sorted(idxs, key=lambda j: self._slot_started[j],
+                            reverse=True):
+                if extra <= 0:
+                    break
+                if not self._resume_fits(slots[i]):
+                    continue             # stripe: resume would not fit
+                self._preempt_slot(i, slots, vecs, tok, ntok, queue)
+                extra -= 1
+
+    def _ensure_blocks(self, i: int, slots, vecs, tok, ntok, queue) -> bool:
+        """Guarantee slot ``i`` owns the block its next decode write lands
+        in, claiming from the pool on demand.  Pool pressure preempts the
+        active slot whose tenant has the largest WFQ virtual time (the
+        least entitled co-resident); with no other candidate the slot
+        preempts itself — deadlock-free, since the submit check bounds any
+        single request's need to the pool size.  Returns False when slot
+        ``i`` itself was preempted."""
+        bs = self.scfg.block_size
+        while vecs["active"][i] and \
+                int(vecs["pos"][i]) // bs >= len(self._slot_blocks[i]):
+            got = self._alloc.alloc(1)
+            if got is not None:
+                self._slot_blocks[i].append(got[0])
+                self._tables[i, len(self._slot_blocks[i]) - 1] = got[0]
+                continue
+            cands = [j for j in range(self.scfg.max_batch)
+                     if j != i and slots[j] is not None and vecs["active"][j]]
+            if not cands:
+                self._preempt_slot(i, slots, vecs, tok, ntok, queue)
+                return False
+            victim = max(cands, key=lambda j: (
+                self._wfq.vtime.get(slots[j].tenant, 0.0),
+                self._slot_started[j]))
+            self._preempt_slot(victim, slots, vecs, tok, ntok, queue)
+        return bool(vecs["active"][i])
+
+    # ------------------------------------------------------------------
+    # prefill-to-slot (whole or chunked; fresh or resume)
+    # ------------------------------------------------------------------
+    def _activate(self, r: Request, slot: int, logits, cache, slots, vecs,
+                  tok, ntok, done, rng, *, eff: int, k: int):
+        """Post-prefill slot activation.  Fresh requests (k=0) sample and
+        emit their first token; resumed requests re-enter decode with the
+        token that was pending when they were preempted (no new sample —
+        recompute is exact)."""
+        limit = min(r.max_new_tokens, self.scfg.max_new_tokens)
+        if k == 0:
+            rng, key = jax.random.split(rng)
+            t = int(np.asarray(sample(logits[:, -1, :], key,
+                                      self.scfg.temperature))[0])
+            self._emit(r, t)
+            if t == self.eos_id or limit <= 1:
+                self._finish(r, done)                # slot stays free
+                slots[slot] = None
+                self._release_slot(slot, vecs)
+                return cache, rng
+            nt = 1
+        else:
+            self.tenant_stats[r.tenant]["restores"] += 1
+            t = int(r.out_tokens[-1])
+            nt = k
         slots[slot] = r
-        vecs["pos"][slot] = len(r.prompt)
+        vecs["pos"][slot] = eff
         vecs["active"][slot] = True
         vecs["tenant"][slot] = self._tenant_id(r.tenant)
         tok[slot, 0] = t
-        ntok[slot] = 1
+        ntok[slot] = nt
+        self._slot_seq += 1
+        self._slot_started[slot] = self._slot_seq
         return cache, rng
+
+    def _start_request(self, r: Request, slot: int, cache, slots, vecs, tok,
+                       ntok, done, rng):
+        """Prefill one request (batch 1) into ``slot`` — whole when it fits
+        one chunk/bucket, else enqueued for chunk-at-a-time prefill — and
+        emit / restore its next decode token.  Returns (cache, rng); with
+        paging, ``cache`` is the block pool."""
+        scfg = self.scfg
+        k = len(r.out_tokens)            # > 0 ⇒ resume after preemption
+        eff = self._resume_len(r)
+        seq = (np.concatenate([np.asarray(r.prompt, np.int32),
+                               np.asarray(r.out_tokens[:-1], np.int32)])
+               if k else np.asarray(r.prompt, np.int32))
+        cover = self._cover(eff)
+        if self.paged:
+            ids = self._alloc.alloc(-(-cover // scfg.block_size))
+            if ids is None:              # callers check free_blocks first
+                raise RuntimeError("block pool exhausted at grant")
+            self._slot_blocks[slot] = list(ids)
+            self._tables[slot, :] = 0
+            self._tables[slot, :len(ids)] = ids
+        toks = np.zeros((1, cover), np.int32)
+        toks[0, :eff] = seq              # right-pad
+        if self.chunked and eff > scfg.prefill_chunk:
+            # chunk-at-a-time: one chunk advances per engine tick,
+            # interleaved with decode (run loop); slot is held but not
+            # active until the last chunk lands
+            self._prefills[slot] = {
+                "r": r, "toks": toks, "eff": eff, "off": 0, "cover": cover,
+                "pcache": self.model.init_cache(1, cover), "k": k}
+            self._prefill_q.append(slot)
+            slots[slot] = r
+            vecs["tenant"][slot] = self._tenant_id(r.tenant)
+            self._slot_seq += 1
+            self._slot_started[slot] = self._slot_seq
+            return cache, rng
+        pcache = self.model.init_cache(1, cover)
+        last = np.asarray([eff - 1], np.int32)
+        if self.paged:
+            logits, pcache = self._prefill_last(self.params,
+                                                jnp.asarray(toks), pcache,
+                                                jnp.asarray(last))
+            cache = self._pool_insert(cache, pcache,
+                                      jnp.asarray(ids, jnp.int32))
+        else:
+            logits, cache = self._prefill_slot(self.params,
+                                               jnp.asarray(toks), pcache,
+                                               cache, jnp.int32(slot),
+                                               jnp.asarray(last))
+        return self._activate(r, slot, logits, cache, slots, vecs, tok,
+                              ntok, done, rng, eff=eff, k=k)
+
+    def _advance_chunk(self, cache, slots, vecs, tok, ntok, done, rng):
+        """Advance the oldest chunk-prefilling slot by ONE chunk (paying
+        one mediation-accounted traced step), activating it when the last
+        chunk lands.  Returns (cache, rng)."""
+        slot = self._prefill_q.popleft()
+        st = self._prefills[slot]
+        C = self.scfg.prefill_chunk
+        off = st["off"]
+        chunk = st["toks"][:, off:off + C]
+        last = np.asarray([st["eff"] - 1], np.int32)
+        logits, st["pcache"] = self._chunk(self.params, jnp.asarray(chunk),
+                                           st["pcache"], jnp.int32(off),
+                                           jnp.asarray(last))
+        if self.paged:                   # scatter the chunk's blocks now
+            cache = self._chunk_scatter(cache, st["pcache"],
+                                        jnp.asarray(self._tables[slot]),
+                                        jnp.int32(off))
+        st["off"] = off + C
+        if st["off"] < st["cover"]:
+            self._prefill_q.append(slot)
+            return cache, rng
+        self._prefills.pop(slot)         # last chunk: logits are at eff-1
+        if not self.paged:
+            cache = self._slot_ins(cache, st["pcache"], jnp.int32(slot))
+        return self._activate(st["r"], slot, logits, cache, slots, vecs,
+                              tok, ntok, done, rng, eff=st["eff"],
+                              k=st["k"])
 
     def _fill_slots(self, slots, queue, cache, vecs, tok, ntok, done, rng):
         """WFQ slot packing: hand each free slot to the backlogged tenant
@@ -375,14 +711,14 @@ class Engine:
                     not bucket.can_take(self._admission_cost(r, bucket)):
                 self.tenant_stats[tenant]["deferrals"] += 1
                 deferred_round.add(tenant)
+        slot_cap = self._budget_cap or scfg.max_slots_per_tenant
         for slot in range(scfg.max_batch):
             if slots[slot] is not None or not heads:
                 continue
             granted = None
             for tenant in self._wfq.order(heads):
                 r = heads[tenant]
-                if scfg.max_slots_per_tenant and \
-                        occupancy[tenant] >= scfg.max_slots_per_tenant:
+                if slot_cap and occupancy[tenant] >= slot_cap:
                     continue             # over its slot budget this tick
                 bucket = self._buckets.get(tenant)
                 cost = self._admission_cost(r, bucket)
@@ -394,6 +730,9 @@ class Engine:
                         self.tenant_stats[tenant]["deferrals"] += 1
                         deferred_round.add(tenant)
                     continue
+                if self.paged and \
+                        self._blocks_for(r) > self._alloc.free_blocks:
+                    continue             # pool pressure: wait or try next
                 if bucket is not None:
                     bucket.take(cost)
                 granted = r
@@ -426,10 +765,22 @@ class Engine:
         scfg = self.scfg
         B = scfg.max_batch
         for r in requests:
-            self._bucket_cap(len(r.prompt))          # validate up front
-        cache = self.model.init_cache(B, scfg.kv_cache_len)
+            self._check_capacity(r)      # validate up front (ServeError)
+        if self.paged:
+            layers, kvh, hd, dt = self._pool_geom
+            cache = kv_pool_init(layers, self._n_usable, scfg.block_size,
+                                 kvh, hd, dtype=dt)
+            self._alloc = BlockAllocator(self._n_usable)
+            self._tables = np.zeros((B, self._tables_len), np.int32)
+            self._slot_blocks: list[list[int]] = [[] for _ in range(B)]
+        else:
+            cache = self.model.init_cache(B, scfg.kv_cache_len)
         vecs = slot_vectors_init(B)      # per-slot pos/active/tenant
         self._slot_vecs = vecs           # exposed via slot_report()
+        self._prefills = {}
+        self._prefill_q = deque()
+        self._slot_started = [0] * B
+        self._slot_seq = 0
         tok = np.zeros((B, 1), np.int32)
         ntok = np.zeros(B, np.int32)
         slots: list[Request | None] = [None] * B
@@ -437,14 +788,23 @@ class Engine:
         done: list[Request] = []
         starved = 0
 
-        while queue or vecs["active"].any():
+        while queue or vecs["active"].any() or self._prefills:
+            self._enforce_budget(slots, vecs, tok, ntok, queue)
             cache, rng, granted = self._fill_slots(slots, queue, cache, vecs,
                                                    tok, ntok, done, rng)
+            if self._prefill_q:          # one chunk per tick, interleaved
+                cache, rng = self._advance_chunk(cache, slots, vecs, tok,
+                                                 ntok, done, rng)
+            if self.paged:               # claim this tick's write blocks
+                for i in np.nonzero(vecs["active"])[0]:
+                    if vecs["active"][i]:
+                        self._ensure_blocks(int(i), slots, vecs, tok, ntok,
+                                            queue)
             active = np.nonzero(vecs["active"])[0]
             if not len(active):
-                if not queue:
+                if not queue and not self._prefills:
                     break
-                starved = 0 if granted else starved + 1
+                starved = 0 if granted or self._prefills else starved + 1
                 if starved > _MAX_STARVED_ROUNDS:
                     # pathological rates (≈0): force progress, bypassing
                     # the bucket, with the queue head
@@ -456,9 +816,18 @@ class Engine:
                 continue
             starved = 0
 
-            self._decode_shapes.add(("slots", B, scfg.kv_cache_len))
-            logits, cache = self._step_slots(self.params, jnp.asarray(tok),
-                                             cache, jnp.asarray(vecs["pos"]))
+            if self.paged:
+                self._decode_shapes.add(("pool", B,
+                                         self._tables_len * scfg.block_size))
+                logits, cache = self._step_pool(
+                    self.params, jnp.asarray(tok), cache,
+                    jnp.asarray(self._tables), jnp.asarray(vecs["pos"]),
+                    jnp.asarray(vecs["active"]))
+            else:
+                self._decode_shapes.add(("slots", B, scfg.kv_cache_len))
+                logits, cache = self._step_slots(self.params,
+                                                 jnp.asarray(tok), cache,
+                                                 jnp.asarray(vecs["pos"]))
             rng, k = jax.random.split(rng)
             nxt = np.asarray(sample(logits[:, -1, :], k, scfg.temperature))
             for i in active:
@@ -473,8 +842,7 @@ class Engine:
                         ntok[i] >= min(r.max_new_tokens, scfg.max_new_tokens):
                     self._finish(r, done)
                     slots[i] = None                  # freed mid-decode
-                    vecs["active"][i] = False
-                    vecs["tenant"][i] = -1
+                    self._release_slot(i, vecs)      # blocks back to pool
             self._obs_snapshot(active=int(vecs["active"].sum()),
                                queued=len(queue))
         return done
@@ -563,6 +931,8 @@ class Engine:
             ctrs[i, tl.CTR_BYTES] = s["tokens"]
             ctrs[i, tl.CTR_CHUNKS] = s["occupancy_steps"]
             ctrs[i, tl.CTR_THROTTLED] = s["deferrals"]
+            ctrs[i, tl.CTR_PREEMPTIONS] = s["preemptions"]
+            ctrs[i, tl.CTR_RESTORES] = s["restores"]
         return ctrs, tenants
 
     def decode_compile_count(self) -> int:
@@ -573,7 +943,8 @@ class Engine:
         jit cache stats API is unavailable (same value: one compile per
         distinct shape signature)."""
         n = 0
-        for f in (getattr(self, "_step_slots", None), self._step):
+        for f in (getattr(self, "_step_slots", None),
+                  getattr(self, "_step_pool", None), self._step):
             if f is None:
                 continue
             try:
@@ -583,4 +954,5 @@ class Engine:
         return n
 
 
-__all__ = ["Engine", "Request", "WFQScheduler", "sample", "prompt_bucket"]
+__all__ = ["Engine", "Request", "ServeError", "WFQScheduler", "sample",
+           "prompt_bucket"]

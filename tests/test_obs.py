@@ -166,13 +166,13 @@ def test_tenant_report_column_order_matches_counters_dict():
         tl.tenant_counters_init(1), 0, ops=1, bytes=2, denied=3, chunks=4,
         throttled=5, stalls=6, credits=7, completions=8, retransmits=9,
         timeouts=10, srq_grants=11, cqe_errors=12, cq_shed=13,
-        kernel_iters=14, kernel_copies=15))[0]
+        kernel_iters=14, kernel_copies=15, preemptions=16, restores=17))[0]
     assert tl.counters_dict(row) == {
         "ops": 1, "bytes": 2, "denied": 3, "chunks": 4, "throttled": 5,
         "stalls": 6, "credits": 7, "completions": 8, "cq_depth": 0,
         "retransmits": 9, "timeouts": 10, "srq_grants": 11,
         "cqe_errors": 12, "cq_shed": 13, "kernel_iters": 14,
-        "kernel_copies": 15}
+        "kernel_copies": 15, "preemptions": 16, "restores": 17}
 
 
 # ---------------------------------------------------------------------------

@@ -527,3 +527,42 @@ def test_conn_churn_round_under_loss(mesh2):
         np.testing.assert_array_equal(out, payload)
         np.testing.assert_array_equal(np.asarray(conn["retry_cnt"]),
                                       np.zeros(Q, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# adaptive RTO (EWMA drain latency, clamped to the static ceiling)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_rto_static_fallback_and_clamp():
+    cfg = verbs.QPConfig(rto_ticks=8)
+    assert cfg.adaptive_rto                          # default on
+    # no samples yet → static value unchanged
+    assert int(verbs.adaptive_rto(jnp.float32(0.0), jnp.int32(0), cfg)) == 8
+    # fast drains tighten the timer (2*ceil(srtt)+1), floored at 2 ticks
+    assert int(verbs.adaptive_rto(jnp.float32(1.0), jnp.int32(2), cfg)) == 3
+    assert int(verbs.adaptive_rto(jnp.float32(0.0), jnp.int32(1), cfg)) == 2
+    # slow drains never exceed the static ceiling — retry fuel bounds hold
+    assert int(verbs.adaptive_rto(jnp.float32(100.0), jnp.int32(5), cfg)) == 8
+    # per-QP (Q,) estimates vectorise elementwise
+    out = verbs.adaptive_rto(jnp.asarray([0.5, 50.0, 1.5]),
+                             jnp.asarray([2, 3, 0]), cfg)
+    assert out.tolist() == [3, 8, 8]
+
+
+def test_adaptive_rto_off_matches_legacy_static_loop(mesh2):
+    """adaptive_rto=False keeps the static re-arm; both settings complete
+    a lossy transfer bit-identically (the timer only changes *when* a
+    silent loss is declared, never the recovered payload)."""
+    dp = _dp(mesh2)
+    payload = _payload(6, CFG.msg_bytes, seed=11)
+    fault = WireFault(drop_rate=0.3, seed=7)
+    outs = {}
+    for flag in (True, False):
+        cfg = verbs.QPConfig(msg_bytes=64, depth=8, max_outstanding=4,
+                             retry_limit=7, rto_ticks=4, backoff_ticks=1,
+                             adaptive_rto=flag)
+        out, _, _ = _run_windowed(mesh2, dp, cfg, _stack(payload),
+                                  fault=fault)
+        np.testing.assert_array_equal(out, payload)
+        outs[flag] = out
+    np.testing.assert_array_equal(outs[True], outs[False])
