@@ -1,0 +1,236 @@
+"""Converged train+serve benchmark: one dataplane, contending tenants.
+
+    PYTHONPATH=src python -m benchmarks.converged [--fast] [--dry-run]
+
+The converged-cloud scenario the paper argues for: a data-parallel train
+job and latency-sensitive serve tenants share ONE dataplane, with the
+kernel-owned control plane (QoS classes + per-tenant token buckets)
+arbitrating between them instead of static partitioning.  Each round
+interleaves one explicit-DP train step (gradient all-reduce issued
+through the dataplane, runtime accounting on) with a wave of serve
+requests from two tenants on a continuous-batching engine.
+
+The run emits one schema-versioned timeline artifact
+(``runs/converged_timeline.json``): per-tick serve snapshots from the
+engine plus a ``train_step`` control-plane event per round carrying the
+loss and the train tenant's cumulative throttle count.
+
+``--dry-run`` is the CI smoke: with the train tenant rate-limited by a
+:class:`~repro.core.policies.QoSPolicy` token bucket, every round must
+(a) complete its train step with a finite loss, (b) serve a nonzero
+token count to EACH serve tenant — the converged acceptance: serving
+never starves while training runs — and (c) account train throttling in
+the shared runtime state; the final artifact must validate round-trip.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from benchmarks._bootstrap import ensure_host_devices
+
+ensure_host_devices(8, module="benchmarks.converged")
+
+ARCH = "gemma3-1b"
+TENANTS = ("train", "alice", "bob")
+ROUNDS = 6
+WAVE = 4                       # serve requests per round (2 per tenant)
+MAX_NEW = 4
+GLOBAL_BATCH = 16
+SEQ_LEN = 32
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_model_config
+    from repro.models import build_model
+
+    cfg = get_model_config(ARCH, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _dataplane(throttle_train: bool):
+    """One shared dataplane: the train job is tenant ``train``; serve
+    traffic rides tenants ``alice``/``bob``.  ``throttle_train`` arms the
+    QoS token bucket on the train tenant (the arbitration under test);
+    off, the same topology runs unarbitrated for the A/B row."""
+    from repro.configs.base import DataplaneConfig
+    from repro.core import compat
+    from repro.core.dataplane import Dataplane
+    from repro.core.policies import QoSPolicy, TelemetryPolicy
+
+    mesh = compat.make_mesh((8,), ("data",))
+    policies = [TelemetryPolicy()]
+    if throttle_train:
+        policies.append(QoSPolicy(rates={"train": 0.25}, burst=2.0,
+                                  stall_ns=200.0))
+    return Dataplane(DataplaneConfig(mode="cord", emulate_costs=True),
+                     mesh=mesh, tenant="train", tenants=TENANTS,
+                     policies=policies)
+
+
+def _train_setup(model, dp):
+    from repro.configs.base import RunConfig, TrainConfig
+    from repro.data import DataConfig, SyntheticLM
+    from repro.train import init_state, make_explicit_dp_step
+
+    import jax
+
+    run = RunConfig(train=TrainConfig(steps=ROUNDS, learning_rate=5e-3,
+                                      warmup_steps=2))
+    step = make_explicit_dp_step(model, run, dp, axis="data",
+                                 runtime_accounting=True)
+    state = init_state(model, jax.random.PRNGKey(1))
+    ds = SyntheticLM(DataConfig(vocab_size=model.cfg.vocab_size,
+                                seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH))
+    return step, state, ds
+
+
+def _serve_engine(cfg, model, params, dp, timeline):
+    from repro.configs.base import ServeConfig
+    from repro.serve import Engine
+
+    return Engine(model, params, cfg,
+                  ServeConfig(max_batch=2, max_new_tokens=MAX_NEW,
+                              kv_cache_len=64),
+                  dp=dp, eos_id=-1, obs=timeline)
+
+
+def _wave(round_i: int):
+    """One round's serve wave: WAVE requests alternating alice/bob."""
+    import numpy as np
+
+    from repro.serve import Request
+
+    return [Request(rid=round_i * WAVE + i,
+                    prompt=np.asarray((np.arange(8) + 3 * i + round_i) % 97,
+                                      np.int32),
+                    max_new_tokens=MAX_NEW,
+                    tenant=TENANTS[1 + i % 2])
+            for i in range(WAVE)]
+
+
+def _served_tokens(eng) -> dict[str, int]:
+    rep = eng.tenant_report()
+    return {t: int(rep.get(t, {}).get("tokens", 0)) for t in TENANTS[1:]}
+
+
+def converged_run(throttle_train: bool, rounds: int = ROUNDS,
+                  timeline=None) -> dict:
+    """Round-interleaved train+serve on one dataplane; returns the row."""
+    import jax
+    import jax.numpy as jnp
+
+    cfg, model, params = _build()
+    dp = _dataplane(throttle_train)
+    step, state, ds = _train_setup(model, dp)
+    eng = _serve_engine(cfg, model, params, dp, timeline)
+    rt = dp.runtime_init()
+
+    losses, per_round, train_wall = [], [], 0.0
+    for i in range(rounds):
+        before = _served_tokens(eng)
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        t0 = time.perf_counter()
+        state, metrics, rt = jax.block_until_ready(step(state, batch, rt))
+        train_wall += time.perf_counter() - t0
+        losses.append(float(metrics["loss"]))
+
+        t0 = time.perf_counter()
+        done = eng.run(_wave(i))
+        serve_wall = time.perf_counter() - t0
+        after = _served_tokens(eng)
+        delta = {t: after[t] - before[t] for t in after}
+        per_round.append({"round": i, "loss": losses[-1],
+                          "served": delta, "serve_wall_s": serve_wall,
+                          "completed": len(done)})
+        if timeline is not None:
+            tick = timeline.samples[-1]["step"] if timeline.samples else i
+            timeline.record_event(
+                "train_step", tick, tenant="train",
+                detail={"round": i, "loss": losses[-1],
+                        "throttled": float(
+                            dp.runtime_report(rt)["train"]["throttled"])})
+
+    report = dp.runtime_report(rt)
+    served = _served_tokens(eng)
+    return {"table": "converged", "throttle_train": throttle_train,
+            "rounds": rounds, "losses": [round(v, 4) for v in losses],
+            "train_wall_s": round(train_wall, 3),
+            "served_tokens": served,
+            "train_throttled": float(report["train"]["throttled"]),
+            "train_ops": float(report["train"]["ops"]),
+            "rounds_detail": per_round}
+
+
+def run_all(fast: bool = False) -> list[dict]:
+    """A/B rows: the same converged workload with the train tenant's QoS
+    bucket off and on — what arbitration costs the train job and buys the
+    serve tenants."""
+    rows = []
+    rounds = 3 if fast else ROUNDS
+    for throttle in (False, True):
+        row = converged_run(throttle, rounds=rounds)
+        rows.append(row)
+        print(json.dumps({k: v for k, v in row.items()
+                          if k != "rounds_detail"}))
+    with open("BENCH_converged.json", "w") as f:
+        json.dump({"bench": "converged", "rows": rows}, f, indent=1)
+    print(json.dumps({"table": "converged",
+                      "artifact": "BENCH_converged.json"}))
+    return rows
+
+
+def dry_run() -> None:
+    """CI smoke for the converged dataplane (see module docstring)."""
+    import math
+
+    from repro.core.obs import CounterTimeline, validate_timeline
+
+    timeline = CounterTimeline(source="bench-converged")
+    row = converged_run(True, rounds=4, timeline=timeline)
+
+    assert all(math.isfinite(v) for v in row["losses"]), row["losses"]
+    for r in row["rounds_detail"]:
+        assert r["completed"] == WAVE, r
+        for tenant, toks in r["served"].items():
+            assert toks > 0, \
+                f"serve tenant {tenant} starved in round {r['round']}: {r}"
+    assert row["train_throttled"] > 0, \
+        "QoS bucket never throttled the train tenant — arbitration is idle"
+    assert row["train_ops"] > 0
+
+    path = timeline.save("runs/converged_timeline.json")
+    doc = CounterTimeline.load(path)               # schema validation
+    validate_timeline(doc)
+    assert doc["samples"], "no serve ticks captured"
+    events = [e for e in doc["events"] if e["kind"] == "train_step"]
+    assert len(events) == 4, events
+    assert all("loss" in e["detail"] for e in events)
+    # serve traffic is visible in the shared artifact (tokens ride the
+    # counter block's bytes column, Engine.runtime_counters)
+    last = doc["samples"][-1]["tenants"]
+    assert any(last.get(t, {}).get("bytes", 0) > 0 for t in TENANTS[1:])
+
+    print(json.dumps({"table": "converged_dryrun", "timeline": path,
+                      "ticks": len(doc["samples"]),
+                      "losses": row["losses"],
+                      "served_tokens": row["served_tokens"],
+                      "train_throttled": row["train_throttled"]}))
+    print("converged dry-run ok")
+
+
+def main() -> None:
+    if "--dry-run" in sys.argv:
+        dry_run()
+        return
+    run_all(fast="--fast" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

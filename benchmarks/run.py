@@ -11,6 +11,8 @@ Sections:
   window    — CQ-runtime bandwidth vs. sender-window depth (RC + UD)
   credits   — credit flow-control ablation (stall counters)
   serve     — gang vs continuous-slot serving (tok/s, TTFT, compiles)
+  converged — train job + serve tenants on ONE dataplane under QoS
+              arbitration (the converged-cloud scenario)
   fig5      — system-A preset (Fig. 5)
   fig6      — NPB suite bypass/cord/socket (Fig. 6)
   kernels   — Pallas kernel correctness + XLA timings
@@ -97,6 +99,12 @@ def dry_run() -> None:
     elastic_smoke()
     bounce_smoke()
     transport_smoke()
+
+    # converged train+serve contention smoke (benchmarks/converged.py):
+    # serve tenants must keep nonzero tok/s while the QoS-throttled train
+    # job runs on the same dataplane
+    from benchmarks import converged
+    converged.dry_run()
 
     for row in npb.run_all(benches=("EP",), modes=("bypass", "cord")):
         print(json.dumps(row))
@@ -321,6 +329,10 @@ def main() -> None:
     from benchmarks import serve
     rows += serve.run_all(fast=fast)
 
+    print("# converged (train + serve on one dataplane)")
+    from benchmarks import converged
+    rows += converged.run_all(fast=fast)
+
     print("# kernels")
     from benchmarks import kernels_bench
     rows += kernels_bench.run_all()
@@ -365,6 +377,12 @@ def main() -> None:
             print(f"serve/{r['scheduler']}/q{r['queue_depth']},,"
                   f"tok_s={r['tok_s']} ttft_ms={r['ttft_ms_mean']} "
                   f"compiles={r['decode_compiles']}")
+        elif tab == "converged":
+            served = sum(r["served_tokens"].values())
+            print(f"converged/throttle={r['throttle_train']},,"
+                  f"train_wall_s={r['train_wall_s']} "
+                  f"served_tokens={served} "
+                  f"train_throttled={r['train_throttled']}")
         elif tab == "fig6":
             print(f"fig6/{r['bench']}/{r['mode']},{r['ms'] * 1e3},"
                   f"rel={r['rel_runtime']}")

@@ -87,6 +87,36 @@ def kv_slot_insert(cache: dict, prefilled: dict, slot) -> dict:
     return {name: ins(dst, prefilled[name]) for name, dst in cache.items()}
 
 
+def state_slot_insert(cache, prefilled, slot, *, batch_axis: int = 1):
+    """Family-agnostic slot insert: write one prefilled request's decode
+    state (batch dim 1 at ``batch_axis``) into row ``slot`` of every array
+    leaf of a persistent slot cache.
+
+    This is the :func:`kv_slot_insert` analogue for recurrent and hybrid
+    caches: mamba's ``(L, B, W-1, d_inner)`` conv tail and ``(L, B,
+    d_inner, N)`` SSM state, xLSTM's per-unit ``(reps, B, ...)`` matrix/
+    scalar memories, and encdec's rank-5 cross-attention cache all carry
+    batch on axis 1, so one tree-map of ``dynamic_update_slice`` covers
+    every family.  KV stripe leaves whose source is shorter than the
+    stripe (prefill capacity < kv_cache_len) are written only over their
+    leading positions, exactly like :func:`kv_slot_insert` — the tail
+    stays masked by per-slot validity until the resident reaches it.
+
+    ``batch_axis=0`` serves the layer-local states (before the model
+    stacks a layer axis in front): see ``mamba_state_slot_insert`` /
+    ``xlstm_state_slot_insert`` in layers/mamba.py / layers/xlstm.py.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+
+    def ins(dst, src):
+        start = tuple(slot if d == batch_axis else zero
+                      for d in range(dst.ndim))
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+    return jax.tree.map(ins, cache, prefilled)
+
+
 def slot_vectors_init(slots: int) -> dict:
     """Per-slot bookkeeping vectors: next write position, active flag and
     tenant index (−1 = free) — the host-mirrored slot state of the
@@ -278,6 +308,7 @@ def kv_cache_constrain(dp, cache, *, tag: str = "kvcache",
 
 
 __all__ = ["kv_cache_init", "kv_update", "kv_update_slots", "kv_slot_insert",
+           "state_slot_insert",
            "slot_vectors_init", "slot_validity", "cache_positions",
            "cache_validity", "kv_cache_constrain", "KV_CACHE_AXES",
            "kv_pool_init", "kv_pool_gather", "kv_pool_scatter_token",

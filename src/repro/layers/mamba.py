@@ -143,4 +143,19 @@ def mamba_state_init(batch: int, d_model: int, cfg: SSMConfig, dtype) -> dict:
             "h": jnp.zeros((batch, di, cfg.state_size), jnp.float32)}
 
 
-__all__ = ["mamba_init", "mamba", "mamba_state_init", "ssm_scan_chunked"]
+def mamba_state_slot_insert(state: dict, prefilled: dict, slot) -> dict:
+    """Write one prefilled request's mamba decode state (batch row 0 of a
+    batch-1 ``{"conv", "h"}`` dict from :func:`mamba_state_init` /
+    :func:`mamba`) into slot ``slot`` of a persistent multi-slot state.
+
+    Layer-local states carry batch on axis 0; once the model stacks a
+    layer axis in front (models/hybrid.py) batch becomes axis 1 and the
+    engine uses ``state_slot_insert`` directly on the whole cache.  Unlike
+    a KV stripe there is no sequence tail to mask: ``conv`` and ``h`` are
+    O(1) summaries, so the insert replaces the slot's state wholesale."""
+    from repro.layers.kvcache import state_slot_insert
+    return state_slot_insert(state, prefilled, slot, batch_axis=0)
+
+
+__all__ = ["mamba_init", "mamba", "mamba_state_init",
+           "mamba_state_slot_insert", "ssm_scan_chunked"]

@@ -7,6 +7,12 @@ dispatch/combine tensors are (G, n, E, C) with E·C ≈ group_size·k·cf —
 their footprint is **independent of the expert count**, which is what
 keeps arctic-480b (128 experts) inside HBM at 256-way SPMD.
 
+Capacity dropping applies at **training only**.  Inference (``train=False``)
+is dropless (C = n·k over a small block), because serving exactness —
+continuous batching ≡ gang decode at temperature 0, bit-exact slot
+preempt/resume — requires per-token outputs that are invariant to batch
+composition, and capacity races between co-resident tokens break that.
+
 Sharding (via the dataplane): blocks G → data axis, experts E → model
 axis.  The G↔E resharding between dispatch and expert compute is the EP
 all-to-all, materialized by GSPMD from the constraints this module issues.
@@ -69,11 +75,22 @@ def moe(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "silu",
     """Apply the MoE layer. x: (B, S, D). Returns (out, aux_loss)."""
     b, s, d = x.shape
     tokens = b * s
-    g_sz = min(group_size, tokens)
+    # Inference is dropless: serving correctness (continuous ≡ gang at
+    # temp 0, slot-exact preempt/resume) needs per-token outputs that do
+    # not depend on which other rows share the batch, and capacity
+    # dropping is exactly such a coupling (the block cumsum races tokens
+    # for expert queue slots).  With C = n·k no token can ever drop, and
+    # co-token contributions enter every einsum as exact zeros, so each
+    # token's output is invariant to grouping and batch composition.
+    # Training keeps the fixed-capacity dispatch (EP all-to-all friendly,
+    # bounded footprint); the smaller eval group bounds the dropless
+    # (G,n,E,C≈n·k) dispatch tensor.
+    g_sz = min(group_size if train else min(group_size, 64), tokens)
     while tokens % g_sz:
         g_sz -= 1
     g = tokens // g_sz
-    e, c = cfg.num_experts, _capacity(g_sz, cfg)
+    e = cfg.num_experts
+    c = _capacity(g_sz, cfg) if train else g_sz * cfg.top_k
 
     xf = x.reshape(tokens, d)
     gates, idx, aux = route(params, xf, cfg, train=train, rng=rng)

@@ -227,7 +227,24 @@ def slstm(params: dict, x: jax.Array, cfg: SSMConfig, *,
     return out, state
 
 
+def xlstm_state_slot_insert(state: dict, prefilled: dict, slot) -> dict:
+    """Write one prefilled request's xLSTM unit state (batch row 0 of a
+    batch-1 state dict from :func:`mlstm_state_init` /
+    :func:`slstm_state_init`) into slot ``slot`` of a persistent
+    multi-slot state.
+
+    Unit-local states carry batch on axis 0; once the model stacks the
+    block-repeat axis in front (models/xlstm_model.py) batch becomes
+    axis 1 and the engine uses ``state_slot_insert`` on the whole cache.
+    Every leaf — mLSTM's (C, n, m) matrix memory and conv tail, sLSTM's
+    (h, c, n, m) scalar memory — is an O(1) summary, so the insert
+    replaces the slot's state wholesale (no validity-masked tail)."""
+    from repro.layers.kvcache import state_slot_insert
+    return state_slot_insert(state, prefilled, slot, batch_axis=0)
+
+
 __all__ = [
     "mlstm_init", "mlstm", "mlstm_state_init",
     "slstm_init", "slstm", "slstm_state_init",
+    "xlstm_state_slot_insert",
 ]

@@ -39,6 +39,11 @@ class Model:
     # Chunked prefill: write one (B, C) chunk at a traced offset.  None for
     # families without it; the engine prefills whole prompts when absent.
     prefill_chunk: Callable | None = None
+    # True when the decode cache holds recurrent state that every token —
+    # real or padding — advances (mamba/xLSTM).  The serving engine then
+    # prefills at exact prompt length instead of bucketed capacity: right
+    # padding is causally inert for attention but corrupts a recurrence.
+    recurrent: bool = False
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -77,6 +82,10 @@ def build_model(cfg: ModelConfig) -> Model:
                 params, cfg, batch, cache, **kw),
             decode_step=lambda params, token, cache, pos, **kw:
                 m.hybrid_decode_step(params, cfg, token, cache, pos, **kw),
+            decode_step_slots=lambda params, token, cache, pos, **kw:
+                m.hybrid_decode_step_slots(params, cfg, token, cache, pos,
+                                           **kw),
+            recurrent=True,
         )
     if fam == "ssm":
         m = xlstm_model
@@ -90,6 +99,10 @@ def build_model(cfg: ModelConfig) -> Model:
                 params, cfg, batch, cache, **kw),
             decode_step=lambda params, token, cache, pos, **kw:
                 m.xlstm_decode_step(params, cfg, token, cache, pos, **kw),
+            decode_step_slots=lambda params, token, cache, pos, **kw:
+                m.xlstm_decode_step_slots(params, cfg, token, cache, pos,
+                                          **kw),
+            recurrent=True,
         )
     if fam == "encdec":
         m = encdec
@@ -103,6 +116,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 params, cfg, batch, cache, **kw),
             decode_step=lambda params, token, cache, pos, **kw:
                 m.encdec_decode_step(params, cfg, token, cache, pos, **kw),
+            decode_step_slots=lambda params, token, cache, pos, **kw:
+                m.encdec_decode_step_slots(params, cfg, token, cache, pos,
+                                           **kw),
         )
     raise ValueError(f"unknown family {fam!r}")
 

@@ -13,10 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.layers.attention import attend, attention_init, output_project, qkv_project
+from repro.layers.attention import (attend, attend_naive, attention_init,
+                                    output_project, qkv_project)
 from repro.layers.common import constrain, dense_init, dtype_of, rmsnorm, rmsnorm_init, stacked_init
 from repro.layers.embedding import embed, embedding_init, logits as logits_fn
-from repro.layers.kvcache import kv_cache_init, kv_update
+from repro.layers.kvcache import (kv_cache_init, kv_update, kv_update_slots,
+                                  slot_validity)
 from repro.layers.mlp import mlp, mlp_init
 from repro.layers.rope import sinusoidal_positions
 from repro.models.losses import ce_metrics, chunked_ce_loss
@@ -104,6 +106,16 @@ def _dec_layer(lp, x, enc, *, cfg, dp, positions, enc_positions, mode,
         o = attend(q, cache_k, cache_v, q_pos=positions, k_pos=k_pos,
                    causal=True, window=None, k_valid=k_pos <= cache_pos,
                    impl="flash", q_block=1)
+    elif mode == "decode_slots":
+        # fixed-shape slot decode: per-slot write positions (B,), batched
+        # validity mask, naive attend at q=1 (transformer idiom).  The
+        # cross-attention cache below is a per-slot *snapshot* of the
+        # encoder's k/v — inserted whole by state_slot_insert, never
+        # advanced — so slots only differ in their self-attention state.
+        cache_k, cache_v = kv_update_slots(cache_k, cache_v, k, v, cache_pos)
+        s_max = cache_k.shape[1]
+        valid = slot_validity(s_max, cache_pos)               # (B, S_max)
+        o = attend_naive(q, cache_k, cache_v, valid[:, None, :])
     else:
         if cache_k is not None:
             cache_k, cache_v = kv_update(cache_k, cache_v, k, v, 0)
@@ -113,7 +125,7 @@ def _dec_layer(lp, x, enc, *, cfg, dp, positions, enc_positions, mode,
 
     # cross attention
     h = rmsnorm(lp["norm_x"], x, cfg.norm_eps)
-    if mode == "decode":
+    if mode in ("decode", "decode_slots"):
         qc = jnp.einsum("bsd,dhe->bshe", h,
                         lp["cross_attn"]["wq"].astype(h.dtype))
         kc, vc = cross_k, cross_v
@@ -124,8 +136,16 @@ def _dec_layer(lp, x, enc, *, cfg, dp, positions, enc_positions, mode,
                                  qk_norm=False, eps=cfg.norm_eps, dp=dp,
                                  kv_input=enc)
         cross_k, cross_v = kc, vc
-    o = attend(qc, kc, vc, q_pos=positions, k_pos=enc_positions,
-               causal=False, window=None, impl=impl)
+    if mode == "decode_slots":
+        # every encoder position is valid for every slot (the snapshot is
+        # full-length); positions here are per-slot (B, 1), which the
+        # shared make_mask path can't express — the all-true naive mask is
+        # the exact equivalent of the unmasked causal=False attend.
+        all_enc = jnp.ones((qc.shape[0], 1, kc.shape[1]), bool)
+        o = attend_naive(qc, kc, vc, all_enc)
+    else:
+        o = attend(qc, kc, vc, q_pos=positions, k_pos=enc_positions,
+                   causal=False, window=None, impl=impl)
     x = x + output_project(lp["cross_attn"], o, dp=dp)
 
     # mlp
@@ -199,10 +219,29 @@ def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return kv
 
 
-def encdec_prefill(params, cfg, batch, cache, *, dp=None, impl="flash"):
+def encdec_prefill(params, cfg, batch, cache, *, dp=None, impl="flash",
+                   last_pos=None):
+    """Decoder prefill: fills the self-attention cache AND snapshots the
+    encoder's projected k/v into the per-slot cross_k/cross_v cache.
+
+    The serve engine submits token-only batches; the conv/mel frontend is
+    a stub, so when ``frames`` is absent a zero frame window of the
+    configured encoder geometry is synthesized — deterministic, identical
+    across gang and continuous paths.  ``last_pos`` (B,) picks the hidden
+    position whose logits are returned (right padding after the prompt is
+    causally inert for the decoder, so bucketed prefill stays exact)."""
+    if "frames" not in batch:
+        b = batch["tokens"].shape[0]
+        batch = dict(batch, frames=jnp.zeros(
+            (b, cfg.encoder_max_len, cfg.frontend_dim), jnp.float32))
     x, _aux, cache, _ = encdec_apply(params, cfg, batch, dp=dp, cache=cache,
                                      impl=impl)
-    return logits_fn(params["embed"], x[:, -1:, :], dp=dp), cache
+    if last_pos is None:
+        last = x[:, -1:, :]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32)
+        last = x[jnp.arange(x.shape[0]), idx][:, None, :]
+    return logits_fn(params["embed"], last, dp=dp), cache
 
 
 def encdec_decode_step(params, cfg, token, cache, pos, *, dp=None, **_):
@@ -232,5 +271,37 @@ def encdec_decode_step(params, cfg, token, cache, pos, *, dp=None, **_):
     return logits_fn(params["embed"], x, dp=dp), new_cache
 
 
+def encdec_decode_step_slots(params, cfg, token, cache, pos, *, dp=None, **_):
+    """Fixed-shape slot decode: every slot advances one token at its own
+    position ``pos`` (B,).  Sinusoidal positions are gathered per slot
+    (``tbl[pos]``) instead of the gang path's scalar slice; self-attention
+    masks per slot; cross-attention reads each slot's full encoder
+    snapshot (cross_k/cross_v rows inserted by ``state_slot_insert``)."""
+    dtype = dtype_of(cfg.dtype)
+    x = embed(params["embed"], token, dtype, scale=False, dp=dp)
+    pos = jnp.asarray(pos, jnp.int32)
+    tbl = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + tbl[pos][:, None, :].astype(dtype)            # (B, 1, D)
+    positions = pos[:, None]
+    t = cache["cross_k"].shape[2]
+    enc_positions = jnp.arange(t, dtype=jnp.int32)
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        x, ck, cv, _, _ = _dec_layer(
+            lp, x, None, cfg=cfg, dp=dp, positions=positions,
+            enc_positions=enc_positions, mode="decode_slots", cache_k=ck,
+            cache_v=cv, cross_k=xk, cross_v=xv, cache_pos=pos)
+        return x, (ck, cv, xk, xv)
+
+    xs = (params["layers"], cache["k"], cache["v"], cache["cross_k"],
+          cache["cross_v"])
+    x, ys = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    new_cache = {"k": ys[0], "v": ys[1], "cross_k": ys[2], "cross_v": ys[3]}
+    return logits_fn(params["embed"], x, dp=dp), new_cache
+
+
 __all__ = ["encdec_init", "encdec_apply", "encdec_loss", "encdec_init_cache",
-           "encdec_prefill", "encdec_decode_step", "encode"]
+           "encdec_prefill", "encdec_decode_step", "encdec_decode_step_slots",
+           "encode"]

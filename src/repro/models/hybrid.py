@@ -11,10 +11,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.layers.attention import attention_init, output_project, qkv_project, attend
+from repro.layers.attention import (attention_init, attend, attend_naive,
+                                    output_project, qkv_project)
 from repro.layers.common import constrain, dtype_of, rmsnorm, rmsnorm_init, stacked_init
 from repro.layers.embedding import embed, embedding_init, logits as logits_fn
-from repro.layers.kvcache import kv_cache_init, kv_update
+from repro.layers.kvcache import (kv_cache_init, kv_update, kv_update_slots,
+                                  slot_validity)
 from repro.layers.mamba import mamba, mamba_init, mamba_state_init
 from repro.layers.mlp import mlp, mlp_init
 from repro.models.losses import ce_metrics, chunked_ce_loss
@@ -64,6 +66,21 @@ def _block(lp, x, *, cfg, dp, positions, window, theta, mode,
         o = attend(q, ck, cv, q_pos=positions, k_pos=k_pos, causal=True,
                    window=window, k_valid=k_pos <= cache_pos,
                    impl="flash", q_block=1, kv_block=kv_block)
+        new_cache["k"], new_cache["v"] = ck, cv
+    elif mode == "decode_slots":
+        # fixed-shape slot decode (serve/engine.py): q len 1 per slot,
+        # per-slot write positions ``cache_pos`` (B,).  Same batched-mask
+        # naive attend as the transformer's decode_slots — exact and tiny
+        # at q=1.  The mamba branch below is already per-row recurrent, so
+        # only the attention mask changes between gang and slot decode.
+        ck, cv = kv_update_slots(cache["k"], cache["v"], k, v, cache_pos)
+        s_max = ck.shape[1]
+        k_pos = jnp.arange(s_max, dtype=jnp.int32)
+        valid = slot_validity(s_max, cache_pos)               # (B, S_max)
+        w = jnp.asarray(window)
+        valid &= jnp.where(w > 0,
+                           cache_pos[:, None] - k_pos[None, :] < w, True)
+        o = attend_naive(q, ck, cv, valid[:, None, :])
         new_cache["k"], new_cache["v"] = ck, cv
     else:
         if cache is not None:  # prefill
@@ -148,10 +165,22 @@ def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int):
     }
 
 
-def hybrid_prefill(params, cfg, batch, cache, *, dp=None, impl="flash"):
+def hybrid_prefill(params, cfg, batch, cache, *, dp=None, impl="flash",
+                   last_pos=None):
+    """Fill attention cache + mamba state with the prompt.
+
+    ``last_pos`` (B,) selects which hidden position feeds the logits.
+    Unlike the transformer, right padding is NOT harmless here — padding
+    tokens advance the mamba recurrence — so the serve engine prefills
+    recurrent families at exact prompt length (``Model.recurrent``)."""
     x, _aux, cache, _ = hybrid_apply(params, cfg, batch, dp=dp, cache=cache,
                                      impl=impl)
-    return logits_fn(params["embed"], x[:, -1:, :], dp=dp), cache
+    if last_pos is None:
+        last = x[:, -1:, :]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32)
+        last = x[jnp.arange(x.shape[0]), idx][:, None, :]
+    return logits_fn(params["embed"], last, dp=dp), cache
 
 
 def hybrid_decode_step(params, cfg, token, cache, pos, *, dp=None,
@@ -176,5 +205,32 @@ def hybrid_decode_step(params, cfg, token, cache, pos, *, dp=None,
     return logits_fn(params["embed"], x, dp=dp), new_cache
 
 
+def hybrid_decode_step_slots(params, cfg, token, cache, pos, *, dp=None,
+                             kv_block=1024):
+    """Fixed-shape slot decode: advance every slot one token at its own
+    position ``pos`` (B,).  The attention branch masks per slot; the mamba
+    branch is per-row recurrent state and needs no masking — a freed
+    slot's state evolves harmlessly until ``state_slot_insert`` replaces
+    the whole row."""
+    dtype = dtype_of(cfg.dtype)
+    x = embed(params["embed"], token, dtype, dp=dp)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]                              # (B, 1)
+    window_arr, theta_arr = layer_flags(cfg)
+
+    def body(x, xs):
+        lp, w, th, c = xs
+        x, c = _block(lp, x, cfg=cfg, dp=dp, positions=positions, window=w,
+                      theta=th, mode="decode_slots", cache=c, cache_pos=pos,
+                      kv_block=kv_block)
+        return x, c
+
+    xs = (params["layers"], jnp.asarray(window_arr), jnp.asarray(theta_arr),
+          cache)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params["embed"], x, dp=dp), new_cache
+
+
 __all__ = ["hybrid_init", "hybrid_apply", "hybrid_loss", "hybrid_init_cache",
-           "hybrid_prefill", "hybrid_decode_step"]
+           "hybrid_prefill", "hybrid_decode_step", "hybrid_decode_step_slots"]

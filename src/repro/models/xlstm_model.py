@@ -124,9 +124,21 @@ def xlstm_init_cache(cfg: ModelConfig, batch: int, max_len: int = 0):
     return _unit_states(cfg, batch)
 
 
-def xlstm_prefill(params, cfg, batch, cache, *, dp=None, impl="flash"):
+def xlstm_prefill(params, cfg, batch, cache, *, dp=None, impl="flash",
+                  last_pos=None):
+    """Run the prompt through the recurrence, returning (logits, states).
+
+    ``last_pos`` (B,) selects the hidden position feeding the logits.
+    Padding is NOT inert for a recurrence (every token, real or pad,
+    advances the mLSTM/sLSTM memories), so the serve engine prefills this
+    family at exact prompt length (``Model.recurrent``)."""
     x, _aux, cache, _ = xlstm_apply(params, cfg, batch, dp=dp, cache=cache)
-    return logits_fn(params["embed"], x[:, -1:, :], dp=dp), cache
+    if last_pos is None:
+        last = x[:, -1:, :]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32)
+        last = x[jnp.arange(x.shape[0]), idx][:, None, :]
+    return logits_fn(params["embed"], last, dp=dp), cache
 
 
 def xlstm_decode_step(params, cfg, token, cache, pos, *, dp=None, **_):
@@ -157,5 +169,18 @@ def xlstm_decode_step(params, cfg, token, cache, pos, *, dp=None, **_):
     return logits_fn(params["embed"], x, dp=dp), new_cache
 
 
+def xlstm_decode_step_slots(params, cfg, token, cache, pos, *, dp=None, **_):
+    """Fixed-shape slot decode for the pure-recurrent family.
+
+    Decode here is position-free — the recurrence carries all sequence
+    context in the (reps, B, ...) unit states, and every batch row
+    advances independently — so the per-slot ``pos`` vector the engine
+    feeds is simply unused and the gang decode step IS the slot decode
+    step.  A freed slot's state keeps evolving on stale tokens until
+    ``state_slot_insert`` overwrites the whole row at the next insert."""
+    del pos
+    return xlstm_decode_step(params, cfg, token, cache, 0, dp=dp)
+
+
 __all__ = ["xlstm_init", "xlstm_apply", "xlstm_loss", "xlstm_init_cache",
-           "xlstm_prefill", "xlstm_decode_step"]
+           "xlstm_prefill", "xlstm_decode_step", "xlstm_decode_step_slots"]

@@ -103,6 +103,7 @@ from repro.layers.kvcache import (
     kv_pool_scatter_token,
     kv_slot_insert,
     slot_vectors_init,
+    state_slot_insert,
 )
 
 # Bound on consecutive all-throttled refill rounds before the engine
@@ -221,7 +222,9 @@ class Engine:
                 logits, pc = model.prefill(p, {"tokens": t},
                                            kv_cache_constrain(dp, pc),
                                            dp=dp, last_pos=last)
-                return logits, kv_slot_insert(cache, pc, slot)
+                # family-agnostic: writes KV stripe leaves AND recurrent /
+                # cross-attention state leaves at their batch row
+                return logits, state_slot_insert(cache, pc, slot)
 
             # the persistent cache is donated: XLA updates it in place
             # instead of copying the full buffer per tick / per insert
@@ -232,15 +235,32 @@ class Engine:
                 lambda p, t, c, pos: step_slots(p, t, c, pos, dp=dp),
                 donate_argnums=(2,))
 
+        # True for the recurrent families (mamba/xLSTM state): the engine
+        # prefills them at exact prompt length — right padding advances a
+        # recurrence, so bucketed prefill would corrupt the slot state
+        # (one prefill compile per distinct prompt length, correctness
+        # over compile reuse)
+        self._recurrent = bool(getattr(model, "recurrent", False))
+
         # ---- paged KV block pool (block_size > 0) ---------------------
         bs = serve.block_size
-        self.paged = bs > 0 and self._slot_support
+        self.paged = bs > 0
         if self.paged:
-            spec = jax.eval_shape(lambda: model.init_cache(1, bs))
-            rank5 = (isinstance(spec, dict) and "k" in spec and "v" in spec
-                     and all(len(v.shape) == 5 for v in spec.values()))
-            if not rank5:
-                self.paged = False       # no paged layout for this cache
+            spec = (jax.eval_shape(lambda: model.init_cache(1, bs))
+                    if self._slot_support else None)
+            pageable = (isinstance(spec, dict) and set(spec) == {"k", "v"}
+                        and all(len(v.shape) == 5 for v in spec.values()))
+            if not pageable:
+                # name the family and the flag — never a capacity message:
+                # the config is *valid*, just not for this cache layout
+                raise ServeError(
+                    f"paged KV (block_size={bs}) is not supported for the "
+                    f"{cfg.family!r} family ({cfg.name}): its decode cache "
+                    f"holds recurrent/cross-attention state that cannot be "
+                    f"block-paged. Set ServeConfig.block_size=0 "
+                    f"(--block-size 0) to serve this family on the fixed "
+                    f"stripe layout (continuous batching, chunk-exact "
+                    f"preemption and WFQ budgets all still apply).")
         if self.paged:
             ks = spec["k"]
             # (layers, kv_heads, head_dim, dtype) from the model's own
@@ -283,7 +303,7 @@ class Engine:
                     donate_argnums=(0,))
             else:
                 self._slot_ins = jax.jit(
-                    lambda c, pc, s: kv_slot_insert(c, pc, s),
+                    lambda c, pc, s: state_slot_insert(c, pc, s),
                     donate_argnums=(0,))
 
         # per-run slot bookkeeping (reset by _run_continuous)
@@ -421,7 +441,15 @@ class Engine:
     def _cover(self, n: int) -> int:
         """Prefill cache capacity for an ``n``-token sequence: the chunk
         cover (smallest multiple of ``prefill_chunk`` ≥ n) when chunked
-        prefill applies, else the power-of-two prompt bucket."""
+        prefill applies, else the power-of-two prompt bucket.
+
+        Recurrent families get the EXACT length: their prefill runs every
+        cache position through the mamba/xLSTM recurrence, so padding to a
+        bucket would fold pad tokens into the slot state.  Costs one
+        prefill compile per distinct prompt length — the documented
+        correctness-first tradeoff (docs/serving.md)."""
+        if self._recurrent:
+            return max(n, 1)
         C = self.scfg.prefill_chunk
         if self.chunked and n > C:
             return -(-n // C) * C

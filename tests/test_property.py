@@ -10,10 +10,11 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import ModelConfig, TrainConfig, apply_overrides
-from repro.core.chunking import bucket_pytree
+from repro.core.chunking import bucket_pytree, split_chunks
 from repro.core.mediation import MediationPipeline, MediationStage
 from repro.core.telemetry import OpRecord, Telemetry, counters_bump, counters_init
 from repro.layers.attention import make_mask
+from repro.layers.kvcache import BlockAllocator
 from repro.train.gradsync import dequantize_int8, quantize_int8
 
 SETTINGS = settings(max_examples=25, deadline=None)
@@ -123,6 +124,63 @@ def test_config_override_roundtrip(d_model, layers, lr):
     assert cfg.d_model == d_model and cfg.num_layers == layers
     t = apply_overrides(TrainConfig(), [f"learning_rate={lr}"])
     assert abs(t.learning_rate - lr) < 1e-9
+
+
+@SETTINGS
+@given(st.integers(1, 24),
+       st.lists(st.tuples(st.sampled_from("af"), st.integers(0, 9)),
+                max_size=40))
+def test_block_allocator_claim_free_invariants(n_blocks, ops):
+    """Any alloc/free interleaving preserves the pool invariants: alloc
+    is all-or-nothing (None leaves the free list untouched), handed-out
+    ids are unique, in 1..n_blocks and never 0 (the null block), ids are
+    never handed out twice while held, and free + held == n_blocks at
+    every step."""
+    a = BlockAllocator(n_blocks)
+    held: set[int] = set()
+    for kind, k in ops:
+        if kind == "a":
+            before = a.free_blocks
+            ids = a.alloc(k)
+            if k > before:
+                assert ids is None and a.free_blocks == before
+            else:
+                assert len(ids) == k == len(set(ids))
+                assert all(1 <= i <= n_blocks for i in ids)
+                assert not held & set(ids)        # never handed out twice
+                held |= set(ids)
+        else:
+            take = sorted(held)[:min(k, len(held))]
+            a.free(take)
+            held -= set(take)
+        assert a.free_blocks + len(held) == n_blocks
+    if held:                                       # double free always raises
+        with pytest.raises(ValueError, match="double free"):
+            a.free([next(iter(held))] * 2)
+
+
+@SETTINGS
+@given(st.integers(1, 97), st.integers(1, 16), st.integers(0, 1),
+       st.integers(1, 5))
+def test_split_chunks_pad_restore_roundtrip(n, num_chunks, axis, other_dim):
+    """split_chunks partitions any extent into equal chunks: the clamp
+    keeps 1 <= k <= n, every chunk has the same extent, concatenating and
+    slicing back restores the input bitwise, and the tail pad is exactly
+    zeros (chunk-granular QoS scheduling relies on all three)."""
+    shape = [n, other_dim] if axis == 0 else [other_dim, n]
+    x = (jnp.arange(np.prod(shape), dtype=jnp.float32) + 1.0).reshape(shape)
+    chunks = split_chunks(x, num_chunks, axis=axis)
+    k = max(1, min(num_chunks, n))
+    assert len(chunks) == k
+    per = chunks[0].shape[axis]
+    assert all(c.shape[axis] == per for c in chunks)
+    assert per * k >= n                  # covers the extent
+    assert per * k - n < k               # minimal padding
+    cat = jnp.concatenate(chunks, axis=axis)
+    restored = jax.lax.slice_in_dim(cat, 0, n, axis=axis)
+    np.testing.assert_array_equal(np.asarray(restored), np.asarray(x))
+    pad = np.asarray(jax.lax.slice_in_dim(cat, n, cat.shape[axis], axis=axis))
+    assert pad.size == 0 or np.abs(pad).max() == 0.0  # zero tail pad
 
 
 @SETTINGS

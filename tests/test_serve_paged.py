@@ -239,6 +239,76 @@ def test_chunked_prefill_matches_whole_prefill(smoke_model):
     assert _tokens(both.run(_requests(lengths, max_new=4))) == out_w
 
 
+def _count_chunks(eng):
+    """Count traced chunk-prefill steps on ``eng`` (replay detector)."""
+    orig, c = eng._chunk, {"n": 0}
+
+    def wrapped(*a, **kw):
+        c["n"] += 1
+        return orig(*a, **kw)
+
+    eng._chunk = wrapped
+    return c
+
+
+def test_preempt_mid_chunked_prefill_replays_pending_chunks(smoke_model):
+    """Regression: preempting a slot whose chunked prefill is still
+    PENDING must drop the partial prefill state (``_prefills`` entry and
+    queue position) and replay every chunk from offset 0 on resume — the
+    emitted-tokens snapshot holds nothing for a request that never
+    activated, so a stale entry or a skipped chunk would silently corrupt
+    whatever lands in that slot next."""
+    cfg, model, params = smoke_model
+    base = dict(max_batch=2, max_new_tokens=6, kv_cache_len=128,
+                prefill_chunk=16, block_size=8)
+    lengths = [8, 40]                    # rid 1 prefills over >= 3 chunks
+
+    ref = Engine(model, params, cfg, ServeConfig(**base), eos_id=-1)
+    c_ref = _count_chunks(ref)
+    out_ref = _tokens(ref.run(_requests(lengths, max_new=6)))
+
+    eng = Engine(model, params, cfg, ServeConfig(**base), eos_id=-1)
+    c_eng = _count_chunks(eng)
+    orig_adv = eng._advance_chunk
+
+    def adv(*a):
+        out = orig_adv(*a)
+        if c_eng["n"] == 1:              # first chunk landed; rest pending
+            eng.set_slot_budget(1)       # next tick preempts the new slot
+        return out
+
+    eng._advance_chunk = adv
+    out = _tokens(eng.run(_requests(lengths, max_new=6)))
+    assert out == out_ref
+    assert eng.tenant_report()["default"]["preemptions"] >= 1
+    assert c_eng["n"] > c_ref["n"]       # the pending chunks were REPLAYED
+    assert not eng._prefills             # no stale chunk state survives
+    assert eng._alloc.free_blocks == eng._n_usable
+
+
+def test_pool_pressure_while_chunked_prefill_pending(smoke_model):
+    """Pool pressure striking while another slot's chunked prefill is in
+    flight: the prefilling slot claimed its blocks up-front and is not a
+    pressure victim, so the decoding slot preempts ITSELF, waits out the
+    prefill, and resumes — both requests finish with the unpressured
+    run's exact tokens and every block returns to the pool."""
+    cfg, model, params = smoke_model
+    base = dict(max_batch=2, max_new_tokens=6, kv_cache_len=128,
+                prefill_chunk=16, block_size=8)
+    lengths = [8, 40]
+    roomy = Engine(model, params, cfg, ServeConfig(**base), eos_id=-1)
+    out_r = _tokens(roomy.run(_requests(lengths, max_new=6)))
+    # pool: rid 1's up-front prefill claim + one block — rid 0's first
+    # decode growth past its initial block finds the free list empty
+    need = -(-roomy._cover(lengths[1]) // base["block_size"])
+    tight = Engine(model, params, cfg,
+                   ServeConfig(**base, n_blocks=need + 1), eos_id=-1)
+    out_t = _tokens(tight.run(_requests(lengths, max_new=6)))
+    assert out_t == out_r
+    assert tight.tenant_report()["default"]["preemptions"] >= 1
+    assert tight._alloc.free_blocks == need + 1
+
+
 def test_prefill_chunk_logits_and_cache_bitwise(smoke_model):
     """Model-level: scanning chunks at traced offsets reproduces the whole
     prefill's final-position logits and KV cache bit-for-bit."""
