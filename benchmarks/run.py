@@ -97,6 +97,7 @@ def dry_run() -> None:
                       "ops_s_last": round(rates["ops_s"][-1], 1)}))
 
     elastic_smoke()
+    control_plane_smoke()
     bounce_smoke()
     transport_smoke()
 
@@ -211,6 +212,216 @@ def elastic_smoke() -> None:
                       "events": kinds}))
 
 
+def control_plane_smoke() -> None:
+    """Pod-scale control-plane smoke (docs/elasticity.md): two "hosts"
+    — disjoint 2-device meshes, one carrying quota-metered train-side
+    verbs traffic, the other a real serving engine with a rate-limited
+    tenant — stream per-process timelines that merge step-aligned into
+    ONE pod timeline each round.  A :class:`WatcherGroup` runs a
+    train-remesh watcher and a serve-budget watcher over the merged
+    rates:
+
+    * the noisy phase trips BOTH.  The train response live-migrates an
+      in-flight windowed QP transfer onto the spare mesh (shrink); the
+      serve response halves the engine's per-tenant slot budget.
+    * the quiet phase fires both release arms: the still-in-flight
+      transfer migrates BACK onto its original mesh (grow) and the
+      budget is restored — the closed shrink→recover→grow cycle.
+
+    The migrated transfer must complete bit-identically to an
+    uninterrupted one across BOTH migrations, and the saved merged pod
+    artifact must validate with the full trigger→remesh(shrink)→
+    recover→remesh(grow) sequence plus both budget moves recorded."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks import perftest
+    from repro.configs.base import (DataplaneConfig, ElasticConfig,
+                                    ServeConfig)
+    from repro.core import compat, verbs
+    from repro.core.dataplane import Dataplane
+    from repro.core.obs import (CounterTimeline, ThresholdWatcher,
+                                WatcherGroup, merge_timelines)
+    from repro.core.policies import QoSPolicy, QuotaPolicy, TelemetryPolicy
+    from repro.runtime import ServeElasticController
+
+    n_msgs, msg_bytes, window = 8, 1024, 4
+    mesh_a = perftest.make_mesh2()
+    mesh_b = compat.make_mesh((2,), ("rank",), devices=jax.devices()[2:4])
+    # host 0: train-side traffic over an observe-only 2 KiB quota — every
+    # noisy round blows the budget, so denied_pct sustains over threshold
+    dp_a = Dataplane(
+        DataplaneConfig(mode="cord", emulate_costs=True), mesh=mesh_a,
+        policies=[TelemetryPolicy(),
+                  QuotaPolicy(hard=False, limits={"default": 2048})])
+    dp_b = Dataplane(DataplaneConfig(mode="cord", emulate_costs=True),
+                     mesh=mesh_b, policies=[TelemetryPolicy()])
+    conn_a = perftest.build_migratable(mesh_a, dp_a, msg_bytes, window,
+                                       credits=n_msgs)
+    conn_b = perftest.build_migratable(mesh_b, dp_b, msg_bytes, window)
+    payload = np.arange(n_msgs * msg_bytes, dtype=np.uint8) \
+        .reshape(n_msgs, msg_bytes)
+    msgs = jnp.asarray(np.stack([payload, np.zeros_like(payload)]))
+
+    # host 1: a real engine whose "burst" tenant is admission-limited, so
+    # its deferrals (the throttled column) climb while requests queue
+    from repro.configs import get_model_config
+    from repro.models import build_model
+    from repro.serve import Engine, Request
+
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dp_serve = Dataplane(
+        DataplaneConfig(mode="cord", emulate_costs=True),
+        mesh=compat.make_mesh((8,), ("data",)), tenant="steady",
+        tenants=("steady", "burst"),
+        policies=[TelemetryPolicy(),
+                  QoSPolicy(rates={"burst": 0.1}, burst=1.0)])
+    eng = Engine(model, params, cfg,
+                 ServeConfig(max_batch=2, max_new_tokens=4,
+                             kv_cache_len=64),
+                 dp=dp_serve, eos_id=-1)
+
+    tl_a = CounterTimeline(source="host0")   # controller host: events land here
+    tl_b = CounterTimeline(source="host1")
+    group = WatcherGroup({
+        "train": ThresholdWatcher({"denied_pct": 40.0}, sustain=2,
+                                  cooldown=1, tenants=("default",),
+                                  release={"denied_pct": 5.0},
+                                  release_sustain=2, release_cooldown=8),
+        "serve": ThresholdWatcher({"throttled_pct": 10.0}, sustain=2,
+                                  cooldown=1, tenants=("burst",),
+                                  release={"throttled_pct": 1.0},
+                                  release_sustain=2, release_cooldown=8),
+    })
+    serve_ctl = ServeElasticController(
+        ElasticConfig(enabled=True, shrink_factor=2), tl_a, eng)
+
+    # the in-flight migratable transfer and its uninterrupted baseline
+    qp_full, _ = conn_a["init"](dp_a.runtime_init())
+    full_out, qp_full, _ = jax.block_until_ready(
+        conn_a["xfer"](msgs, qp_full, dp_a.runtime_init()))
+    k1, k2 = 3, 6                       # migration points: A | B | A again
+    parts: list[np.ndarray] = []
+    qp_live = None                      # in-flight QP, wherever it lives
+
+    def wave(i):
+        return [Request(rid=10 * i + j,
+                        prompt=np.asarray((np.arange(8) + i + j) % 97,
+                                          np.int32),
+                        max_new_tokens=4,
+                        tenant="burst" if j == 2 else "steady")
+                for j in range(3)]
+
+    totals: dict[str, dict[str, float]] = {}
+    seen: list[str] = []                # the pod-level event storyline
+    for i in range(1, 7):
+        noisy = i <= 3
+        if noisy:
+            # host 0 under pressure: a fresh quota-blowing transfer
+            qp, _ = conn_a["init"](dp_a.runtime_init())
+            _, _, rt = jax.block_until_ready(
+                conn_a["xfer"](msgs, qp, dp_a.runtime_init()))
+            accumulate_report(totals, dp_a.runtime_report(rt))
+            eng.run(wave(i))            # host 1 under pressure too
+        else:
+            # post-shrink quiet: host 0's tenant now runs clean on the
+            # spare mesh (no quota there), host 1 goes idle
+            if qp_live is not None and len(parts) == 1:
+                out, qp_live, rt = jax.block_until_ready(conn_b["xfer"](
+                    msgs[:, k1:k2], qp_live, dp_b.runtime_init()))
+                parts.append(np.asarray(out)[1])
+            else:
+                qp, _ = conn_b["init"](dp_b.runtime_init())
+                _, _, rt = jax.block_until_ready(
+                    conn_b["xfer"](msgs, qp, dp_b.runtime_init()))
+            accumulate_report(totals, dp_b.runtime_report(rt))
+        tl_a.snapshot(i, {t: dict(a) for t, a in totals.items()},
+                      gauges=group.gauges(), t=float(i))
+        tl_b.snapshot_block(i, *eng.runtime_counters(), t=float(i))
+
+        pod = merge_timelines([tl_a, tl_b], source="pod")
+        evs = group.observe(pod, record=False)
+        for ev in evs["train"] + evs["serve"]:
+            tl_a.record_event(ev["kind"], ev["step"], tenant=ev["tenant"],
+                              t=ev["t"], detail=ev["detail"])
+            seen.append(f"{ev['detail']['watcher']}:{ev['kind']}")
+        for ev in evs["train"]:
+            if ev["kind"] == "trigger":
+                # shrink response: migrate the in-flight transfer A → B
+                qp_live, _ = conn_a["init"](dp_a.runtime_init())
+                out, qp_live, _ = conn_a["xfer"](msgs[:, :k1], qp_live,
+                                                 dp_a.runtime_init())
+                parts.append(np.asarray(out)[1])
+                qp_live, _ = conn_a["quiesce"](qp_live, dp_a.runtime_init())
+                snap = verbs.qp_snapshot(qp_live)
+                assert int(snap["credits"]) == n_msgs - k1, snap["credits"]
+                qp_live = verbs.qp_restore(snap, mesh_b)
+                tl_a.record_event("remesh", i, tenant="default",
+                                  t=float(i) + 0.5,
+                                  detail={"watcher": "train",
+                                          "direction": "shrink",
+                                          "from": "mesh_a", "to": "mesh_b",
+                                          "migrated_msgs": k1})
+                seen.append("train:remesh-shrink")
+            elif ev["kind"] == "recover":
+                # grow-back: migrate the STILL-in-flight transfer B → A
+                qp_live, _ = conn_b["quiesce"](qp_live, dp_b.runtime_init())
+                snap = verbs.qp_snapshot(qp_live)
+                assert int(snap["credits"]) == n_msgs - k2, snap["credits"]
+                qp_live = verbs.qp_restore(snap, mesh_a)
+                out, qp_live, _ = jax.block_until_ready(conn_a["xfer"](
+                    msgs[:, k2:], qp_live, dp_a.runtime_init()))
+                parts.append(np.asarray(out)[1])
+                tl_a.record_event("remesh", i, tenant="default",
+                                  t=float(i) + 0.5,
+                                  detail={"watcher": "train",
+                                          "direction": "grow",
+                                          "from": "mesh_b", "to": "mesh_a",
+                                          "migrated_msgs": n_msgs - k2})
+                seen.append("train:remesh-grow")
+        serve_ctl.respond(evs["serve"])
+
+    # the storyline closed in order, once each
+    assert seen == ["train:trigger", "serve:trigger", "train:remesh-shrink",
+                    "train:recover", "serve:recover", "train:remesh-grow"] \
+        or seen == ["train:trigger", "serve:trigger", "train:remesh-shrink",
+                    "serve:recover", "train:recover", "train:remesh-grow"], \
+        seen
+    assert serve_ctl.shrinks == 1 and serve_ctl.grows == 1
+    assert eng.slot_budget() == 2, eng.slot_budget()   # restored
+
+    # bit-identical across BOTH migrations
+    moved = np.concatenate(parts)
+    np.testing.assert_array_equal(moved, np.asarray(full_out)[1])
+    snap_l, snap_f = verbs.qp_snapshot(qp_live), verbs.qp_snapshot(qp_full)
+    for key in ("sq_head", "cq_sent", "credits", "rx_owed"):
+        assert int(snap_l[key]) == int(snap_f[key]), \
+            f"{key} diverged across shrink+grow migration"
+
+    # the merged pod artifact records the whole cycle
+    pod = merge_timelines([tl_a, tl_b], source="pod")
+    path = pod.save("runs/control_plane_timeline.json")
+    doc = CounterTimeline.load(path)             # schema validation (v2)
+    kinds = [e["kind"] for e in doc["events"]]
+    dirs = [e["detail"]["direction"] for e in doc["events"]
+            if e["kind"] == "remesh"]
+    assert dirs == ["shrink", "grow"], dirs
+    budget_dirs = [e["detail"]["direction"] for e in doc["events"]
+                   if e["kind"] == "budget"]
+    assert budget_dirs == ["shrink", "grow"], budget_dirs
+    assert kinds.count("trigger") == 2 and kinds.count("recover") == 2
+    # merged counters really are the pod sum: host tenants are disjoint
+    # here, so every part tenant must appear in the merged doc
+    assert {"default", "steady", "burst"} <= set(doc["tenants"])
+    print(json.dumps({"table": "dryrun", "control_plane_timeline": path,
+                      "storyline": seen,
+                      "slot_budget": eng.slot_budget(),
+                      "migrated_bit_identical": True}))
+
+
 def transport_smoke() -> None:
     """PR-7 acceptance smoke (docs/transport.md): injected wire loss is
     *non-terminal* — a windowed transfer through the go-back-N
@@ -310,6 +521,14 @@ def main() -> None:
         # wire loss must be non-terminal and bit-identical on delivery
         transport_smoke()
         print("transport smoke ok")
+        return
+    if "--control-plane-smoke" in sys.argv:
+        # the PR-10 acceptance gate, runnable standalone (the ci.yml
+        # control-plane lane): the multi-process-mesh shrink→recover→grow
+        # cycle must close with bit-identical transfers and a validated
+        # merged pod artifact
+        control_plane_smoke()
+        print("control-plane smoke ok")
         return
     if "--dry-run" in sys.argv:
         dry_run()

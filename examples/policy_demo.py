@@ -1,5 +1,5 @@
-"""CoRD policies in action, in three acts (docs/elasticity.md walks
-through the third):
+"""CoRD policies in action, in four acts (docs/elasticity.md walks
+through the third and fourth):
 
 1. telemetry, quotas and memory-region security enforced on a live
    dataplane — the OS-level control the paper regains;
@@ -7,7 +7,12 @@ through the third):
    two-tenant timeline (docs/observability.md walks through the output);
 3. the elastic response: a ThresholdWatcher trips on the noisy tenant's
    sustained throttle rate and the run remeshes it onto a shrunken
-   2-device mesh slice, after which the victim's throughput recovers.
+   2-device mesh slice, after which the victim's throughput recovers;
+4. the pod-scale hierarchy: two "hosts" stream per-process timelines
+   that merge step-aligned into ONE pod timeline, and a WatcherGroup
+   runs a train-remesh watcher and a serve-budget watcher over the
+   merged rates — shrink on sustained pressure, grow back on sustained
+   quiet, the full closed cycle.
 
     PYTHONPATH=src python examples/policy_demo.py
 """
@@ -23,13 +28,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import DataplaneConfig
+from repro.configs.base import DataplaneConfig, ElasticConfig
 from repro.core import (
     CounterTimeline,
     Dataplane,
     PolicyViolation,
     ThresholdWatcher,
+    WatcherGroup,
     compat,
+    merge_timelines,
 )
 from repro.core.policies import (
     QoSPolicy,
@@ -37,7 +44,7 @@ from repro.core.policies import (
     SecurityPolicy,
     TelemetryPolicy,
 )
-from repro.runtime import shrink_mesh
+from repro.runtime import ServeElasticController, shrink_mesh
 
 
 def main():
@@ -201,6 +208,102 @@ def main():
     print(f"victim ops_s: pre-remesh {sum(pre) / len(pre):.0f} "
           f"(sharing a program with throttled noisy) -> "
           f"post-remesh {v_ops / v_wall:.0f} (alone on the full mesh)")
+
+    # Act 4 — the pod-scale hierarchy (docs/elasticity.md): every host
+    # snapshots its OWN per-process timeline; the controller host merges
+    # them step-aligned (merge_timelines) and one WatcherGroup reads the
+    # merged pod rates — a train-remesh watcher and a serve-budget
+    # watcher, each with a release arm, each driving its own response.
+    mesh_h0 = compat.make_mesh((4,), ("data",), devices=jax.devices()[:4])
+    mesh_h1 = compat.make_mesh((4,), ("data",), devices=jax.devices()[4:])
+    dp_h0 = Dataplane(
+        DataplaneConfig(mode="cord"), mesh=mesh_h0, tenant="noisy",
+        policies=[TelemetryPolicy(),
+                  QoSPolicy(rates={"noisy": 0.25}, burst=2.0, stall_ns=5e6)])
+    dp_h1 = Dataplane(
+        DataplaneConfig(mode="cord"), mesh=mesh_h1, tenant="api",
+        policies=[TelemetryPolicy(),
+                  QoSPolicy(rates={"api": 0.25}, burst=2.0, stall_ns=5e6)])
+    h0_burst = burst_on(dp_h0, "noisy", mesh_h0)
+    h1_burst = burst_on(dp_h1, "api", mesh_h1)
+    rt0, rt1 = dp_h0.runtime_init(), dp_h1.runtime_init()
+    tl_h0 = CounterTimeline(source="host0")  # controller host: events here
+    tl_h1 = CounterTimeline(source="host1")
+
+    class SlotKnob:
+        """Stands in for a serving Engine's slot-budget interface — the
+        real thing is Engine.slot_budget/set_slot_budget, driven the same
+        way by launch/serve.py --elastic and the benchmarks/run.py
+        control-plane smoke."""
+        def __init__(self, cap=4):
+            self._cap, self._default = 0, cap
+
+        def slot_budget(self):
+            return self._cap or self._default
+
+        def set_slot_budget(self, n):
+            prev, self._cap = self._cap, max(int(n), 0)
+            return prev
+
+    knob = SlotKnob()
+    group = WatcherGroup({
+        "train": ThresholdWatcher({"throttled_pct": 50.0}, sustain=2,
+                                  cooldown=1, tenants=("noisy",),
+                                  release={"throttled_pct": 5.0},
+                                  release_sustain=2),
+        "serve": ThresholdWatcher({"throttled_pct": 50.0}, sustain=2,
+                                  cooldown=1, tenants=("api",),
+                                  release={"throttled_pct": 5.0},
+                                  release_sustain=2),
+    })
+    serve_ctl = ServeElasticController(
+        ElasticConfig(enabled=True, shrink_factor=2), tl_h0, knob)
+    mesh_stack = []                     # the train response's grow-back state
+
+    print("\nact 4 — pod-scale watcher hierarchy over a merged timeline:")
+    for i in range(1, 7):
+        if i <= 3:                      # noisy phase: both hosts loaded
+            _, rt0 = jax.block_until_ready(h0_burst(small_grads, rt0))
+            _, rt1 = jax.block_until_ready(h1_burst(small_grads, rt1))
+        tl_h0.snapshot(i, dp_h0.runtime_report(rt0),
+                       gauges=group.gauges(), t=float(i))
+        tl_h1.snapshot(i, dp_h1.runtime_report(rt1), t=float(i))
+        pod = merge_timelines([tl_h0, tl_h1], source="pod")
+        evs = group.observe(pod, record=False)
+        for ev in evs["train"] + evs["serve"]:
+            tl_h0.record_event(ev["kind"], ev["step"], tenant=ev["tenant"],
+                               t=ev["t"], detail=ev["detail"])
+        for ev in evs["train"]:
+            if ev["kind"] == "trigger":
+                small4 = shrink_mesh(mesh_h0, factor=2)
+                mesh_stack.append(mesh_h0)
+                print(f"  round {i}: train watcher tripped -> remesh "
+                      f"noisy {mesh_h0.devices.size} -> "
+                      f"{small4.devices.size} devices")
+                tl_h0.record_event("remesh", i, tenant="noisy",
+                                   t=float(i) + 0.5,
+                                   detail={"watcher": "train",
+                                           "direction": "shrink"})
+            elif ev["kind"] == "recover" and mesh_stack:
+                back = mesh_stack.pop()
+                print(f"  round {i}: sustained quiet -> grow noisy back "
+                      f"to {back.devices.size} devices")
+                tl_h0.record_event("remesh", i, tenant="noisy",
+                                   t=float(i) + 0.5,
+                                   detail={"watcher": "train",
+                                           "direction": "grow"})
+        before = knob.slot_budget()
+        serve_ctl.respond(evs["serve"])
+        if knob.slot_budget() != before:
+            print(f"  round {i}: serve watcher -> slot budget "
+                  f"{before} -> {knob.slot_budget()}")
+
+    pod = merge_timelines([tl_h0, tl_h1], source="pod")
+    print("pod events (merged from both hosts, origin-tagged):")
+    for ev in pod.events:
+        print(f"  round {ev['step']} {ev['kind']:8s} {ev['tenant']}: "
+              f"{ev['detail']}")
+    print(f"slot budget closed the cycle: back at {knob.slot_budget()}")
 
 
 if __name__ == "__main__":

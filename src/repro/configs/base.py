@@ -333,15 +333,24 @@ class ElasticConfig:
     QP migration for in-flight verbs connections (core/verbs.py).
 
     ``thresholds`` are CLI-friendly ``"rate_field=level"`` strings over
-    the derived rate series (``obs.RATE_FIELDS``)."""
+    the derived rate series (``obs.RATE_FIELDS``); ``release_thresholds``
+    (same format, levels strictly below their trigger counterparts) arm
+    the grow-back half of the cycle — sustained quiet under every release
+    level restores a shrunken tenant to its pre-shrink slice (or, on the
+    serve side, its pre-shrink slot budget).  Empty = shrink-only, the
+    pre-pod-control-plane behaviour."""
     enabled: bool = False
     thresholds: tuple[str, ...] = ("denied_pct=50",)
     sustain: int = 3              # consecutive over-threshold windows to trip
     cooldown: int = 8             # windows a tripped tenant cannot re-trip
     shrink_factor: int = 2        # device shrink per remesh (largest axis)
     min_devices: int = 2          # never shrink below this many devices
-    max_remesh: int = 1           # remeshes per run (0 = unlimited)
+    max_remesh: int = 1           # shrink remeshes per run (0 = unlimited);
+    # grow-backs close the cycle and are not counted against the budget
     tenants: tuple[str, ...] = ()  # watched tenants; empty = all
+    release_thresholds: tuple[str, ...] = ()  # grow-back arm; empty = off
+    release_sustain: int = 3      # consecutive under-release windows to grow
+    release_cooldown: int = 8     # windows before a grown tenant re-grows
     # Observe-only byte budget wired by ``launch/train.py --elastic``: a
     # QuotaPolicy(hard=False) marks runtime traffic over this budget in
     # the tenant's `denied` counter — the default trigger signal.

@@ -25,6 +25,8 @@ from repro.core.mr import MemoryRegion, MRError, MRRegistry
 from repro.core.obs import (
     CounterTimeline,
     ThresholdWatcher,
+    WatcherGroup,
+    merge_timelines,
     sparkline,
     TIMELINE_SCHEMA,
     validate_timeline,
@@ -45,7 +47,8 @@ __all__ = [
     "MediationPipeline", "MediationStage", "build_pipeline",
     "HostTokenBucket",
     "MemoryRegion", "MRError", "MRRegistry",
-    "CounterTimeline", "ThresholdWatcher", "sparkline", "TIMELINE_SCHEMA",
+    "CounterTimeline", "ThresholdWatcher", "WatcherGroup",
+    "merge_timelines", "sparkline", "TIMELINE_SCHEMA",
     "validate_timeline",
     "Policy", "PolicyContext", "PolicyViolation",
     "QoSPolicy", "QuotaPolicy", "SecurityPolicy", "TelemetryPolicy",

@@ -107,7 +107,11 @@ class CounterTimeline:
 
     def __init__(self, source: str = "run",
                  counter_names: tuple[str, ...] = tl.COUNTER_NAMES,
-                 sink: str | None = None):
+                 sink: str | None = None, rotate_bytes: int = 0):
+        if rotate_bytes and sink is None:
+            raise ValueError("rotate_bytes needs a sink path to rotate")
+        if rotate_bytes < 0:
+            raise ValueError(f"rotate_bytes must be >= 0, got {rotate_bytes}")
         self.source = source
         self.counter_names = tuple(counter_names)
         self.samples: list[dict] = []
@@ -116,6 +120,9 @@ class CounterTimeline:
         self._gauge_names: list[str] = []
         self._sink_path = sink
         self._sink = None
+        self._sink_header = False          # header written for this segment
+        self.rotate_bytes = int(rotate_bytes)
+        self.rotations = 0                 # completed segments (path.1..N)
 
     # ------------------------------------------------------------------
     # ingest
@@ -181,20 +188,47 @@ class CounterTimeline:
             if d:
                 os.makedirs(d, exist_ok=True)
             self._sink = open(self._sink_path, "a")
-            # one header line per run's stream: re-running with the same
-            # sink path appends a NEW stream after the old one, and
-            # read_jsonl treats each header as a stream restart — two
-            # runs never merge into one timeline with bogus cross-run
-            # windows (docs/observability.md)
-            self._sink.write(json.dumps(
-                {"schema": TIMELINE_SCHEMA, "source": self.source,
-                 "counters": list(self.counter_names)}) + "\n")
+            if not self._sink_header:
+                # one header line per run's stream: re-running with the
+                # same sink path appends a NEW stream after the old one,
+                # and read_jsonl treats each header as a stream restart —
+                # two runs never merge into one timeline with bogus
+                # cross-run windows (docs/observability.md).  The flag
+                # makes reopening after close() header-free: a late event
+                # (recorded during engine shutdown, after the final
+                # flush) continues the SAME stream instead of starting a
+                # one-event "run" that orphans every earlier sample.
+                self._sink.write(json.dumps(
+                    {"schema": TIMELINE_SCHEMA, "source": self.source,
+                     "counters": list(self.counter_names)}) + "\n")
+                self._sink_header = True
         self._sink.write(json.dumps(obj) + "\n")
         self._sink.flush()
+        if self.rotate_bytes and self._sink.tell() >= self.rotate_bytes:
+            self._rotate()
+
+    def _rotate(self) -> None:
+        """Seal the current sink segment as ``<path>.<k>`` (k counting up
+        from 1, oldest first) and arm a fresh segment — the next write
+        opens ``<path>`` anew with its own header line, so every sealed
+        segment is independently readable by :meth:`read_jsonl` while
+        :meth:`read_rotated` stitches the whole run back together."""
+        self._sink.close()
+        self._sink = None
+        self.rotations += 1
+        os.replace(self._sink_path, f"{self._sink_path}.{self.rotations}")
+        self._sink_header = False
 
     def close(self) -> None:
-        """Flush and close the JSONL sink (no-op without one)."""
+        """Flush and close the JSONL sink (no-op without one).
+
+        Closing is not the end of the stream: events recorded *after*
+        close — an engine-shutdown remesh, an end-of-run trigger — reopen
+        the file and append to the same stream without a new header, so
+        nothing written late is dropped from :meth:`read_jsonl`'s
+        rebuild."""
         if self._sink is not None:
+            self._sink.flush()
             self._sink.close()
             self._sink = None
 
@@ -230,6 +264,48 @@ class CounterTimeline:
                     tl_.events.append(obj["event"])
         return tl_ if tl_ is not None else cls()
 
+    @classmethod
+    def read_rotated(cls, path: str) -> "CounterTimeline":
+        """Rebuild ONE logical run from a rotated sink: sealed segments
+        ``path.1 .. path.N`` (oldest first) then the live ``path`` are
+        concatenated.  Each segment opens with its own header (so any
+        single segment also reads standalone via :meth:`read_jsonl`), but
+        here a header marks a *rotation boundary* of one stream, not a
+        run restart — samples and events accumulate across segments."""
+        paths, k = [], 1
+        while os.path.exists(f"{path}.{k}"):
+            paths.append(f"{path}.{k}")
+            k += 1
+        if os.path.exists(path):
+            paths.append(path)
+        if not paths:
+            raise FileNotFoundError(f"no sink segments at {path!r}")
+        tl_ = None
+        for p in paths:
+            with open(p) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    obj = json.loads(line)
+                    if "schema" in obj:
+                        if obj["schema"] not in TIMELINE_SCHEMAS:
+                            raise ValueError(f"unknown timeline sink "
+                                             f"schema {obj['schema']!r}")
+                        if tl_ is None:
+                            tl_ = cls(source=obj.get("source", "run"),
+                                      counter_names=tuple(obj["counters"]))
+                        continue
+                    if tl_ is None:
+                        tl_ = cls()        # headerless stream
+                    if "sample" in obj:
+                        s = obj["sample"]
+                        tl_.snapshot(s["step"], s["tenants"],
+                                     gauges=s.get("gauges"), t=s["t"])
+                    elif "event" in obj:
+                        tl_.events.append(obj["event"])
+        return tl_ if tl_ is not None else cls()
+
     # ------------------------------------------------------------------
     # derived series
     # ------------------------------------------------------------------
@@ -246,14 +322,22 @@ class CounterTimeline:
         return {"step": [s["step"] for s in self.samples[1:]],
                 "t": [s["t"] for s in self.samples[1:]]}
 
-    def _window(self, prev: dict, cur: dict) -> dict[str, dict[str, float]]:
-        """Derived rates for ONE window between two samples, for every
-        tenant seen so far: ``{tenant: {field: value}}``."""
+    def _window(self, prev: dict, cur: dict,
+                tenants: Sequence[str] | None = None
+                ) -> dict[str, dict[str, float]]:
+        """Derived rates for ONE window between two samples:
+        ``{tenant: {field: value}}`` — every tenant seen so far, or just
+        ``tenants`` (intersected with the seen set) when a caller like a
+        scoped :class:`ThresholdWatcher` only needs a few."""
+        if tenants is None:
+            tenants = self._tenants
+        else:
+            tenants = [tn for tn in tenants if tn in self._tenants]
         dt = cur["t"] - prev["t"]
         if dt <= 0:
             dt = float(max(cur["step"] - prev["step"], 1))
         out: dict[str, dict[str, float]] = {}
-        for tn in self._tenants:
+        for tn in tenants:
             d = {c: max(self._value(cur, tn, c)
                         - self._value(prev, tn, c), 0.0)
                  for c in self.counter_names}
@@ -280,11 +364,15 @@ class CounterTimeline:
             }
         return out
 
-    def window_rates(self, i: int = -1) -> dict[str, dict[str, float]]:
+    def window_rates(self, i: int = -1,
+                     tenants: Sequence[str] | None = None
+                     ) -> dict[str, dict[str, float]]:
         """Rates for the single window closing at ``samples[i]``
         (``i >= 1`` or negative; the newest window by default) — what a
-        :class:`ThresholdWatcher` consumes incrementally.  Returns ``{}``
-        while fewer than two samples exist."""
+        :class:`ThresholdWatcher` consumes incrementally, optionally
+        restricted to ``tenants`` so a scoped watcher pays O(watched
+        tenants), not O(all tenants).  Returns ``{}`` while fewer than
+        two samples exist."""
         n = len(self.samples)
         if n < 2:
             return {}
@@ -292,7 +380,8 @@ class CounterTimeline:
             i += n
         if not 1 <= i < n:
             raise IndexError(f"window index {i} outside [1, {n - 1}]")
-        return self._window(self.samples[i - 1], self.samples[i])
+        return self._window(self.samples[i - 1], self.samples[i],
+                            tenants=tenants)
 
     def rates(self) -> dict[str, dict[str, list[float]]]:
         """Per-tenant derived series, one value per window between
@@ -429,6 +518,77 @@ def validate_timeline(doc: dict) -> dict:
     return doc
 
 
+def merge_timelines(parts: Sequence[CounterTimeline], *,
+                    source: str = "pod") -> CounterTimeline:
+    """Merge per-process timelines into one pod-level timeline
+    (docs/observability.md) — the cross-host half of the control plane:
+    every process snapshots its own counters locally, the controller host
+    merges them step-aligned and runs the watcher hierarchy over the
+    merged rate series.
+
+    Semantics:
+
+    * **step-aligned, never truncated**: all parts must carry the same
+      number of samples and sample ``i`` of every part must stamp the
+      same step — a lagging or over-eager host raises ``ValueError``
+      rather than silently dropping the tail (a misaligned pod merge is
+      an upstream bug, and a merged artifact built from it would lie).
+    * counter layouts must match; additive counters **sum** across parts
+      per tenant, while ``cq_depth`` (a high-water level) takes the
+      **max** — the same convention as the benchmark's
+      ``accumulate_report``.
+    * the merged sample's wall stamp is the **latest** part stamp (the
+      pod window closes when the last process reports) and gauges sum.
+    * events from every part interleave sorted by ``(step, t)``, each
+      tagged with its origin timeline's ``source`` in
+      ``detail["origin"]``.
+
+    The result is an ordinary :class:`CounterTimeline` (schema
+    ``cord-timeline/v2``): it saves, validates, renders panels and feeds
+    watchers exactly like a single-process one."""
+    parts = list(parts)
+    if not parts:
+        raise ValueError("merge_timelines needs at least one timeline")
+    names = parts[0].counter_names
+    for p in parts[1:]:
+        if p.counter_names != names:
+            raise ValueError(
+                f"cannot merge timelines with different counter layouts: "
+                f"{parts[0].source!r} has {names}, {p.source!r} has "
+                f"{p.counter_names}")
+    n = len(parts[0].samples)
+    for p in parts[1:]:
+        if len(p.samples) != n:
+            raise ValueError(
+                f"step-misaligned merge: {parts[0].source!r} has {n} "
+                f"samples but {p.source!r} has {len(p.samples)} — refusing "
+                f"to truncate; snapshot every process at every step")
+    merged = CounterTimeline(source=source, counter_names=names)
+    for i in range(n):
+        steps = sorted({int(p.samples[i]["step"]) for p in parts})
+        if len(steps) > 1:
+            raise ValueError(f"step-misaligned merge: sample {i} stamps "
+                             f"steps {steps} across parts")
+        report: dict[str, dict[str, float]] = {}
+        gauges: dict[str, float] = {}
+        for p in parts:
+            s = p.samples[i]
+            for tn, ctrs in s["tenants"].items():
+                acc = report.setdefault(tn, dict.fromkeys(names, 0.0))
+                for c in names:
+                    v = float(ctrs.get(c, 0.0))
+                    acc[c] = max(acc[c], v) if c == "cq_depth" else acc[c] + v
+            for g, v in s["gauges"].items():
+                gauges[g] = gauges.get(g, 0.0) + float(v)
+        merged.snapshot(steps[0], report, gauges=gauges,
+                        t=max(float(p.samples[i]["t"]) for p in parts))
+    tagged = [dict(ev, detail=dict(ev.get("detail") or {}, origin=p.source))
+              for p in parts for ev in p.events]
+    merged.events.extend(sorted(tagged,
+                                key=lambda e: (e["step"], e.get("t", 0.0))))
+    return merged
+
+
 class ThresholdWatcher:
     """Hysteresis threshold watcher over a timeline's rate series — the
     trigger half of the elastic control loop (docs/elasticity.md).
@@ -442,13 +602,28 @@ class ThresholdWatcher:
     therefore never triggers, and a persistently bad tenant triggers once
     per cooldown period, not once per window.
 
+    The optional **release arm** closes the shrink→grow cycle
+    (docs/elasticity.md): after a trigger *arms* a tenant, sustained
+    quiet — every ``release`` field strictly *below* its level for
+    ``release_sustain`` consecutive windows — emits one ``recover`` event
+    and starts a separate ``release_cooldown``.  Release levels must sit
+    strictly below their trigger thresholds: the gap is the hysteresis
+    band, so a rate parked *on* a level oscillates neither arm.  A tenant
+    never recovers while still inside the trigger cooldown, and a window
+    that trips (or merely sits over a trigger threshold) resets any
+    recovery streak.
+
     :meth:`observe` is incremental — each call consumes only the windows
-    appended since the last call, so it can run after every snapshot at
-    O(new windows) cost.  The watcher is pure host-side bookkeeping: it
-    never touches traced code."""
+    appended since the last call, and each window derives rates only for
+    the watched tenants, so it can run after every snapshot at
+    O(new windows × watched tenants) cost.  The watcher is pure host-side
+    bookkeeping: it never touches traced code."""
 
     def __init__(self, thresholds: dict[str, float], *, sustain: int = 3,
-                 cooldown: int = 8, tenants: Sequence[str] | None = None):
+                 cooldown: int = 8, tenants: Sequence[str] | None = None,
+                 release: dict[str, float] | None = None,
+                 release_sustain: int | None = None,
+                 release_cooldown: int | None = None):
         unknown = set(thresholds) - set(RATE_FIELDS)
         if unknown:
             raise ValueError(f"unknown rate fields {sorted(unknown)} "
@@ -462,43 +637,77 @@ class ThresholdWatcher:
         self.sustain = int(sustain)
         self.cooldown = int(cooldown)
         self.tenants = tuple(tenants) if tenants else None
+        self.release = ({k: float(v) for k, v in release.items()}
+                        if release else None)
+        if self.release:
+            unknown = set(self.release) - set(RATE_FIELDS)
+            if unknown:
+                raise ValueError(f"unknown release rate fields "
+                                 f"{sorted(unknown)} (known: {RATE_FIELDS})")
+            for f, lv in self.release.items():
+                if f in self.thresholds and lv >= self.thresholds[f]:
+                    raise ValueError(
+                        f"release level {f}={lv} must sit below its trigger "
+                        f"threshold {self.thresholds[f]} — the gap is the "
+                        f"hysteresis band that damps oscillation")
+        self.release_sustain = int(sustain if release_sustain is None
+                                   else release_sustain)
+        self.release_cooldown = int(cooldown if release_cooldown is None
+                                    else release_cooldown)
+        if self.release_sustain < 1 or self.release_cooldown < 0:
+            raise ValueError(
+                f"need release_sustain >= 1 and release_cooldown >= 0, got "
+                f"{self.release_sustain}/{self.release_cooldown}")
         self.triggers: list[dict] = []     # every trigger ever emitted
+        self.releases: list[dict] = []     # every recover ever emitted
         self._streak: dict[str, int] = {}
         self._cool: dict[str, int] = {}
+        self._armed: dict[str, bool] = {}  # tripped, not yet recovered
+        self._rstreak: dict[str, int] = {}
+        self._rcool: dict[str, int] = {}
         self._seen = 0                     # windows consumed so far
 
     @classmethod
     def from_config(cls, cfg) -> "ThresholdWatcher":
         """Build from an :class:`~repro.configs.base.ElasticConfig`,
-        whose ``thresholds`` are CLI-friendly ``"rate_field=level"``
-        strings."""
-        th: dict[str, float] = {}
-        for spec in cfg.thresholds:
-            name, sep, level = spec.partition("=")
-            if not sep:
-                raise ValueError(
-                    f"threshold spec must be 'rate_field=level', got {spec!r}")
-            th[name.strip()] = float(level)
-        return cls(th, sustain=cfg.sustain, cooldown=cfg.cooldown,
-                   tenants=cfg.tenants or None)
+        whose ``thresholds`` (and optional ``release_thresholds``, the
+        grow-back arm) are CLI-friendly ``"rate_field=level"`` strings."""
+        def parse(specs):
+            out: dict[str, float] = {}
+            for spec in specs:
+                name, sep, level = spec.partition("=")
+                if not sep:
+                    raise ValueError(f"threshold spec must be "
+                                     f"'rate_field=level', got {spec!r}")
+                out[name.strip()] = float(level)
+            return out
+
+        rel = parse(getattr(cfg, "release_thresholds", ()) or ())
+        return cls(parse(cfg.thresholds), sustain=cfg.sustain,
+                   cooldown=cfg.cooldown, tenants=cfg.tenants or None,
+                   release=rel or None,
+                   release_sustain=getattr(cfg, "release_sustain", None),
+                   release_cooldown=getattr(cfg, "release_cooldown", None))
 
     def observe(self, timeline: CounterTimeline) -> list[dict]:
         """Consume every not-yet-seen window of ``timeline``; returns the
-        trigger events fired by those windows (often empty).  Event dicts
-        match :meth:`CounterTimeline.record_event`'s shape so callers can
-        log them straight into the artifact."""
+        ``trigger`` (and, with a release arm, ``recover``) events fired
+        by those windows, often empty.  Event dicts match
+        :meth:`CounterTimeline.record_event`'s shape so callers can log
+        them straight into the artifact."""
         fired: list[dict] = []
         n_windows = max(len(timeline.samples) - 1, 0)
         while self._seen < n_windows:
             i = self._seen + 1            # sample index closing this window
-            window = timeline.window_rates(i)
+            window = timeline.window_rates(i, tenants=self.tenants)
             close = timeline.samples[i]
             for tn, fields in window.items():
-                if self.tenants is not None and tn not in self.tenants:
-                    continue
                 if self._cool.get(tn, 0) > 0:
+                    # trigger cooldown freezes BOTH arms: no re-trip, and
+                    # no grow-back progress while the shrink settles
                     self._cool[tn] -= 1
                     self._streak[tn] = 0
+                    self._rstreak[tn] = 0
                     continue
                 over = {f: fields.get(f, 0.0)
                         for f, lim in self.thresholds.items()
@@ -513,6 +722,36 @@ class ThresholdWatcher:
                     self.triggers.append(ev)
                     self._streak[tn] = 0
                     self._cool[tn] = self.cooldown
+                    if self.release:
+                        self._armed[tn] = True
+                        self._rstreak[tn] = 0
+                    continue
+                # ---- release (grow-back) arm ------------------------------
+                if not self.release or not self._armed.get(tn):
+                    continue
+                if self._rcool.get(tn, 0) > 0:
+                    self._rcool[tn] -= 1
+                    self._rstreak[tn] = 0
+                    continue
+                under = {f: fields.get(f, 0.0)
+                         for f, lim in self.release.items()
+                         if fields.get(f, 0.0) < lim}
+                if over or len(under) < len(self.release):
+                    # any release field at/over its level — or a fresh
+                    # over-threshold window — cancels recovery progress
+                    self._rstreak[tn] = 0
+                    continue
+                self._rstreak[tn] = self._rstreak.get(tn, 0) + 1
+                if self._rstreak[tn] >= self.release_sustain:
+                    ev = {"kind": "recover", "step": int(close["step"]),
+                          "t": float(close["t"]), "tenant": tn,
+                          "detail": {"under": under,
+                                     "sustained": self._rstreak[tn]}}
+                    fired.append(ev)
+                    self.releases.append(ev)
+                    self._armed[tn] = False
+                    self._rstreak[tn] = 0
+                    self._rcool[tn] = self.release_cooldown
             self._seen += 1
         return fired
 
@@ -520,11 +759,62 @@ class ThresholdWatcher:
         """Run-wide watcher gauges to ride along in snapshots
         (docs/observability.md): the largest over-threshold streak and
         the largest remaining cooldown across watched tenants, as of the
-        windows observed so far."""
-        return {"watch_streak": float(max(self._streak.values(), default=0)),
-                "watch_cooldown": float(max(self._cool.values(), default=0))}
+        windows observed so far.  With a release arm configured, the
+        grow-back side's streak/cooldown ride along too."""
+        g = {"watch_streak": float(max(self._streak.values(), default=0)),
+             "watch_cooldown": float(max(self._cool.values(), default=0))}
+        if self.release:
+            g["watch_release_streak"] = float(
+                max(self._rstreak.values(), default=0))
+            g["watch_release_cooldown"] = float(
+                max(self._rcool.values(), default=0))
+        return g
 
 
-__all__ = ["CounterTimeline", "ThresholdWatcher", "sparkline",
+class WatcherGroup:
+    """A named hierarchy of watchers driven off ONE timeline — typically
+    the merged pod timeline from :func:`merge_timelines`, so a
+    train-remesh watcher and a serve-budget watcher read the same
+    cluster-wide rate series (docs/elasticity.md).
+
+    :meth:`observe` consumes the new windows through every member
+    incrementally, tags each fired event's detail with the member's name
+    (``detail["watcher"]``), records the events into the timeline's
+    artifact (unless ``record=False``) and returns them per member, so a
+    controller picks up exactly its own watcher's events:
+    ``evs = group.observe(pod); train_ctl.respond(state, step,
+    evs["train"]); serve_ctl.respond(evs["serve"])``."""
+
+    def __init__(self, watchers: dict[str, ThresholdWatcher]):
+        if not watchers:
+            raise ValueError("WatcherGroup needs at least one watcher")
+        for name, w in watchers.items():
+            if not isinstance(w, ThresholdWatcher):
+                raise ValueError(f"watcher {name!r} is not a "
+                                 f"ThresholdWatcher: {type(w)}")
+        self.watchers = dict(watchers)
+
+    def observe(self, timeline: CounterTimeline, *,
+                record: bool = True) -> dict[str, list[dict]]:
+        out: dict[str, list[dict]] = {}
+        for name, w in self.watchers.items():
+            events = w.observe(timeline)
+            for ev in events:
+                ev["detail"]["watcher"] = name
+                if record:
+                    timeline.record_event(ev["kind"], ev["step"],
+                                          tenant=ev["tenant"], t=ev["t"],
+                                          detail=ev["detail"])
+            out[name] = events
+        return out
+
+    def gauges(self) -> dict[str, float]:
+        """Every member's gauges, namespaced ``<name>_<gauge>``."""
+        return {f"{name}_{k}": v for name, w in self.watchers.items()
+                for k, v in w.gauges().items()}
+
+
+__all__ = ["CounterTimeline", "ThresholdWatcher", "WatcherGroup",
+           "merge_timelines", "sparkline",
            "validate_timeline", "TIMELINE_SCHEMA", "TIMELINE_SCHEMA_V1",
            "TIMELINE_SCHEMAS", "RATE_FIELDS"]

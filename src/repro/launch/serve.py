@@ -14,6 +14,18 @@ engine: one per-tick snapshot of the serve counter block (WFQ grants,
 served tokens, slot occupancy, deferrals) plus active-slot / queue-depth
 gauges, written to ``runs/<arch>_serve_timeline.json`` with per-tenant
 sparkline panels on the console (docs/observability.md).
+
+``--elastic`` (implies ``--timeline``) closes the serve-side control
+loop (docs/elasticity.md): a
+:class:`~repro.runtime.elastic.ServeElasticController` rides the
+engine's ``on_tick`` hook, watching the timeline rate series — by
+default ``throttled_pct`` (admission deferrals), since decode traffic is
+slot-bound — and on a sustained over-threshold signal shrinks the
+per-tenant slot budget (``Engine.set_slot_budget``, enforced by
+preemption with exact temp-0 resume) instead of remeshing; the release
+arm restores the pre-shrink budget after sustained quiet.  Configure via
+``elastic.*`` overrides, e.g. ``elastic.thresholds=throttled_pct=50
+elastic.release_thresholds=throttled_pct=10 elastic.sustain=2``.
 """
 
 import argparse
@@ -23,10 +35,11 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_model_config
-from repro.configs.base import ObsConfig, ServeConfig
+from repro.configs import apply_overrides, get_model_config
+from repro.configs.base import ElasticConfig, ObsConfig, ServeConfig
 from repro.core import CounterTimeline
 from repro.models import build_model
+from repro.runtime import ServeElasticController
 from repro.serve import Engine, Request, prompt_bucket
 
 
@@ -50,6 +63,12 @@ def main() -> None:
     ap.add_argument("--timeline", action="store_true",
                     help="per-tick engine snapshots into "
                          "runs/<arch>_serve_timeline.json")
+    ap.add_argument("--elastic", action="store_true",
+                    help="watch the serve timeline and move the per-tenant "
+                         "slot budget down/up on sustained threshold "
+                         "crossings (implies --timeline; docs/elasticity.md)")
+    ap.add_argument("overrides", nargs="*", default=[],
+                    help="elastic.* key=value overrides")
     args = ap.parse_args()
 
     cfg = get_model_config(args.arch, smoke=True)
@@ -61,7 +80,15 @@ def main() -> None:
     kv_len = max(kv_len, 128)
     if args.block_size > 0:              # keep block_size | kv_cache_len
         kv_len = -(-kv_len // args.block_size) * args.block_size
-    obs = ObsConfig(timeline=args.timeline)
+    # serve-appropriate elastic defaults: deferral share is the decode
+    # pressure signal (denied never moves on the serve counter block)
+    elastic = apply_overrides(
+        ElasticConfig(enabled=args.elastic,
+                      thresholds=("throttled_pct=50",),
+                      release_thresholds=("throttled_pct=10",)),
+        [o[len("elastic."):] for o in args.overrides
+         if o.startswith("elastic.")])
+    obs = ObsConfig(timeline=args.timeline or elastic.enabled)
     timeline = CounterTimeline(source=f"serve/{args.arch}") \
         if obs.timeline else None
     eng = Engine(model, params, cfg,
@@ -73,6 +100,10 @@ def main() -> None:
                              n_blocks=args.n_blocks,
                              prefill_chunk=args.prefill_chunk),
                  eos_id=-1, obs=timeline, obs_every=obs.every)
+    controller = None
+    if elastic.enabled:
+        controller = ServeElasticController(elastic, timeline, eng)
+        eng.on_tick = controller.tick
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6 + i % 5),
                     max_new_tokens=args.max_new_tokens)
@@ -90,11 +121,19 @@ def main() -> None:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
     for tenant, stats in eng.tenant_report().items():
         print(f"  tenant {tenant}: {stats}")
+    if controller is not None:
+        print(f"elastic: {controller.shrinks} budget shrinks, "
+              f"{controller.grows} grow-backs "
+              f"(slot budget now {eng.slot_budget()})")
     if timeline is not None:
         path = timeline.save(os.path.join(
             obs.out_dir, f"{args.arch}_serve_timeline.json"))
         print(f"timeline artifact: {path} "
-              f"({len(timeline.samples)} ticks)")
+              f"({len(timeline.samples)} ticks, "
+              f"{len(timeline.events)} events)")
+        for ev in timeline.events:
+            print(f"  event step {ev['step']:4d} {ev['kind']:8s} "
+                  f"{ev['tenant']}: {ev['detail']}")
         if obs.panel:
             print(timeline.panel(width=obs.spark_width))
 

@@ -14,7 +14,11 @@ without the flag (tests/test_obs.py).  The run writes the
 schema-versioned artifact ``runs/<arch>_timeline.json`` and prints
 per-tenant sparkline panels (docs/observability.md).
 ``--timeline-sink PATH`` additionally streams every snapshot/event to a
-JSONL file as the run progresses.
+JSONL file as the run progresses; ``--timeline-rotate BYTES`` seals the
+sink into ``PATH.1..N`` segments once each passes the size budget, so a
+long run never grows one unbounded file
+(``CounterTimeline.read_rotated`` stitches the segments back together —
+docs/observability.md).
 
 ``--elastic`` (implies ``--timeline``) closes the control loop
 (docs/elasticity.md): an :class:`~repro.runtime.elastic.ElasticController`
@@ -64,6 +68,10 @@ def main() -> None:
     ap.add_argument("--timeline-sink", default=None, metavar="PATH",
                     help="stream timeline snapshots/events to a JSONL file "
                          "as the run progresses (docs/observability.md)")
+    ap.add_argument("--timeline-rotate", type=int, default=0,
+                    metavar="BYTES",
+                    help="rotate the JSONL sink into PATH.1..N segments "
+                         "once each passes this many bytes (0 = never)")
     ap.add_argument("--elastic", action="store_true",
                     help="watch the timeline rate series and remesh onto a "
                          "shrunken mesh slice on sustained over-threshold "
@@ -107,7 +115,9 @@ def main() -> None:
     loader = ShardedLoader(ds)
 
     timeline = CounterTimeline(source=f"train/{args.arch}",
-                               sink=args.timeline_sink) \
+                               sink=args.timeline_sink,
+                               rotate_bytes=args.timeline_rotate
+                               if args.timeline_sink else 0) \
         if obs.timeline else None
     controller = ElasticController(elastic, timeline, mesh) \
         if elastic.enabled else None

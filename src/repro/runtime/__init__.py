@@ -1,5 +1,6 @@
 from repro.runtime.elastic import (
     ElasticController,
+    ServeElasticController,
     remesh,
     shrink_mesh,
     state_shardings,
@@ -7,4 +8,5 @@ from repro.runtime.elastic import (
 from repro.runtime.fault import FaultInjector, RunReport, SimulatedFailure, run_loop
 
 __all__ = ["run_loop", "FaultInjector", "SimulatedFailure", "RunReport",
-           "remesh", "state_shardings", "shrink_mesh", "ElasticController"]
+           "remesh", "state_shardings", "shrink_mesh", "ElasticController",
+           "ServeElasticController"]

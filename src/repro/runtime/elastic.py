@@ -90,13 +90,20 @@ class ElasticController:
 
     Built from an :class:`~repro.configs.base.ElasticConfig`; call
     :meth:`drive` after each timeline snapshot.  It consumes any new
-    windows through the watcher (logging ``trigger`` events into the
-    timeline); when a tenant trips and the remesh budget
-    (``cfg.max_remesh``) allows, it shrinks the current mesh by
-    ``cfg.shrink_factor``, migrates ``state`` onto it with :func:`remesh`
-    and records a ``remesh`` event.  The caller rebuilds anything
-    compiled against the old mesh (the Dataplane, the jitted step) when
-    ``drive`` reports a move — see ``launch/train.py --elastic``."""
+    windows through the watcher (logging ``trigger``/``recover`` events
+    into the timeline); when a tenant trips and the remesh budget
+    (``cfg.max_remesh``, shrinks only) allows, it shrinks the current
+    mesh by ``cfg.shrink_factor``, migrates ``state`` onto it with
+    :func:`remesh` and records a ``remesh`` event
+    (``detail["direction"] == "shrink"``).  With the watcher's release
+    arm configured (``cfg.release_thresholds``), a later ``recover``
+    event drives :meth:`grow_mesh` — the state migrates *back* onto the
+    pre-shrink mesh (popped off a shrink-history stack), recorded as a
+    ``remesh`` with ``direction == "grow"``, closing the cycle.  The
+    caller rebuilds anything compiled against the old mesh (the
+    Dataplane, the jitted step) whenever ``drive`` reports a move — the
+    rebuild path is direction-agnostic, see ``launch/train.py
+    --elastic``."""
 
     def __init__(self, cfg, timeline: CounterTimeline, mesh: Mesh, *,
                  fsdp: bool = False):
@@ -105,50 +112,175 @@ class ElasticController:
         self.mesh = mesh
         self.fsdp = fsdp
         self.watcher = ThresholdWatcher.from_config(cfg)
-        self.remeshes = 0
+        self.remeshes = 0              # shrink count (the budgeted kind)
+        self.grows = 0
+        self._mesh_stack: list[Mesh] = []   # pre-shrink meshes, LIFO
 
-    def _skip(self, events, step: int, reason: str) -> None:
+    def _skip(self, ev, step: int, reason: str) -> None:
         """A trigger the controller cannot answer is recorded, not
         swallowed: the artifact (and the end-of-run event print) explains
         why the advertised remesh never happened — e.g. a single-device
         local run with nowhere to shrink to."""
         self.timeline.record_event("remesh-skipped", step,
-                                   tenant=events[-1]["tenant"],
+                                   tenant=(ev or {}).get("tenant"),
                                    detail={"reason": reason})
 
     def drive(self, state, step: int):
-        """Returns ``(state, moved)``; when ``moved`` the state now lives
-        on the shrunken ``self.mesh``.  A trigger that cannot be answered
-        (remesh budget spent, no smaller mesh) records a
-        ``remesh-skipped`` event instead of silently doing nothing."""
+        """Observe → record → respond.  Returns ``(state, moved)``; when
+        ``moved`` the state now lives on the updated ``self.mesh``
+        (shrunken on a trigger, restored on a recover).  A trigger or
+        recover that cannot be answered records a ``remesh-skipped``
+        event instead of silently doing nothing."""
         events = self.watcher.observe(self.timeline)
         for ev in events:
             self.timeline.record_event(ev["kind"], ev["step"],
                                        tenant=ev["tenant"], t=ev["t"],
                                        detail=ev["detail"])
-        if not events:
-            return state, False
+        return self.respond(state, step, events)
+
+    def respond(self, state, step: int, events):
+        """Apply already-recorded watcher events — the entry point for a
+        :class:`~repro.core.obs.WatcherGroup`, which records events
+        itself and hands each controller its own member's slice."""
+        moved = False
+        for ev in events:
+            if ev["kind"] == "trigger":
+                state, m = self._shrink(state, step, ev)
+            elif ev["kind"] == "recover":
+                state, m = self.grow_mesh(state, step, ev)
+            else:
+                continue
+            moved = moved or m
+        return state, moved
+
+    def _shrink(self, state, step: int, ev):
         if self.cfg.max_remesh and self.remeshes >= self.cfg.max_remesh:
-            self._skip(events, step, "max_remesh budget exhausted")
+            self._skip(ev, step, "max_remesh budget exhausted")
             return state, False
         new_mesh = shrink_mesh(self.mesh, self.cfg.shrink_factor,
                                min_devices=self.cfg.min_devices)
         if new_mesh is None:
-            self._skip(events, step,
+            self._skip(ev, step,
                        f"no smaller mesh: shape "
                        f"{tuple(self.mesh.devices.shape)} cannot shrink by "
                        f"{self.cfg.shrink_factor} above min_devices="
                        f"{self.cfg.min_devices}")
             return state, False
         state = remesh(state, new_mesh, fsdp=self.fsdp)
-        old_n, self.mesh = self.mesh.devices.size, new_mesh
+        old_mesh, self.mesh = self.mesh, new_mesh
+        self._mesh_stack.append(old_mesh)
         self.remeshes += 1
         self.timeline.record_event(
-            "remesh", step, tenant=events[-1]["tenant"],
-            detail={"devices_before": int(old_n),
+            "remesh", step, tenant=ev["tenant"],
+            detail={"direction": "shrink",
+                    "devices_before": int(old_mesh.devices.size),
+                    "devices_after": int(new_mesh.devices.size),
+                    "mesh_shape": list(new_mesh.devices.shape)})
+        return state, True
+
+    def grow_mesh(self, state, step: int, ev=None):
+        """Grow-back: migrate ``state`` onto the most recently shrunken-
+        from mesh (LIFO, so nested shrinks unwind in order) with the same
+        :func:`remesh` move the shrink used — and therefore the same
+        ``qp_snapshot``/``qp_restore`` live-migration guarantees for
+        in-flight verbs connections.  Returns ``(state, moved)``; a
+        recover with no shrink on record logs a ``remesh-skipped``."""
+        if not self._mesh_stack:
+            self._skip(ev, step, "nothing to grow back to: no shrink on "
+                                 "record for this controller")
+            return state, False
+        new_mesh = self._mesh_stack.pop()
+        state = remesh(state, new_mesh, fsdp=self.fsdp)
+        old_mesh, self.mesh = self.mesh, new_mesh
+        self.grows += 1
+        self.timeline.record_event(
+            "remesh", step, tenant=(ev or {}).get("tenant"),
+            detail={"direction": "grow",
+                    "devices_before": int(old_mesh.devices.size),
                     "devices_after": int(new_mesh.devices.size),
                     "mesh_shape": list(new_mesh.devices.shape)})
         return state, True
 
 
-__all__ = ["state_shardings", "remesh", "shrink_mesh", "ElasticController"]
+class ServeElasticController:
+    """Serve-side elasticity: the same watcher signal, a far cheaper
+    response (docs/elasticity.md).  Instead of remeshing — pointless for
+    decode traffic, which is slot-bound, not device-bound — a trigger
+    shrinks the engine's per-tenant slot budget
+    (:meth:`~repro.serve.engine.Engine.set_slot_budget`, enforced by
+    preemption with exact temp-0 resume) and a ``recover`` restores the
+    pre-shrink budget.  Attach to a running engine via
+    ``Engine(..., obs=timeline)`` + ``engine.on_tick = ctl.tick`` (what
+    ``launch/serve.py --elastic`` wires), or hand a
+    :class:`~repro.core.obs.WatcherGroup`'s serve slice to
+    :meth:`respond` when a pod-level hierarchy owns the observing."""
+
+    def __init__(self, cfg, timeline: CounterTimeline, engine):
+        self.cfg = cfg
+        self.timeline = timeline
+        self.engine = engine
+        self.watcher = ThresholdWatcher.from_config(cfg)
+        self.shrinks = 0
+        self.grows = 0
+        self._saved_cap: int | None = None  # raw pre-shrink budget override
+
+    def tick(self, engine=None) -> None:
+        """Engine ``on_tick`` hook: observe any new timeline windows,
+        record the fired events, apply the budget response."""
+        events = self.watcher.observe(self.timeline)
+        for ev in events:
+            self.timeline.record_event(ev["kind"], ev["step"],
+                                       tenant=ev["tenant"], t=ev["t"],
+                                       detail=ev["detail"])
+        self.respond(events)
+
+    def respond(self, events) -> None:
+        """Apply already-recorded watcher events (the
+        :class:`~repro.core.obs.WatcherGroup` entry point)."""
+        for ev in events:
+            if ev["kind"] == "trigger":
+                self._shrink_budget(ev)
+            elif ev["kind"] == "recover":
+                self._grow_budget(ev)
+
+    def _skip(self, ev, reason: str) -> None:
+        self.timeline.record_event("budget-skipped", ev["step"],
+                                   tenant=ev.get("tenant"),
+                                   detail={"reason": reason})
+
+    def _shrink_budget(self, ev) -> None:
+        if self._saved_cap is not None:
+            self._skip(ev, "slot budget already shrunk; awaiting recover")
+            return
+        if self.cfg.max_remesh and self.shrinks >= self.cfg.max_remesh:
+            self._skip(ev, "max_remesh budget exhausted")
+            return
+        before = self.engine.slot_budget()
+        after = max(before // self.cfg.shrink_factor, 1)
+        if after >= before:
+            self._skip(ev, f"slot budget already at the floor ({before})")
+            return
+        self._saved_cap = self.engine.set_slot_budget(after)
+        self.shrinks += 1
+        self.timeline.record_event(
+            "budget", ev["step"], tenant=ev.get("tenant"),
+            detail={"direction": "shrink",
+                    "slots_before": int(before), "slots_after": int(after)})
+
+    def _grow_budget(self, ev) -> None:
+        if self._saved_cap is None:
+            self._skip(ev, "nothing to grow back to: no budget shrink on "
+                           "record for this controller")
+            return
+        before = self.engine.slot_budget()
+        self.engine.set_slot_budget(self._saved_cap)
+        self._saved_cap = None
+        self.grows += 1
+        self.timeline.record_event(
+            "budget", ev["step"], tenant=ev.get("tenant"),
+            detail={"direction": "grow", "slots_before": int(before),
+                    "slots_after": int(self.engine.slot_budget())})
+
+
+__all__ = ["state_shardings", "remesh", "shrink_mesh", "ElasticController",
+           "ServeElasticController"]

@@ -203,6 +203,11 @@ class Engine:
         self.obs = obs
         self.obs_every = max(int(obs_every), 1)
         self._obs_tick_no = 0
+        # control-plane hook: called as ``on_tick(engine)`` right after
+        # each timeline snapshot lands, so a ServeElasticController
+        # (runtime/elastic.py) can observe the fresh window and move the
+        # slot budget while the engine is mid-run
+        self.on_tick = None
         # cache sharding edges are issued inside the traced prefill, so
         # policy enforcement/telemetry happen once per compiled shape (like
         # every other dataplane edge), not once per host batching round
@@ -386,6 +391,8 @@ class Engine:
             gauges["free_blocks"] = self._alloc.free_blocks
         self.obs.snapshot_block(self._obs_tick_no, ctrs, tenants,
                                 gauges=gauges)
+        if self.on_tick is not None:
+            self.on_tick(self)
 
     # ------------------------------------------------------------------
     def _pad_prompts(self, reqs: list[Request]) -> np.ndarray:
@@ -512,12 +519,22 @@ class Engine:
     # ------------------------------------------------------------------
     # preemption (pool pressure / slot budgets) and resume
     # ------------------------------------------------------------------
-    def set_slot_budget(self, n: int) -> None:
+    def set_slot_budget(self, n: int) -> int:
         """Tighten (or with 0, relax back to ServeConfig) the per-tenant
         cap on concurrently held slots — the serve-side elastic control
         knob.  Takes effect on the next engine tick: over-budget tenants
-        have their most recent slots preempted."""
-        self._budget_cap = max(int(n), 0)
+        have their most recent slots preempted.  Returns the previous raw
+        override (0 = none) so an elastic controller can restore exactly
+        the pre-shrink setting on grow-back."""
+        prev, self._budget_cap = self._budget_cap, max(int(n), 0)
+        return prev
+
+    def slot_budget(self) -> int:
+        """The *effective* per-tenant slot cap right now: the runtime
+        override if set, else ``ServeConfig.max_slots_per_tenant``, else
+        ``max_batch`` (no per-tenant cap ⇒ the batch is the ceiling)."""
+        return int(self._budget_cap or self.scfg.max_slots_per_tenant
+                   or self.scfg.max_batch)
 
     def _release_slot(self, slot: int, vecs) -> None:
         """Return a slot's resources (pool blocks, slot vectors)."""

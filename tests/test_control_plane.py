@@ -1,0 +1,553 @@
+"""Pod-scale control plane conformance (docs/elasticity.md,
+docs/observability.md): the ThresholdWatcher release arm's hysteresis
+edge cases, cross-host ``merge_timelines`` round-trips and misalignment
+refusal, JSONL sink close/rotation semantics, the WatcherGroup
+hierarchy, the ElasticController shrink→grow mesh cycle, serve-side slot
+budget elasticity with exact temp-0 resume, and live connection-table
+migration back onto a *grown* mesh with retries in flight."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_model_config
+from repro.configs.base import ElasticConfig, ServeConfig
+from repro.core import verbs
+from repro.core.obs import (
+    CounterTimeline,
+    ThresholdWatcher,
+    WatcherGroup,
+    merge_timelines,
+)
+from repro.models import build_model
+from repro.runtime import ElasticController, ServeElasticController
+from repro.runtime.fault import WireFault
+from repro.serve import Engine, Request
+from repro.train import init_state
+from test_transport import CCFG, _conn_parts, _conn_payload, _dp, \
+    _run_conn, _stack
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _ramp(pcts, tenant="noisy", source="ramp", ops_per_window=4.0):
+    """Timeline whose windows show the given denied_pct series."""
+    t = CounterTimeline(source=source)
+    ops = den = 0.0
+    t.snapshot(0, {tenant: {"ops": 0, "denied": 0}}, t=0.0)
+    for i, pct in enumerate(pcts, start=1):
+        ops += ops_per_window
+        den += ops_per_window * pct / 100.0
+        t.snapshot(i, {tenant: {"ops": ops, "denied": den}}, t=float(i))
+    return t
+
+
+def _rw(trigger=50.0, release=10.0, **kw):
+    """Watcher with both arms configured; tight defaults so a short ramp
+    exercises the whole trip→cool→recover cycle."""
+    kw.setdefault("sustain", 2)
+    kw.setdefault("cooldown", 1)
+    kw.setdefault("release_sustain", 2)
+    kw.setdefault("release_cooldown", 0)
+    return ThresholdWatcher({"denied_pct": trigger},
+                            release={"denied_pct": release}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# release (grow-back) arm hysteresis
+# ---------------------------------------------------------------------------
+
+def test_release_levels_validated():
+    # a release level at/over its trigger removes the hysteresis band
+    with pytest.raises(ValueError, match="below its trigger"):
+        ThresholdWatcher({"denied_pct": 50.0}, release={"denied_pct": 50.0})
+    with pytest.raises(ValueError, match="unknown release rate fields"):
+        ThresholdWatcher({"denied_pct": 50.0}, release={"bogus": 1.0})
+    with pytest.raises(ValueError, match="release_sustain"):
+        ThresholdWatcher({"denied_pct": 50.0}, release={"denied_pct": 10.0},
+                         release_sustain=0)
+
+
+def test_recover_after_sustained_quiet():
+    # trigger at w2, cooldown eats w3, quiet w4+w5 sustain -> recover at 5
+    w = _rw()
+    evs = w.observe(_ramp([80, 80, 0, 0, 0, 0]))
+    assert [(e["kind"], e["step"]) for e in evs] == [("trigger", 2),
+                                                     ("recover", 5)]
+    assert evs[1]["detail"]["under"] == {"denied_pct": 0.0}
+    assert evs[1]["detail"]["sustained"] == 2
+    # quiet without a preceding trigger never arms the release side
+    w2 = _rw()
+    assert w2.observe(_ramp([0] * 8)) == []
+    assert w2.releases == []
+
+
+def test_one_trigger_one_recover_per_excursion():
+    # two full excursions; extended quiet after a recover adds nothing
+    w = _rw()
+    evs = w.observe(_ramp([80, 80, 0, 0, 0, 80, 80, 0, 0, 0, 0]))
+    assert [(e["kind"], e["step"]) for e in evs] == [
+        ("trigger", 2), ("recover", 5), ("trigger", 7), ("recover", 10)]
+    assert len(w.triggers) == 2 and len(w.releases) == 2
+
+
+def test_no_recover_inside_trigger_cooldown():
+    # quiet windows inside the trigger cooldown never count toward the
+    # release streak: recover lands at trip + cooldown + release_sustain
+    w = _rw(cooldown=4)
+    evs = w.observe(_ramp([80, 80] + [0] * 6))
+    assert [(e["kind"], e["step"]) for e in evs] == [("trigger", 2),
+                                                     ("recover", 8)]
+
+
+def test_on_threshold_oscillation_damped():
+    # a rate parked ON the trigger level trips (>=), but parked ON the
+    # release level it never recovers (strict <) — the gap between the
+    # two levels is the only place hysteresis lets state flip
+    w = ThresholdWatcher({"denied_pct": 50.0}, sustain=2, cooldown=0,
+                         release={"denied_pct": 10.0}, release_sustain=1)
+    evs = w.observe(_ramp([50, 50, 10, 10, 30, 30, 9]))
+    assert [(e["kind"], e["step"]) for e in evs] == [("trigger", 2),
+                                                     ("recover", 7)]
+    assert len(w.triggers) == 1    # in-band windows (30) rebuilt no streak
+
+
+def test_release_cooldown_gates_next_recover():
+    # sustain=1/cooldown=0 isolates the release cooldown: the first
+    # recover at w2 starts a 2-window release cooldown that the second
+    # excursion's quiet tail must sit through before recovering at w6
+    w = _rw(sustain=1, cooldown=0, release_sustain=1, release_cooldown=2)
+    evs = w.observe(_ramp([80, 0, 80, 0, 0, 0]))
+    assert [(e["kind"], e["step"]) for e in evs] == [
+        ("trigger", 1), ("recover", 2), ("trigger", 3), ("recover", 6)]
+
+
+def test_observe_consumes_each_window_exactly_once(monkeypatch):
+    # observe() is incremental: rate math runs once per NEW window, never
+    # over the whole history again (the O(new windows) contract)
+    calls = []
+    orig = CounterTimeline._window
+
+    def counting(self, prev, cur, tenants=None):
+        calls.append(cur["step"])
+        return orig(self, prev, cur, tenants=tenants)
+
+    monkeypatch.setattr(CounterTimeline, "_window", counting)
+    t = _ramp([80, 80, 0, 0, 0])
+    w = _rw()
+    w.observe(t)
+    assert calls == [1, 2, 3, 4, 5]
+    w.observe(t)
+    assert calls == [1, 2, 3, 4, 5]       # nothing new -> no rate math
+    t.snapshot(6, {"noisy": {"ops": 24.0, "denied": 6.4}}, t=6.0)
+    t.snapshot(7, {"noisy": {"ops": 28.0, "denied": 6.4}}, t=7.0)
+    w.observe(t)
+    assert calls == [1, 2, 3, 4, 5, 6, 7]
+
+
+def test_release_gauges_ride_along_only_when_configured():
+    plain = ThresholdWatcher({"denied_pct": 50.0}, sustain=2, cooldown=1)
+    assert set(plain.gauges()) == {"watch_streak", "watch_cooldown"}
+    w = _rw(release_sustain=3)
+    w.observe(_ramp([80, 80, 0, 0]))   # trip w2, cool w3, rstreak=1 at w4
+    g = w.gauges()
+    assert set(g) == {"watch_streak", "watch_cooldown",
+                      "watch_release_streak", "watch_release_cooldown"}
+    assert g["watch_release_streak"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# cross-host timeline merge
+# ---------------------------------------------------------------------------
+
+def test_merge_round_trip_artifact_and_rate_sums(tmp_path):
+    a = CounterTimeline(source="host0")
+    b = CounterTimeline(source="host1")
+    for i in range(4):
+        a.snapshot(i, {"x": {"ops": 2.0 * i, "bytes": 10.0 * i,
+                             "denied": 1.0 * i, "cq_depth": i}},
+                   gauges={"queue": 1.0}, t=float(i))
+        b.snapshot(i, {"x": {"ops": 6.0 * i, "cq_depth": 5.0},
+                       "y": {"ops": 1.0 * i}},
+                   gauges={"queue": 2.0}, t=float(i) + 0.25)
+    a.record_event("trigger", 2, tenant="x", t=2.0)
+    pod = merge_timelines([a, b], source="pod")
+    assert pod.source == "pod" and pod.tenants == ("x", "y")
+    ra, rb, rp = a.rates(), b.rates(), pod.rates()
+    for k in range(3):
+        # additive rates sum across processes
+        assert rp["x"]["ops_s"][k] == pytest.approx(
+            ra["x"]["ops_s"][k] + rb["x"]["ops_s"][k])
+        assert rp["x"]["bytes_s"][k] == pytest.approx(ra["x"]["bytes_s"][k])
+        assert rp["y"]["ops_s"][k] == pytest.approx(rb["y"]["ops_s"][k])
+    # shares pool over the pod's total ops, not a sum of per-host pcts
+    assert rp["x"]["denied_pct"][0] == pytest.approx(100.0 * 1.0 / 8.0)
+    # cq_depth is a high-water level: max across parts, never a sum
+    assert rp["x"]["cq_depth"] == [5.0, 5.0, 5.0]
+    # the pod window closes when the LAST process reports; gauges pool
+    assert [s["t"] for s in pod.samples] == [i + 0.25 for i in range(4)]
+    assert pod.gauge_series()["queue"] == [3.0] * 4
+    # the merged timeline is an ordinary v2 artifact: save -> validate
+    doc = CounterTimeline.load(pod.save(str(tmp_path / "pod.json")))
+    assert doc["schema"] == "cord-timeline/v2"
+    assert doc["events"][0]["detail"]["origin"] == "host0"
+
+
+def test_merge_refuses_misaligned_parts():
+    with pytest.raises(ValueError, match="at least one"):
+        merge_timelines([])
+    # a lagging host raises rather than silently truncating the pod tail
+    with pytest.raises(ValueError, match="refusing to truncate"):
+        merge_timelines([_ramp([80, 80]), _ramp([80])])
+    # equal sample counts but skewed step stamps are just as misaligned
+    c = CounterTimeline(source="skewed")
+    c.snapshot(0, {"noisy": {"ops": 0}}, t=0.0)
+    c.snapshot(1, {"noisy": {"ops": 4.0}}, t=1.0)
+    c.snapshot(3, {"noisy": {"ops": 8.0}}, t=3.0)
+    with pytest.raises(ValueError, match="step-misaligned"):
+        merge_timelines([_ramp([80, 80]), c])
+    thin = CounterTimeline(source="thin", counter_names=("ops", "bytes"))
+    with pytest.raises(ValueError, match="counter layouts"):
+        merge_timelines([_ramp([80]), thin])
+
+
+def test_merge_interleaves_events_with_origin():
+    a = _ramp([80], source="host0")
+    b = _ramp([0], source="host1")
+    a.record_event("trigger", 1, tenant="noisy", t=1.0)
+    b.record_event("remesh", 1, tenant="noisy", t=0.5,
+                   detail={"direction": "shrink"})
+    a.record_event("recover", 1, tenant="noisy", t=1.5)
+    pod = merge_timelines([a, b])
+    assert [(e["kind"], e["detail"]["origin"]) for e in pod.events] == [
+        ("remesh", "host1"), ("trigger", "host0"), ("recover", "host0")]
+    assert pod.events[0]["detail"]["direction"] == "shrink"
+    # merge copies event details; the source timelines stay untouched
+    assert "origin" not in a.events[0]["detail"]
+
+
+# ---------------------------------------------------------------------------
+# JSONL sink: late events + rotation
+# ---------------------------------------------------------------------------
+
+def test_sink_event_after_close_joins_same_stream(tmp_path):
+    p = str(tmp_path / "run.jsonl")
+    t = CounterTimeline(source="late", sink=p)
+    t.snapshot(0, {"x": {"ops": 0}}, t=0.0)
+    t.snapshot(1, {"x": {"ops": 4.0}}, t=1.0)
+    t.close()
+    # an engine-shutdown event lands AFTER the final flush: it must
+    # reopen the same stream, not start a one-event "run" of its own
+    t.record_event("remesh", 1, tenant="x", t=1.5,
+                   detail={"direction": "grow"})
+    t.close()
+    back = CounterTimeline.read_jsonl(p)
+    assert [s["step"] for s in back.samples] == [0, 1]
+    assert [e["kind"] for e in back.events] == ["remesh"]
+    with open(p) as f:
+        headers = [ln for ln in f if "schema" in json.loads(ln)]
+    assert len(headers) == 1
+
+
+def test_sink_rotation_stitches_and_segments_standalone(tmp_path):
+    with pytest.raises(ValueError, match="needs a sink"):
+        CounterTimeline(rotate_bytes=64)
+    p = str(tmp_path / "rot.jsonl")
+    t = CounterTimeline(source="rot", sink=p, rotate_bytes=900)
+    for i in range(12):
+        t.snapshot(i, {"x": {"ops": 4.0 * i}}, t=float(i))
+    t.record_event("late", 11, tenant="x", t=11.5)
+    t.close()
+    assert t.rotations >= 2 and os.path.exists(p + ".1")
+    # the whole run stitches back together, events included
+    whole = CounterTimeline.read_rotated(p)
+    assert [s["step"] for s in whole.samples] == list(range(12))
+    assert [e["kind"] for e in whole.events] == ["late"]
+    # every sealed segment carries its own header and reads standalone
+    seg = CounterTimeline.read_jsonl(p + ".1")
+    assert seg.source == "rot" and 0 < len(seg.samples) < 12
+    # the live file alone is just the newest segment, not the run
+    live = CounterTimeline.read_jsonl(p)
+    assert len(live.samples) < 12
+    with pytest.raises(FileNotFoundError):
+        CounterTimeline.read_rotated(str(tmp_path / "missing.jsonl"))
+
+
+# ---------------------------------------------------------------------------
+# watcher hierarchy
+# ---------------------------------------------------------------------------
+
+def test_watcher_group_tags_records_and_namespaces():
+    with pytest.raises(ValueError, match="at least one"):
+        WatcherGroup({})
+    with pytest.raises(ValueError, match="not a"):
+        WatcherGroup({"x": object()})
+    t = CounterTimeline(source="pod")
+    t.snapshot(0, {"t0": {"ops": 0, "denied": 0},
+                   "s0": {"ops": 0, "throttled": 0}}, t=0.0)
+    for i in range(1, 3):
+        t.snapshot(i, {"t0": {"ops": 4.0 * i, "denied": 4.0 * i},
+                       "s0": {"ops": 4.0 * i, "throttled": 4.0 * i}},
+                   t=float(i))
+    group = WatcherGroup({
+        "train": ThresholdWatcher({"denied_pct": 50.0}, sustain=2,
+                                  cooldown=4, tenants=("t0",)),
+        "serve": ThresholdWatcher({"throttled_pct": 50.0}, sustain=2,
+                                  cooldown=4, tenants=("s0",)),
+    })
+    evs = group.observe(t)
+    assert [e["tenant"] for e in evs["train"]] == ["t0"]
+    assert [e["tenant"] for e in evs["serve"]] == ["s0"]
+    assert all(e["detail"]["watcher"] == "serve" for e in evs["serve"])
+    # both members' events land in the shared artifact, tagged by name
+    assert sorted(e["detail"]["watcher"] for e in t.events) == \
+        ["serve", "train"]
+    g = group.gauges()
+    assert "train_watch_streak" in g and "serve_watch_cooldown" in g
+    # record=False observes without touching the artifact
+    t2 = _ramp([80, 80])
+    g2 = WatcherGroup({"train": ThresholdWatcher({"denied_pct": 50.0},
+                                                 sustain=2, cooldown=4)})
+    evs2 = g2.observe(t2, record=False)
+    assert len(evs2["train"]) == 1 and t2.events == []
+
+
+# ---------------------------------------------------------------------------
+# train-side controller: shrink -> grow-back mesh cycle
+# ---------------------------------------------------------------------------
+
+def test_controller_shrink_grow_cycle_restores_mesh(mesh42):
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    state = init_state(build_model(cfg), RNG)
+    before = [np.asarray(x) for x in jax.tree.leaves(state.params)]
+    timeline = CounterTimeline(source="cycle")
+    ecfg = ElasticConfig(enabled=True, thresholds=("denied_pct=50",),
+                         release_thresholds=("denied_pct=5",),
+                         sustain=2, cooldown=1, release_sustain=2,
+                         release_cooldown=0, shrink_factor=2,
+                         min_devices=2, max_remesh=1)
+    ctl = ElasticController(ecfg, timeline, mesh42)
+    ops = den = 0.0
+    timeline.snapshot(0, {"default": {"ops": 0, "denied": 0}}, t=0.0)
+    for i, pct in enumerate([80, 80, 0, 0, 0], start=1):
+        ops, den = ops + 4.0, den + 4.0 * pct / 100.0
+        timeline.snapshot(i, {"default": {"ops": ops, "denied": den}},
+                          t=float(i))
+        state, moved = ctl.drive(state, i)
+        if i == 2:
+            assert moved and ctl.mesh.devices.shape == (2, 2)
+    assert moved and ctl.mesh.devices.shape == (4, 2)      # grew back
+    assert ctl.remeshes == 1 and ctl.grows == 1
+    kinds = [(e["kind"], e["detail"].get("direction"))
+             for e in timeline.events]
+    assert kinds == [("trigger", None), ("remesh", "shrink"),
+                     ("recover", None), ("remesh", "grow")]
+    assert timeline.events[1]["detail"]["devices_after"] == 4
+    assert timeline.events[3]["detail"]["devices_after"] == 8
+    # both migrations preserved every parameter bit
+    after = [np.asarray(x) for x in jax.tree.leaves(state.params)]
+    for x, y in zip(before, after):
+        np.testing.assert_array_equal(x, y)
+    # grow-backs are free; the NEXT excursion hits the shrink budget
+    for i, pct in enumerate([80, 80], start=6):
+        ops, den = ops + 4.0, den + 4.0 * pct / 100.0
+        timeline.snapshot(i, {"default": {"ops": ops, "denied": den}},
+                          t=float(i))
+    state, moved = ctl.drive(state, 7)
+    assert not moved and ctl.remeshes == 1
+    assert timeline.events[-1]["kind"] == "remesh-skipped"
+    assert "max_remesh" in timeline.events[-1]["detail"]["reason"]
+
+
+def test_grow_without_shrink_records_skip(mesh42):
+    timeline = CounterTimeline(source="noshrink")
+    ctl = ElasticController(ElasticConfig(enabled=True), timeline, mesh42)
+    state = object()                  # never migrated on the skip path
+    out, moved = ctl.grow_mesh(state, 5)
+    assert out is state and not moved and ctl.grows == 0
+    ev = timeline.events[-1]
+    assert ev["kind"] == "remesh-skipped"
+    assert "nothing to grow back to" in ev["detail"]["reason"]
+
+
+# ---------------------------------------------------------------------------
+# serve-side controller: slot budget down -> up
+# ---------------------------------------------------------------------------
+
+class _SlotKnob:
+    """The engine's slot-budget surface (slot_budget / set_slot_budget)
+    without the engine — isolates the controller's bookkeeping."""
+
+    def __init__(self, default=8):
+        self._default, self._cap = default, 0
+
+    def slot_budget(self):
+        return self._cap or self._default
+
+    def set_slot_budget(self, n):
+        prev, self._cap = self._cap, max(int(n), 0)
+        return prev
+
+
+def _ev(kind, step=1, tenant="burst"):
+    return {"kind": kind, "step": step, "tenant": tenant, "detail": {}}
+
+
+def test_serve_controller_budget_cycle_and_skip_reasons():
+    tl_ = CounterTimeline(source="serve")
+    knob = _SlotKnob(default=8)
+    cfg = ElasticConfig(enabled=True, shrink_factor=2, max_remesh=1,
+                        thresholds=("throttled_pct=50",))
+    ctl = ServeElasticController(cfg, tl_, knob)
+    ctl.respond([_ev("trigger")])
+    assert knob.slot_budget() == 4 and ctl.shrinks == 1
+    ctl.respond([_ev("trigger", step=2)])        # double-shrink refused
+    assert knob.slot_budget() == 4
+    ctl.respond([_ev("recover", step=3)])
+    assert knob.slot_budget() == 8 and ctl.grows == 1
+    ctl.respond([_ev("recover", step=4)])        # nothing left to grow
+    ctl.respond([_ev("trigger", step=5)])        # shrink budget exhausted
+    assert knob.slot_budget() == 8
+    kinds = [(e["kind"], e["detail"].get("direction")
+              or e["detail"].get("reason")) for e in tl_.events]
+    assert kinds[0] == ("budget", "shrink")
+    assert kinds[1][0] == "budget-skipped" and "awaiting recover" in kinds[1][1]
+    assert kinds[2] == ("budget", "grow")
+    assert "nothing to grow back to" in kinds[3][1]
+    assert "max_remesh" in kinds[4][1]
+    assert tl_.events[0]["detail"]["slots_after"] == 4
+    assert tl_.events[2]["detail"]["slots_after"] == 8
+    # a one-slot budget has no room below it: the floor is explanatory
+    floor = ServeElasticController(cfg, CounterTimeline(source="floor"),
+                                   _SlotKnob(default=1))
+    floor.respond([_ev("trigger")])
+    assert floor.shrinks == 0
+    assert "floor" in floor.timeline.events[-1]["detail"]["reason"]
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_model_config("gemma3-1b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    return cfg, model, params
+
+
+def _requests(lengths, max_new=16):
+    return [Request(rid=i,
+                    prompt=np.asarray((np.arange(n) + 3 * i) % 100, np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lengths)]
+
+
+def test_engine_slot_budget_returns_previous(smoke_model):
+    cfg, model, params = smoke_model
+    eng = Engine(model, params, cfg,
+                 ServeConfig(max_batch=3, max_new_tokens=4, kv_cache_len=64),
+                 eos_id=-1)
+    assert eng.slot_budget() == 3            # falls back to max_batch
+    assert eng.set_slot_budget(2) == 0       # previous raw override
+    assert eng.slot_budget() == 2
+    assert eng.set_slot_budget(0) == 2       # 0 clears back to the default
+    assert eng.slot_budget() == 3
+
+
+def test_serve_budget_shrink_grow_exact_resume(smoke_model):
+    """The serve-side cycle on a live engine: a mid-run budget shrink
+    preempts running slots, the grow-back restores the budget, and every
+    request still emits exactly the tokens of an undisturbed run."""
+    cfg, model, params = smoke_model
+    sc = ServeConfig(max_batch=3, max_new_tokens=10, kv_cache_len=64)
+    base_eng = Engine(model, params, cfg, sc, eos_id=-1)
+    base = {r.rid: r.out_tokens
+            for r in base_eng.run(_requests([8, 8, 8], max_new=10))}
+    assert all(len(o) == 10 for o in base.values())
+
+    tl_ = CounterTimeline(source="elastic-serve")
+    eng = Engine(model, params, cfg, sc, eos_id=-1, obs=tl_)
+    ctl = ServeElasticController(
+        ElasticConfig(enabled=True, shrink_factor=2,
+                      thresholds=("throttled_pct=50",),
+                      release_thresholds=("throttled_pct=10",)), tl_, eng)
+    ticks = {"n": 0}
+
+    def hook(_eng):
+        # deterministic stand-in for the watcher: shrink while all three
+        # slots decode, grow back while the preempted ones still wait
+        ticks["n"] += 1
+        if ticks["n"] == 3:
+            ctl.respond([_ev("trigger", step=ticks["n"], tenant="default")])
+        elif ticks["n"] == 14:
+            ctl.respond([_ev("recover", step=ticks["n"], tenant="default")])
+
+    eng.on_tick = hook
+    done = {r.rid: r.out_tokens
+            for r in eng.run(_requests([8, 8, 8], max_new=10))}
+    assert done == base                      # exact temp-0 resume
+    assert ctl.shrinks == 1 and ctl.grows == 1
+    assert eng.slot_budget() == 3            # budget closed the cycle
+    last = tl_.samples[-1]["tenants"]["default"]
+    assert last["preemptions"] >= 1 and last["restores"] >= 1
+    dirs = [e["detail"]["direction"] for e in tl_.events
+            if e["kind"] == "budget"]
+    assert dirs == ["shrink", "grow"]
+
+
+# ---------------------------------------------------------------------------
+# transport: connection-table migration back onto a grown mesh
+# ---------------------------------------------------------------------------
+
+def test_conn_restore_onto_grown_mesh_bit_identical(mesh2):
+    """Shrink→grow for in-flight connections: a lossy transfer migrates
+    A→B (the shrink) and then B→A (the grow-back onto the original
+    mesh), with retry state live across both moves — the three-leg
+    delivery matches an uninterrupted lossless run and the fault
+    counters only ever grow."""
+    from repro.core import compat
+    Q, n, k1, k2 = 3, 6, 2, 4
+    mesh_b = compat.make_mesh((2,), ("rank",), devices=jax.devices()[2:4])
+    fault = WireFault(drop_rate=0.2, corrupt_rate=0.1, seed=7)
+    payload = _conn_payload(Q, n, CCFG.msg_bytes, seed=7)
+    msgs = _stack(payload)
+
+    dp_a, dp_b = _dp(mesh2), _dp(mesh_b)
+    pa = _conn_parts(mesh2, dp_a, CCFG, Q, fault=fault, credits=Q * n * 2)
+    pb = _conn_parts(mesh_b, dp_b, CCFG, Q, fault=fault)
+
+    # lossless baseline, uninterrupted
+    base, _, _ = _run_conn(mesh2, dp_a, CCFG, msgs)
+
+    # leg 1 on mesh A, then quiesce + snapshot (the shrink-side move)
+    conn, _ = pa["init"](dp_a.runtime_init())
+    out1, conn, _ = pa["xfer"](msgs[:, :, :k1], conn, dp_a.runtime_init())
+    conn, _ = pa["quiesce"](conn, dp_a.runtime_init())
+    snap1 = verbs.conn_snapshot(conn)
+    assert int(snap1["cq_head"] - snap1["cq_tail"]) == 0, "CQ not quiesced"
+    np.testing.assert_array_equal(snap1["sq_head"], snap1["cq_sent"])
+    retrans_1 = np.array(snap1["retransmits"]).copy()
+
+    # leg 2 on the smaller mesh B, still under loss
+    conn_b = verbs.conn_restore(snap1, mesh_b)
+    out2, conn_b, _ = pb["xfer"](msgs[:, :, k1:k2], conn_b,
+                                 dp_b.runtime_init())
+    conn_b, _ = pb["quiesce"](conn_b, dp_b.runtime_init())
+    snap2 = verbs.conn_snapshot(conn_b)
+    np.testing.assert_array_equal(snap2["sq_head"], snap2["cq_sent"])
+    retrans_2 = np.array(snap2["retransmits"]).copy()
+
+    # grow-back: restore onto the ORIGINAL mesh A and finish there
+    conn_c = verbs.conn_restore(snap2, mesh2)
+    out3, conn_c, _ = jax.block_until_ready(
+        pa["xfer"](msgs[:, :, k2:], conn_c, dp_a.runtime_init()))
+
+    moved = np.concatenate([np.asarray(out1)[1], np.asarray(out2)[1],
+                            np.asarray(out3)[1]], axis=1)
+    np.testing.assert_array_equal(moved, np.asarray(base))
+    # counters rode along both migrations and only ever grew
+    snap3 = verbs.conn_snapshot(conn_c)
+    assert (retrans_2 >= retrans_1).all()
+    assert (np.array(snap3["retransmits"]) >= retrans_2).all()
+    assert (np.array(snap3["srq_grants"]) >= n).all()
